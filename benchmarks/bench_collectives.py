@@ -1,0 +1,65 @@
+"""Paper Figs. 18/19: collective scaling (all-reduce / all-gather) by
+buffer size and by axis locality.
+
+The paper's conclusion — Superchip locality matters more than memory type —
+maps to axis choice: the same collective over the 'model' (ICI) vs 'pod'
+(DCN) axis.  Measured: psum/all_gather over an 8-device host mesh in a
+subprocess.  Analytic: algorithmic-bandwidth scaling per axis."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+from repro.core import collective_bound
+from repro.core.hardware import Link
+
+CODE = """
+import jax, jax.numpy as jnp, time
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+mesh = jax.make_mesh((2, 4), ("pod", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for op in ("psum", "all_gather"):
+    for axis in ("model", "pod"):
+        for log2 in (16, 22):
+            n = 2 ** log2 // 4
+            x = jnp.ones((n,), jnp.float32)
+            if op == "psum":
+                body = lambda v: jax.lax.psum(v, axis)
+            else:
+                body = lambda v: jax.lax.all_gather(v, axis)
+            f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(None),
+                                  out_specs=P(None) if op == "psum"
+                                  else P(None), check_rep=False))
+            out = f(x); jax.block_until_ready(out)
+            reps = 10
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = f(x)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / reps
+            print(f"measured_{op}[{axis},{n*4}B],{dt*1e6:.2f},"
+                  f"{n*4/dt/1e9:.2f}GB/s")
+"""
+
+
+def main() -> None:
+    print(run_with_devices(CODE).strip())
+    # analytic: per-chip algorithmic bandwidth, ICI vs DCN axes
+    for kind in ("all_reduce", "all_gather"):
+        for axis, link, size in (
+            ("model", Link.ICI, 16),
+            ("data", Link.ICI, 16),
+            ("pod", Link.DCN, 2),
+        ):
+            bw = collective_bound(size, link, kind)
+            for nbytes in (2**20, 2**26, 2**32):
+                t = nbytes / bw
+                emit(
+                    f"analytic_{kind}[{axis},{nbytes}B]",
+                    t * 1e6,
+                    f"{nbytes/t/1e9:.1f}GB/s algo-bw",
+                )
+
+
+if __name__ == "__main__":
+    main()

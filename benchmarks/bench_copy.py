@@ -1,0 +1,54 @@
+"""Paper Figs. 5/9/10: copy throughput across (source, destination)
+placement pairs — the ``cudaMemcpy`` matrix as ``device_put`` between
+memory kinds, plus the analytic TPU matrix with its asymmetry notes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import SingleDeviceSharding
+
+from benchmarks.common import emit
+from repro.core import MemoryTier, copy_bound
+from repro.core.membench import measure
+
+SIZES = [2**22, 2**26]  # 4 MiB, 64 MiB
+
+
+def main() -> None:
+    dev = jax.devices()[0]
+    kinds = ["device"]
+    if "pinned_host" in {m.kind for m in dev.addressable_memories()}:
+        kinds.append("pinned_host")
+
+    # plain device_put transfers (outside jit: the CPU backend has no
+    # in-jit host-placement runtime; device_put is exactly cudaMemcpy here)
+    for src in kinds:
+        for dst in kinds:
+            dst_sharding = SingleDeviceSharding(dev, memory_kind=dst)
+            for nbytes in SIZES:
+                x = jax.device_put(
+                    jnp.ones((nbytes // 4,), jnp.float32),
+                    SingleDeviceSharding(dev, memory_kind=src),
+                )
+                m = measure(
+                    lambda x=x, s_=dst_sharding: jax.device_put(x, s_),
+                    name=f"copy[{src}->{dst},{nbytes}]",
+                    nbytes=nbytes,
+                )
+                emit(m.name, m.us_per_call, f"{m.gbps:.2f}GB/s")
+
+    # analytic TPU copy matrix (Fig. 5/9 bound rows)
+    tiers = [t for t in MemoryTier if t != MemoryTier.VMEM]
+    for src in tiers:
+        for dst in tiers:
+            b = copy_bound(src, dst)
+            emit(
+                f"analytic_copy[{src}->{dst}]",
+                b.latency * 1e6,
+                f"{b.bandwidth/1e9:.1f}GB/s via {b.limiting_link}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 3 + Table II: theoretical bound matrices and the memory-API
+capability table, from the datapath model (pure analysis, no devices)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import (
+    DEFAULT_SYSTEM,
+    MemoryTier,
+    bound_matrix,
+    copy_bound,
+    read_bound,
+)
+
+TIERS = [t for t in MemoryTier if t != MemoryTier.VMEM]
+
+
+def main() -> None:
+    # Fig. 3 (left): read/write bounds per tier
+    for t in TIERS:
+        b = read_bound(t)
+        emit(
+            f"bound_read[{t}]",
+            b.latency * 1e6,
+            f"{b.bandwidth/1e9:.1f}GB/s via {b.limiting_link}",
+        )
+    # Fig. 3 (right): copy bound matrix (the twice-traversed-halves rule)
+    for src in TIERS:
+        for dst in TIERS:
+            b = copy_bound(src, dst)
+            emit(
+                f"bound_copy[{src}->{dst}]",
+                b.latency * 1e6,
+                f"{b.bandwidth/1e9:.1f}GB/s via {b.limiting_link}",
+            )
+    # Table II analogue: memory kinds the runtime actually exposes
+    import jax
+
+    kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
+    emit("memory_kinds", 0.0, "|".join(kinds))
+    # headline numbers used throughout
+    c = DEFAULT_SYSTEM.chip
+    emit("chip_peak_bf16", 0.0, f"{c.peak_bf16_flops/1e12:.0f}TFLOP/s")
+    emit("chip_hbm_bw", 0.0, f"{c.hbm_bandwidth/1e9:.0f}GB/s")
+    emit("ici_link_bw", 0.0, f"{c.ici_link_bandwidth/1e9:.0f}GB/s")
+    emit("dcn_bw", 0.0, f"{c.dcn_bandwidth/1e9:.0f}GB/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig. 14: internode bandwidth scaling with message size and the
+number of injection streams.
+
+Alps: one NIC per GH200, 4 per node — full node bandwidth needs 4 MPI
+processes.  TPU analogue: per-chip DCN injection; a pod's inter-pod
+bandwidth scales with how many chips participate in the cross-pod
+collective.  Measured: psum over the 'pod' axis of a (2,4) host-device
+mesh in a subprocess.  Analytic: alpha-beta model over message size for
+1/2/4 streams."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+from repro.core import DEFAULT_SYSTEM, Link
+
+CODE = """
+import jax, jax.numpy as jnp, time
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for log2 in (16, 20, 24):
+    n = 2 ** log2 // 4
+    x = jax.device_put(jnp.ones((n,), jnp.float32),
+                       NamedSharding(mesh, P()))
+    f = jax.jit(lambda v: v * 2, donate_argnums=0)  # warm baseline
+    # cross-pod all-reduce via psum under shard_map
+    from jax.experimental.shard_map import shard_map
+    g = jax.jit(shard_map(lambda v: jax.lax.psum(v, "pod"), mesh=mesh,
+                          in_specs=P(None), out_specs=P(None),
+                          check_rep=False))
+    out = g(x); jax.block_until_ready(out)
+    reps = 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = g(x)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / reps
+    gbps = (n * 4) / dt / 1e9
+    print(f"measured_podreduce[{n*4}B],{dt*1e6:.2f},{gbps:.2f}GB/s")
+"""
+
+
+def main() -> None:
+    print(run_with_devices(CODE).strip())
+    sys = DEFAULT_SYSTEM
+    beta = sys.link_bandwidth(Link.DCN)
+    alpha = sys.link_latency(Link.DCN)
+    for streams in (1, 2, 4):
+        for size in (2**12, 2**16, 2**20, 2**24, 2**28):
+            t = alpha + size / (beta * streams)
+            emit(
+                f"analytic_internode[{streams}streams,{size}B]",
+                t * 1e6,
+                f"{size / t / 1e9:.2f}GB/s",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figs. 11/12: memory access latency via pointer chase.
+
+Measured: a dependent-gather chain (each load's address depends on the
+previous load) over growing buffers — the multichase methodology; cache-
+tier breaks show up as latency steps on real hardware.  Analytic: per-tier
+TPU latencies from the hardware model."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import DEFAULT_SYSTEM, MemoryTier, read_bound
+from repro.core.membench import measure
+
+SIZES = [2**12, 2**16, 2**20, 2**23]   # elements (x4 bytes)
+CHAIN = 2048                            # dependent loads per call
+
+
+def _chase(perm: jax.Array) -> jax.Array:
+    def body(i, idx):
+        return perm[idx]
+
+    return jax.lax.fori_loop(0, CHAIN, body, jnp.int32(0))
+
+
+def main() -> None:
+    chase = jax.jit(_chase)
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        # random cyclic permutation -> defeats prefetch, like multichase
+        perm = np.empty(n, np.int32)
+        order = rng.permutation(n)
+        perm[order[:-1]] = order[1:]
+        perm[order[-1]] = order[0]
+        x = jnp.asarray(perm)
+        m = measure(lambda x=x: chase(x), name=f"chase[{n*4}B]", repeats=5)
+        emit(m.name, m.us_per_call, f"{m.mean_s/CHAIN*1e9:.1f}ns/load")
+
+    for t in MemoryTier:
+        b = read_bound(t) if t != MemoryTier.VMEM else None
+        lat = (
+            DEFAULT_SYSTEM.chip.vmem_latency
+            if t == MemoryTier.VMEM
+            else b.latency
+        )
+        emit(f"analytic_latency[{t}]", lat * 1e6, f"{lat*1e9:.0f}ns")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Fig. 4: managed (page-migrating) vs system (fine-grained) memory.
+
+TPU adaptation: resident-after-migration vs per-touch streaming of a
+host-placed buffer (DESIGN.md §2.1).  Measured: a compute loop touching a
+buffer k times, either migrated to device once or re-fetched from
+pinned_host every touch — the crossover in k reproduces the figure's
+shape.  Analytic: the closed-form crossover from the datapath model."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import SingleDeviceSharding
+
+from benchmarks.common import emit
+from repro.core import MemoryTier, migration_crossover_touches, streaming_time
+from repro.core.membench import measure
+
+
+def main() -> None:
+    dev = jax.devices()[0]
+    kinds = {m.kind for m in dev.addressable_memories()}
+    nbytes = 2**25  # 32 MiB
+    x_host = jax.device_put(
+        jnp.ones((nbytes // 4,), jnp.float32),
+        SingleDeviceSharding(
+            dev, memory_kind="pinned_host" if "pinned_host" in kinds else "device"
+        ),
+    )
+    dev_sharding = SingleDeviceSharding(dev, memory_kind="device")
+
+    def to_dev(v):
+        return jax.device_put(v, dev_sharding)
+    touch = jax.jit(lambda v: jnp.sum(v * 1.0001))
+
+    for k in (1, 4, 16, 64):
+        def migrated(k=k):
+            v = to_dev(x_host)           # one bulk migration
+            acc = 0.0
+            for _ in range(k):
+                acc = acc + touch(v)
+            return acc
+
+        def streamed(k=k):
+            acc = 0.0
+            for _ in range(k):
+                acc = acc + touch(to_dev(x_host))  # re-fetch per touch
+            return acc
+
+        m1 = measure(migrated, name=f"migrated[k={k}]", repeats=3)
+        m2 = measure(streamed, name=f"streamed[k={k}]", repeats=3)
+        emit(m1.name, m1.us_per_call, f"{nbytes*k/m1.mean_s/1e9:.2f}GB/s-effective")
+        emit(m2.name, m2.us_per_call, f"{nbytes*k/m2.mean_s/1e9:.2f}GB/s-effective")
+
+    # analytic crossover (the paper's "~128 iterations" point, for TPU)
+    x = migration_crossover_touches(MemoryTier.HOST)
+    emit("analytic_crossover[host]", 0.0, f"{x:.1f}touches")
+    for k in (1, 4, 16, 64, 256):
+        t_stream = streaming_time(2**30, MemoryTier.HOST, touches=k)
+        t_mig = streaming_time(2**30, MemoryTier.HBM, touches=k) + streaming_time(
+            2**30, MemoryTier.HOST, touches=1
+        )
+        winner = "migrate" if t_mig < t_stream else "stream"
+        emit(f"analytic_managed[k={k}]", min(t_mig, t_stream) * 1e6, winner)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Figs. 2/7/8: read/write bandwidth per memory placement.
+
+Measured mode: jnp read (sum) / write (fill) kernels over buffers placed in
+``device`` vs ``pinned_host`` memory kinds — the placement axis the CPU
+runtime exposes.  Analytic mode: the full TPU tier table with bound
+fractions (the paper's headline metric)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import SingleDeviceSharding
+
+from benchmarks.common import emit
+from repro.core import MemoryTier, read_bound, write_bound
+from repro.core.membench import dispatch_overhead, measure
+
+SIZES = [2**20, 2**24, 2**27]  # 1 MiB .. 128 MiB
+
+
+def _placed(nbytes: int, kind: str):
+    x = jnp.ones((nbytes // 4,), jnp.float32)
+    dev = jax.devices()[0]
+    return jax.device_put(x, SingleDeviceSharding(dev, memory_kind=kind))
+
+
+def main() -> None:
+    emit("dispatch_overhead", dispatch_overhead() * 1e6, "per-call")
+
+    read = jax.jit(lambda x: jnp.sum(x))
+    write = jax.jit(lambda x: jnp.full_like(x, 2.0))
+
+    kinds = ["device"]
+    if "pinned_host" in {
+        m.kind for m in jax.devices()[0].addressable_memories()
+    }:
+        kinds.append("pinned_host")
+
+    for kind in kinds:
+        for nbytes in SIZES:
+            x = _placed(nbytes, kind)
+            m = measure(
+                lambda x=x: read(x), name=f"read[{kind},{nbytes}]",
+                nbytes=nbytes,
+            )
+            emit(m.name, m.us_per_call, f"{m.gbps:.2f}GB/s")
+            m = measure(
+                lambda x=x: write(x), name=f"write[{kind},{nbytes}]",
+                nbytes=nbytes,
+            )
+            emit(m.name, m.us_per_call, f"{m.gbps:.2f}GB/s")
+
+    # analytic TPU tier table (Fig. 7's bound rows)
+    for t in MemoryTier:
+        if t == MemoryTier.VMEM:
+            continue
+        rb, wb = read_bound(t), write_bound(t)
+        emit(
+            f"analytic_read[{t}]", rb.latency * 1e6,
+            f"{rb.bandwidth/1e9:.1f}GB/s",
+        )
+        emit(
+            f"analytic_write[{t}]", wb.latency * 1e6,
+            f"{wb.bandwidth/1e9:.1f}GB/s",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Fig. 13: ping-pong latency between processing units.
+
+TPU adaptation (DESIGN.md §2.1): the CAS ping-pong becomes a
+``collective_permute`` round trip between mesh neighbors at increasing
+topological distance — the quantity preserved is which hop dominates
+small-message latency.  Measured on 8 host devices in a subprocess;
+analytic rows give the ICI-hop/DCN ladder of the hardware model."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+from repro.core import DEFAULT_SYSTEM, Link
+
+CODE = """
+import jax, jax.numpy as jnp, time
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(8.0).reshape(8, 1)
+# single permute per dispatch (the two-permute program deadlocks the CPU
+# backend's transfer manager); round trip = 2x one-way.
+for dist in (1, 2, 4):
+    fwd = [(i, (i + dist) % 8) for i in range(8)]
+    f = jax.jit(shard_map(lambda v: jax.lax.ppermute(v, "x", fwd),
+                          mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    out = f(x); jax.block_until_ready(out)
+    n = 30
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(out)
+    jax.block_until_ready(out)
+    dt = 2 * (time.perf_counter() - t0) / n
+    print(f"pingpong[dist={dist}],{dt*1e6:.2f},round-trip(2x one-way)")
+"""
+
+
+def main() -> None:
+    print(run_with_devices(CODE).strip())
+    # analytic ladder: 1 ICI hop, multi-hop, cross-pod (paper's G0/H0..H3)
+    c = DEFAULT_SYSTEM
+    for hops in (1, 2, 4, 8):
+        lat = 2 * hops * c.link_latency(Link.ICI)
+        emit(f"analytic_pingpong[ici,{hops}hops]", lat * 1e6, "round-trip")
+    lat = 2 * c.link_latency(Link.DCN)
+    emit("analytic_pingpong[dcn]", lat * 1e6, "round-trip")
+    lat = 2 * c.link_latency(Link.PCIE)
+    emit("analytic_pingpong[host]", lat * 1e6, "round-trip")
+
+
+if __name__ == "__main__":
+    main()

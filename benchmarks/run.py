@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--only NAME]`` — each module prints
+``name,us_per_call,derived`` CSV rows.  Mapping to the paper (also in
+DESIGN.md §6):
+
+  bench_datapath_bounds   Fig. 3 + Table II (+ hardware constants)
+  bench_membw             Figs. 2, 7, 8
+  bench_copy              Figs. 5, 9, 10
+  bench_latency           Figs. 11, 12
+  bench_pingpong          Fig. 13
+  bench_internode         Fig. 14
+  bench_gemm              Figs. 15, 16 + Table III
+  bench_llm_inference     Fig. 17
+  bench_collectives       Figs. 18, 19
+  bench_managed_vs_system Fig. 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_datapath_bounds",
+    "bench_membw",
+    "bench_copy",
+    "bench_latency",
+    "bench_pingpong",
+    "bench_internode",
+    "bench_gemm",
+    "bench_llm_inference",
+    "bench_collectives",
+    "bench_managed_vs_system",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single module")
+    args = ap.parse_args()
+
+    mods = [args.only] if args.only else MODULES
+    failures = 0
+    for name in mods:
+        print(f"# ==== {name} ====")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.00,FAILED")
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

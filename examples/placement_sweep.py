@@ -1,0 +1,60 @@
+"""Placement sweep: the paper's §IV study as a runnable decision procedure.
+
+    PYTHONPATH=src python examples/placement_sweep.py [--arch gemma3-27b]
+
+For a full-size architecture, evaluates every placement policy with the
+datapath planner (predicted step time + HBM fit at 256 chips), prints the
+Fig. 17-style table, and shows which policy the launcher would pick.
+"""
+
+import argparse
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core.planner import decode_profile, plan, train_profile
+from repro.models.model_zoo import ModelBundle
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b", choices=list_archs())
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+
+    bundle = ModelBundle(get_config(args.arch))
+    cfg = bundle.cfg
+
+    print(f"=== {cfg.name}: {cfg.num_params()/1e9:.1f}B params, "
+          f"{args.chips} chips ===\n")
+
+    print("-- training (train_4k) --")
+    shape = SHAPES["train_4k"]
+    prof = train_profile(
+        name=cfg.name,
+        param_bytes=cfg.num_params() * 2,
+        step_flops=bundle.model_flops(shape),
+        activation_bytes=2.0 * shape.global_batch * shape.seq_len
+        * cfg.d_model * cfg.n_layers,
+        num_chips=args.chips,
+    )
+    best, preds = plan(prof)
+    for p in preds:
+        mark = " <== planner pick" if p.policy == best.policy else ""
+        print("  " + p.explain() + mark)
+
+    print("\n-- decoding (decode_32k) --")
+    shape = SHAPES["decode_32k"]
+    prof = decode_profile(
+        name=cfg.name,
+        param_bytes=cfg.num_params() * 2,
+        kv_bytes=bundle.cache_bytes(shape),
+        step_flops=bundle.model_flops(shape),
+        num_chips=args.chips,
+    )
+    best, preds = plan(prof)
+    for p in preds:
+        mark = " <== planner pick" if p.policy == best.policy else ""
+        print("  " + p.explain() + mark)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""The paper's contribution as a library: datapath-aware placement.
+
+Layout:
+
+* :mod:`repro.core.hardware`     — TPU chip/pod/system model (constants).
+* :mod:`repro.core.datapath`     — per-operation theoretical bounds (Fig. 3).
+* :mod:`repro.core.placement`    — per-role memory placement policies.
+* :mod:`repro.core.planner`      — policy selection from predicted step time.
+* :mod:`repro.core.hlo_analysis` — compiled-HLO cost extraction.
+* :mod:`repro.core.roofline`     — 3-term roofline reports.
+* :mod:`repro.core.membench`     — paper-methodology measurement infra.
+"""
+
+from repro.core.hardware import (  # noqa: F401
+    AXIS_LINK,
+    DEFAULT_SYSTEM,
+    ChipSpec,
+    Link,
+    MemoryTier,
+    PodSpec,
+    SystemSpec,
+)
+from repro.core.datapath import (  # noqa: F401
+    Bound,
+    bound_matrix,
+    collective_bound,
+    copy_bound,
+    migration_crossover_touches,
+    read_bound,
+    streaming_time,
+    wire_bytes,
+    write_bound,
+)
+from repro.core.placement import (  # noqa: F401
+    HBM_RESIDENT,
+    KV_HOST,
+    OPT_HOST,
+    POLICIES,
+    WEIGHTS_STREAM,
+    Placement,
+    PlacementPolicy,
+    Role,
+    Strategy,
+)
+from repro.core.planner import (  # noqa: F401
+    PolicyPrediction,
+    WorkloadProfile,
+    decode_profile,
+    plan,
+    predict,
+    train_profile,
+)
+from repro.core.roofline import (  # noqa: F401
+    RooflineReport,
+    load_reports,
+    markdown_table,
+    report_from_compiled,
+    report_from_cost,
+    save_reports,
+)
+from repro.core.hlo_analysis import (  # noqa: F401
+    CollectiveStat,
+    HloAnalyzer,
+    HloCost,
+    analyze_hlo_text,
+)

@@ -1,0 +1,176 @@
+"""TPU hardware model: the single source of truth for roofline constants.
+
+The paper characterizes the Quad GH200 node of Alps by enumerating its
+processing units, physical memories, and interconnects (paper Fig. 1) and
+deriving a theoretical bound for every datapath (paper Fig. 3).  This module
+is the TPU v5e analogue: a declarative description of the chip, the host
+link, the ICI torus, and the inter-pod DCN, consumed by
+:mod:`repro.core.datapath` and :mod:`repro.core.roofline`.
+
+All bandwidth numbers are bytes/second, latencies in seconds, capacities in
+bytes.  Values marked ``# task-spec`` are the constants prescribed for the
+roofline analysis; the others are public v5e-class figures used only for
+secondary analyses (latency plots, VMEM tiling checks) and clearly separable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Mapping
+
+
+class MemoryTier(str, enum.Enum):
+    """Physical memory pools a tensor can live in, from the chip's view.
+
+    Mirrors the paper's {HBM, DDR, HBM-p, DDR-p} axis (Figs. 5, 7, 9),
+    adapted to the TPU memory system plus the on-chip VMEM tier.
+    """
+
+    VMEM = "vmem"            # on-chip scratch (Pallas BlockSpec target)
+    HBM = "hbm"              # local device HBM
+    HOST = "host"            # this chip's host DRAM (pinned_host)
+    PEER_HBM = "hbm_p"       # another chip's HBM, same pod (via ICI)
+    PEER_HOST = "host_p"     # another host's DRAM, same pod (PCIe+ICI+PCIe)
+    REMOTE_HBM = "hbm_r"     # a chip's HBM in another pod (via DCN)
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+class Link(str, enum.Enum):
+    """Interconnects, the paper's 'datapath segments'."""
+
+    HBM_BUS = "hbm_bus"      # HBM <-> chip
+    VMEM_BUS = "vmem_bus"    # VMEM <-> compute units
+    PCIE = "pcie"            # host DRAM <-> chip
+    ICI = "ici"              # chip <-> neighbor chip, per link
+    DCN = "dcn"              # pod <-> pod, per chip
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """One TPU chip."""
+
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12          # task-spec: 197 TFLOP/s bf16
+    hbm_bandwidth: float = 819e9             # task-spec: 819 GB/s
+    hbm_capacity: float = 16 * 2**30         # 16 GiB (v5e-class)
+    vmem_capacity: float = 128 * 2**20       # ~128 MiB VMEM (v5e-class)
+    vmem_bandwidth: float = 11.4e12          # derived: keeps 8x8x128 MXU fed
+    ici_link_bandwidth: float = 50e9         # task-spec: ~50 GB/s/link ICI
+    ici_links_per_axis: int = 1              # links used per hop of a collective
+    pcie_bandwidth: float = 32e9             # PCIe Gen4 x16-class host link
+    dcn_bandwidth: float = 25e9              # per-chip inter-pod bandwidth
+    # Latency terms (seconds) for the latency benchmarks (paper Figs. 11-13).
+    hbm_latency: float = 700e-9
+    vmem_latency: float = 30e-9
+    pcie_latency: float = 2.0e-6
+    ici_hop_latency: float = 1.0e-6
+    dcn_latency: float = 10.0e-6
+    # MXU tile: matmul dims should be multiples of this for full utilization.
+    mxu_dim: int = 128
+    # Peak flops by dtype (GEMM study, paper Table III analogue).
+    peak_flops_by_dtype: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {
+            "bfloat16": 197e12,
+            "float32": 98.5e12,   # fp32 runs at half MXU rate on v5e-class
+            "int8": 394e12,
+        }
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    """A pod slice: chips arranged in a 2D ICI torus (v5e-style 16x16)."""
+
+    chip: ChipSpec = dataclasses.field(default_factory=ChipSpec)
+    mesh_shape: tuple[int, ...] = (16, 16)
+    torus_wraparound: bool = True
+
+    @property
+    def num_chips(self) -> int:
+        return math.prod(self.mesh_shape)
+
+    def ici_hops(self, a: tuple[int, ...], b: tuple[int, ...]) -> int:
+        """Manhattan hop distance between two chips on the (wrapped) torus."""
+        hops = 0
+        for ax, (i, j) in enumerate(zip(a, b)):
+            d = abs(i - j)
+            if self.torus_wraparound:
+                d = min(d, self.mesh_shape[ax] - d)
+            hops += d
+        return hops
+
+    def bisection_bandwidth(self) -> float:
+        """All-links bisection bandwidth of the pod (for sanity checks)."""
+        # Cut the torus along its largest axis: 2 * (other-axes product)
+        # links cross the cut (x2 for wraparound).
+        longest = max(self.mesh_shape)
+        cross = self.num_chips // longest
+        wrap = 2 if self.torus_wraparound else 1
+        return cross * wrap * self.chip.ici_link_bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """The full target: ``num_pods`` pods joined by DCN.
+
+    The production configuration for this repo is 2 pods x 256 chips
+    (the multi-pod dry-run mesh); ``num_pods`` scales to thousands of
+    nodes for planner what-ifs.
+    """
+
+    pod: PodSpec = dataclasses.field(default_factory=PodSpec)
+    num_pods: int = 2
+
+    @property
+    def num_chips(self) -> int:
+        return self.pod.num_chips * self.num_pods
+
+    @property
+    def chip(self) -> ChipSpec:
+        return self.pod.chip
+
+    def link_bandwidth(self, link: Link) -> float:
+        c = self.chip
+        return {
+            Link.HBM_BUS: c.hbm_bandwidth,
+            Link.VMEM_BUS: c.vmem_bandwidth,
+            Link.PCIE: c.pcie_bandwidth,
+            Link.ICI: c.ici_link_bandwidth * c.ici_links_per_axis,
+            Link.DCN: c.dcn_bandwidth,
+        }[link]
+
+    def link_latency(self, link: Link) -> float:
+        c = self.chip
+        return {
+            Link.HBM_BUS: c.hbm_latency,
+            Link.VMEM_BUS: c.vmem_latency,
+            Link.PCIE: c.pcie_latency,
+            Link.ICI: c.ici_hop_latency,
+            Link.DCN: c.dcn_latency,
+        }[link]
+
+
+#: Default system used everywhere unless a config overrides it.
+DEFAULT_SYSTEM = SystemSpec()
+
+#: Mesh-axis -> link map for the production meshes (see launch/mesh.py).
+#: 'model' and 'data' are intra-pod ICI axes; 'pod' crosses DCN.  This is
+#: the paper's "locality beats memory type" lesson (Fig. 19) as data: the
+#: axis you put a collective on decides its link, and therefore its bound.
+AXIS_LINK: dict[str, Link] = {
+    "model": Link.ICI,
+    "data": Link.ICI,
+    "pod": Link.DCN,
+}
+
+
+def axis_bandwidth(axis: str, system: SystemSpec = DEFAULT_SYSTEM) -> float:
+    """Per-chip bandwidth available to a collective running on ``axis``."""
+    return system.link_bandwidth(AXIS_LINK.get(axis, Link.ICI))

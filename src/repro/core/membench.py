@@ -1,0 +1,134 @@
+"""Measurement infrastructure mirroring the paper's methodology (§III-B).
+
+The paper's rules, kept verbatim where they transfer:
+
+* a *kernel* is the measured function, excluding sync + measurement code;
+* every number is the average of ``repeats`` measurements after discarding
+  ``warmup`` runs;
+* for multi-worker tests, total time = max over workers of their final
+  timestamp minus the common start timestamp (we get this for free from
+  ``block_until_ready`` on a sharded computation — the slowest shard gates).
+
+On this CPU container the timer is ``time.perf_counter`` (the cntvct_el0 /
+%globaltimer discussion in the paper becomes moot under a JIT runtime; the
+dispatch-overhead measurement below plays the role of the paper's clock-
+resolution measurement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+
+@dataclasses.dataclass
+class Measurement:
+    name: str
+    mean_s: float
+    min_s: float
+    max_s: float
+    std_s: float
+    repeats: int
+    nbytes: float = 0.0
+    flops: float = 0.0
+
+    @property
+    def bandwidth(self) -> float:
+        """bytes/s, using the mean (paper reports averages)."""
+        return self.nbytes / self.mean_s if self.mean_s else 0.0
+
+    @property
+    def gbps(self) -> float:
+        return self.bandwidth / 1e9
+
+    @property
+    def tflops(self) -> float:
+        return self.flops / self.mean_s / 1e12 if self.mean_s else 0.0
+
+    @property
+    def us_per_call(self) -> float:
+        return self.mean_s * 1e6
+
+    def csv(self, derived: str | None = None) -> str:
+        d = derived
+        if d is None:
+            d = f"{self.gbps:.2f}GB/s" if self.nbytes else f"{self.tflops:.2f}TF/s"
+        return f"{self.name},{self.us_per_call:.2f},{d}"
+
+
+def measure(
+    fn: Callable[[], Any],
+    *,
+    name: str = "",
+    warmup: int = 1,
+    repeats: int = 10,
+    nbytes: float = 0.0,
+    flops: float = 0.0,
+) -> Measurement:
+    """Time ``fn`` with the paper's warmup-then-average protocol.
+
+    ``fn`` must return a jax array (or pytree); we block on it so the
+    measured interval covers the full data movement, not dispatch.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return Measurement(
+        name=name or getattr(fn, "__name__", "kernel"),
+        mean_s=statistics.fmean(times),
+        min_s=min(times),
+        max_s=max(times),
+        std_s=statistics.pstdev(times) if len(times) > 1 else 0.0,
+        repeats=repeats,
+        nbytes=nbytes,
+        flops=flops,
+    )
+
+
+def dispatch_overhead(repeats: int = 50) -> float:
+    """Seconds of fixed overhead per dispatched no-op (timer-resolution
+    analogue of the paper's 32 ns clock-read experiment)."""
+    import jax.numpy as jnp
+
+    x = jnp.zeros((1,))
+    f = jax.jit(lambda v: v + 0)
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = f(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def sweep(
+    fn_of_size: Callable[[int], Callable[[], Any]],
+    sizes: Sequence[int],
+    *,
+    name: str,
+    warmup: int = 1,
+    repeats: int = 10,
+    bytes_of_size: Callable[[int], float] | None = None,
+) -> list[Measurement]:
+    """Buffer-size sweep (the x-axis of paper Figs. 8, 10, 12, 14, 18-19)."""
+    out = []
+    for size in sizes:
+        fn = fn_of_size(size)
+        out.append(
+            measure(
+                fn,
+                name=f"{name}[{size}]",
+                warmup=warmup,
+                repeats=repeats,
+                nbytes=bytes_of_size(size) if bytes_of_size else float(size),
+            )
+        )
+    return out

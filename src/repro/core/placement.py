@@ -1,0 +1,192 @@
+"""Placement policies: where every tensor role physically lives.
+
+The paper's application studies (§IV) show that the *physical placement* of
+each buffer — not just its sharding — decides performance, and that the
+decision is per-role: GEMM source matrices care (reads dominate), the
+destination does not; KV-type read-mostly buffers benefit from the big slow
+pool only when the fast pool is full.
+
+JAX exposes exactly the needed control: ``NamedSharding(mesh, spec,
+memory_kind=...)`` with kinds ``device`` (HBM), ``pinned_host`` and
+``unpinned_host`` — the TPU analogue of the paper's Table II allocation
+APIs (``numa_alloc_onnode`` ≈ explicit memory_kind; first-touch ≈ default
+``device``).  A :class:`PlacementPolicy` maps tensor roles to placements;
+the train/serve steps consume it; the planner (:mod:`repro.core.planner`)
+predicts its step time from the datapath model and picks the best that fits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.hardware import MemoryTier
+
+
+class Role(str, enum.Enum):
+    PARAMS = "params"            # model weights (read every step)
+    MASTER = "master"            # f32 master copy of params (optimizer)
+    OPT_STATE = "opt_state"      # Adam moments
+    GRADS = "grads"              # gradient buffers
+    ACTIVATIONS = "activations"  # step-local
+    KV_CACHE = "kv_cache"        # decode-state, read-mostly, grows with seq
+    INPUTS = "inputs"            # token batches
+
+
+class Strategy(str, enum.Enum):
+    RESIDENT = "resident"   # lives in its tier; computed on in place (HBM)
+    STREAM = "stream"       # lives in a far tier; bulk-moved each use
+                            # (paper: "managed"-like — pay the migration,
+                            #  then access at HBM speed)
+
+
+#: memory_kind strings understood by jax shardings, per tier.
+_TIER_TO_KIND = {
+    MemoryTier.HBM: "device",
+    MemoryTier.HOST: "pinned_host",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    tier: MemoryTier = MemoryTier.HBM
+    strategy: Strategy = Strategy.RESIDENT
+
+    @property
+    def memory_kind(self) -> str:
+        return _TIER_TO_KIND.get(self.tier, "device")
+
+    @property
+    def on_host(self) -> bool:
+        return self.tier == MemoryTier.HOST
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """Named per-role placement map (the paper's 'allocation policy')."""
+
+    name: str
+    placements: Mapping[Role, Placement]
+    description: str = ""
+
+    def placement(self, role: Role) -> Placement:
+        return self.placements.get(role, Placement())
+
+    def memory_kind(self, role: Role) -> str:
+        return self.placement(role).memory_kind
+
+    def sharding(
+        self, mesh: Mesh, spec: PartitionSpec, role: Role
+    ) -> NamedSharding:
+        return NamedSharding(mesh, spec, memory_kind=self.memory_kind(role))
+
+    def with_placement(self, role: Role, placement: Placement) -> "PlacementPolicy":
+        p = dict(self.placements)
+        p[role] = placement
+        return PlacementPolicy(self.name, p, self.description)
+
+
+def _policy(name: str, desc: str, **roles: Placement) -> PlacementPolicy:
+    return PlacementPolicy(
+        name,
+        {Role[k.upper()]: v for k, v in roles.items()},
+        desc,
+    )
+
+
+HOST = Placement(MemoryTier.HOST, Strategy.RESIDENT)
+HOST_STREAM = Placement(MemoryTier.HOST, Strategy.STREAM)
+HBM = Placement(MemoryTier.HBM, Strategy.RESIDENT)
+
+
+#: Paper-faithful default: everything in fast memory ("local HBM" column of
+#: every paper figure — the best-performing placement when it fits).
+HBM_RESIDENT = _policy(
+    "hbm_resident",
+    "all tensors in device HBM (paper's local-HBM baseline)",
+)
+
+#: Optimizer-state offload: master weights + moments live in host DRAM and
+#: are streamed through once per step (ZeRO-Offload-style).  Trades PCIe
+#: bandwidth for ~12 bytes/param of HBM.
+OPT_HOST = _policy(
+    "opt_host",
+    "Adam moments + f32 master in host DRAM, streamed once per step",
+    master=HOST_STREAM,
+    opt_state=HOST_STREAM,
+)
+
+#: KV cache on host, streamed per decode step (long-context serving when the
+#: cache exceeds HBM; paper Fig. 17's DDR rows).
+KV_HOST = _policy(
+    "kv_host",
+    "KV cache in host DRAM, streamed per decode step",
+    kv_cache=HOST_STREAM,
+)
+
+#: Layer-wise weight streaming (serving models bigger than aggregate HBM;
+#: paper Fig. 17 'weights on DDR').
+WEIGHTS_STREAM = _policy(
+    "weights_stream",
+    "weights resident in host DRAM, streamed layer-by-layer",
+    params=HOST_STREAM,
+)
+
+POLICIES: dict[str, PlacementPolicy] = {
+    p.name: p for p in (HBM_RESIDENT, OPT_HOST, KV_HOST, WEIGHTS_STREAM)
+}
+
+
+def host_available() -> bool:
+    """Does this backend expose a pinned_host memory space?"""
+    try:
+        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+    except Exception:
+        return False
+    return "pinned_host" in kinds
+
+
+def put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy):
+    """device_put a pytree under the policy's placement for ``role``.
+
+    ``specs`` is a matching pytree of PartitionSpecs (or a single spec).
+    """
+    def _put(x, spec):
+        return jax.device_put(x, policy.sharding(mesh, spec, role))
+
+    if isinstance(specs, PartitionSpec):
+        return jax.tree.map(lambda x: _put(x, specs), tree)
+    return jax.tree.map(_put, tree, specs)
+
+
+def to_device(tree, mesh: Mesh, specs):
+    """Move a (possibly host-placed) pytree into HBM inside a jit region.
+
+    This is the 'migration' step of a STREAM placement: under jit, XLA turns
+    it into a host->device DMA that the latency-hiding scheduler can overlap
+    with compute (the TPU analogue of managed-memory prefetch).
+    """
+    def _mv(x, spec):
+        return jax.device_put(
+            x, NamedSharding(mesh, spec, memory_kind="device")
+        )
+
+    if isinstance(specs, PartitionSpec):
+        return jax.tree.map(lambda x: _mv(x, specs), tree)
+    return jax.tree.map(_mv, tree, specs)
+
+
+def to_host(tree, mesh: Mesh, specs):
+    """Move a pytree to pinned host memory inside a jit region."""
+    def _mv(x, spec):
+        return jax.device_put(
+            x, NamedSharding(mesh, spec, memory_kind="pinned_host")
+        )
+
+    if isinstance(specs, PartitionSpec):
+        return jax.tree.map(lambda x: _mv(x, specs), tree)
+    return jax.tree.map(_mv, tree, specs)

@@ -1,0 +1,215 @@
+"""Placement planner: pick the placement policy the datapath model favors.
+
+This automates the paper's §IV decision: given a workload's per-step byte
+traffic per tensor role and the capacity of each memory pool, predict the
+step time of every placement policy from the datapath bounds and choose the
+fastest one that *fits*.  (The paper does this by hand across Figs. 15-17;
+here it is a planner the launcher consults.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+from repro.core.datapath import copy_bound, read_bound
+from repro.core.hardware import DEFAULT_SYSTEM, MemoryTier, SystemSpec
+from repro.core.placement import (
+    POLICIES,
+    PlacementPolicy,
+    Role,
+    Strategy,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Per-chip, per-step workload description.
+
+    ``bytes_per_role``: resident size of each role's tensors (per chip).
+    ``touches_per_role``: how many times the role's bytes move through the
+    compute datapath per step (params: 1 fwd read (+1 bwd read under remat);
+    opt state: 1 read + 1 write; KV: 1 read per decoded token; ...).
+    """
+
+    name: str
+    flops: float
+    bytes_per_role: Mapping[Role, float]
+    touches_per_role: Mapping[Role, float]
+    collective_s: float = 0.0
+    overlap_streams: bool = True   # host DMA overlaps compute (LHS scheduler)
+
+
+@dataclasses.dataclass
+class PolicyPrediction:
+    policy: str
+    fits: bool
+    hbm_bytes: float
+    host_bytes: float
+    compute_s: float
+    hbm_s: float
+    pcie_s: float
+    collective_s: float
+    step_s: float
+    limiting: str
+
+    def explain(self) -> str:
+        return (
+            f"{self.policy}: step={self.step_s*1e3:.3f} ms "
+            f"[compute {self.compute_s*1e3:.3f} | hbm {self.hbm_s*1e3:.3f} "
+            f"| pcie {self.pcie_s*1e3:.3f} | coll {self.collective_s*1e3:.3f}] "
+            f"limited by {self.limiting}; "
+            f"hbm {self.hbm_bytes/2**30:.2f} GiB"
+            + ("" if self.fits else "  ** DOES NOT FIT **")
+        )
+
+
+def predict(
+    profile: WorkloadProfile,
+    policy: PlacementPolicy,
+    system: SystemSpec = DEFAULT_SYSTEM,
+) -> PolicyPrediction:
+    chip = system.chip
+    compute_s = profile.flops / chip.peak_bf16_flops
+
+    hbm_resident = 0.0
+    host_resident = 0.0
+    hbm_traffic = 0.0
+    pcie_traffic = 0.0
+
+    for role, nbytes in profile.bytes_per_role.items():
+        touches = profile.touches_per_role.get(role, 1.0)
+        pl = policy.placement(role)
+        if pl.tier == MemoryTier.HBM:
+            hbm_resident += nbytes
+            hbm_traffic += nbytes * touches
+        elif pl.strategy == Strategy.STREAM:
+            # lives on host; each use = one PCIe bulk move + HBM pass
+            host_resident += nbytes
+            pcie_traffic += nbytes * touches
+            hbm_traffic += nbytes * touches
+            # streamed working set also occupies a small HBM staging buffer,
+            # assumed layer-granular (<= 2 layers) and ignored for capacity.
+        else:
+            # resident on host, accessed in place — per-touch PCIe traffic
+            host_resident += nbytes
+            pcie_traffic += nbytes * touches
+
+    hbm_s = hbm_traffic / chip.hbm_bandwidth
+    pcie_s = pcie_traffic / chip.pcie_bandwidth
+    coll_s = profile.collective_s
+
+    if profile.overlap_streams:
+        step_s = max(compute_s, hbm_s, pcie_s, coll_s)
+    else:
+        step_s = max(compute_s, hbm_s) + pcie_s + coll_s
+
+    terms = {
+        "compute": compute_s,
+        "hbm": hbm_s,
+        "pcie": pcie_s,
+        "collective": coll_s,
+    }
+    limiting = max(terms, key=terms.get)
+    fits = hbm_resident <= chip.hbm_capacity
+
+    return PolicyPrediction(
+        policy=policy.name,
+        fits=fits,
+        hbm_bytes=hbm_resident,
+        host_bytes=host_resident,
+        compute_s=compute_s,
+        hbm_s=hbm_s,
+        pcie_s=pcie_s,
+        collective_s=coll_s,
+        step_s=step_s,
+        limiting=limiting,
+    )
+
+
+def plan(
+    profile: WorkloadProfile,
+    policies: Iterable[PlacementPolicy] | None = None,
+    system: SystemSpec = DEFAULT_SYSTEM,
+) -> tuple[PolicyPrediction, list[PolicyPrediction]]:
+    """Evaluate all policies; return (best-feasible, all-predictions).
+
+    Best = min step time among policies that fit HBM; if none fit, the one
+    with the smallest HBM residency (degraded but runnable) — mirroring the
+    paper's observation that a slower placement that *runs* beats an OOM.
+    """
+    preds = [
+        predict(profile, p, system)
+        for p in (policies or POLICIES.values())
+    ]
+    feasible = [p for p in preds if p.fits]
+    if feasible:
+        best = min(feasible, key=lambda p: p.step_s)
+    else:
+        best = min(preds, key=lambda p: p.hbm_bytes)
+    return best, preds
+
+
+# ---------------------------------------------------------------------------
+# Profile builders for the framework's own workloads
+# ---------------------------------------------------------------------------
+
+def train_profile(
+    *,
+    name: str,
+    param_bytes: float,
+    step_flops: float,
+    activation_bytes: float,
+    collective_s: float = 0.0,
+    num_chips: int = 1,
+    remat: bool = True,
+) -> WorkloadProfile:
+    """Per-chip training-step profile from global model numbers.
+
+    Adam: master (4B/param as f32 vs 2B resident bf16 params -> x2 params
+    bytes), moments 2 x 4B/param; grads 2B/param.
+    """
+    p = param_bytes / num_chips
+    act = activation_bytes / num_chips
+    return WorkloadProfile(
+        name=name,
+        flops=step_flops / num_chips,
+        bytes_per_role={
+            Role.PARAMS: p,
+            Role.MASTER: 2.0 * p,
+            Role.OPT_STATE: 4.0 * p,
+            Role.GRADS: p,
+            Role.ACTIVATIONS: act,
+        },
+        touches_per_role={
+            Role.PARAMS: 3.0 if remat else 2.0,  # fwd + bwd (+ remat fwd)
+            Role.MASTER: 2.0,                    # read + write
+            Role.OPT_STATE: 2.0,
+            Role.GRADS: 2.0,
+            Role.ACTIVATIONS: 2.0,
+        },
+        collective_s=collective_s,
+    )
+
+
+def decode_profile(
+    *,
+    name: str,
+    param_bytes: float,
+    kv_bytes: float,
+    step_flops: float,
+    collective_s: float = 0.0,
+    num_chips: int = 1,
+) -> WorkloadProfile:
+    """Per-chip single-token decode profile (paper Fig. 17 regime):
+    reads all params + all KV once per token."""
+    return WorkloadProfile(
+        name=name,
+        flops=step_flops / num_chips,
+        bytes_per_role={
+            Role.PARAMS: param_bytes / num_chips,
+            Role.KV_CACHE: kv_bytes / num_chips,
+        },
+        touches_per_role={Role.PARAMS: 1.0, Role.KV_CACHE: 1.0},
+        collective_s=collective_s,
+    )

@@ -1,0 +1,217 @@
+"""Three-term roofline from compiled artifacts + the hardware model.
+
+Per (architecture x shape x mesh) this module derives, from the dry-run's
+compiled module (``lowered.compile()``):
+
+* ``compute_s``    = HLO_FLOPs(per chip)            / peak_FLOP/s
+* ``memory_s``     = HLO_bytes(per chip)            / HBM_bw
+* ``collective_s`` = Σ_link wire_bytes(per chip, link) / link_bw
+
+(the task's formulas divide global quantities by ``chips x peak``; the HLO
+analyzer operates on the SPMD-partitioned module so its quantities are
+already per-chip — identical result, with the bonus that imbalanced
+shardings would be visible).
+
+The dominant term is the bottleneck; ``roofline_fraction`` is the score
+(useful model FLOPs over what the hardware could do in the achievable time).
+This is the paper's "achieved/theoretical" bound-fraction metric (Fig. 7)
+lifted from single memory operations to whole training/serving steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+from repro.core.hardware import (
+    AXIS_LINK,
+    DEFAULT_SYSTEM,
+    Link,
+    SystemSpec,
+)
+from repro.core.hlo_analysis import HloCost, analyze_hlo_text
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """The §Roofline record for one (arch x shape x mesh) cell."""
+
+    arch: str
+    shape: str
+    mesh: str
+    num_chips: int
+    # three terms, seconds (per step, per chip — steps are synchronous)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # provenance
+    hlo_flops: float              # per-chip
+    hlo_bytes: float              # per-chip
+    collective_bytes: float       # per-chip wire bytes
+    collective_by_link: dict[str, float]
+    collective_by_axes: dict[str, float]
+    model_flops: float            # analytic 6*N*D (global, per step)
+    model_bytes: float            # bytes that MUST move per step (global)
+    useful_ratio: float           # model_flops / (hlo_flops * num_chips)
+    dominant: str
+    bound_step_s: float           # max of the three terms
+    roofline_fraction: float      # ideal compute time / bound_step_s
+    bw_fraction: float            # ideal memory time / bound_step_s
+    notes: str = ""
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "RooflineReport":
+        return RooflineReport(**d)
+
+
+def _dominant(compute_s: float, memory_s: float, collective_s: float) -> str:
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    return max(terms, key=terms.get)
+
+
+def report_from_cost(
+    cost: HloCost,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    num_chips: int,
+    model_flops: float,
+    model_bytes: float = 0.0,
+    system: SystemSpec = DEFAULT_SYSTEM,
+    notes: str = "",
+) -> RooflineReport:
+    """Build the roofline record from an :class:`HloCost`.
+
+    ``roofline_fraction`` scores compute-bound steps (train/prefill);
+    ``bw_fraction`` scores movement-bound steps (decode: the ideal time is
+    streaming the must-read bytes — active params + cache — once at full
+    HBM bandwidth, the paper's bound-fraction metric verbatim).
+    """
+    chip = system.chip
+    compute_s = cost.flops / chip.peak_bf16_flops
+    memory_s = cost.hbm_bytes / chip.hbm_bandwidth
+
+    by_link: dict[str, float] = {}
+    by_axes: dict[str, float] = {}
+    collective_s = 0.0
+    for axes, nbytes in cost.wire_bytes_by_axis_group().items():
+        link = Link.ICI
+        for ax in axes:
+            if AXIS_LINK.get(ax, Link.ICI) == Link.DCN:
+                link = Link.DCN
+                break
+        key = str(link)
+        by_link[key] = by_link.get(key, 0.0) + nbytes
+        by_axes["+".join(axes) or "replica"] = (
+            by_axes.get("+".join(axes) or "replica", 0.0) + nbytes
+        )
+    for key, nbytes in by_link.items():
+        collective_s += nbytes / system.link_bandwidth(Link(key))
+
+    # Useful-compute ratio: analytic model flops vs compiled flops summed
+    # over chips.  >1 would flag missing compute; <1 flags remat/redundancy.
+    total_hlo_flops = cost.flops * num_chips
+    useful = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+
+    bound = max(compute_s, memory_s, collective_s)
+    # the time the step would take if only useful compute ran at peak:
+    ideal_s = model_flops / (num_chips * chip.peak_bf16_flops)
+    frac = ideal_s / bound if bound > 0 else 0.0
+    ideal_mem_s = model_bytes / (num_chips * chip.hbm_bandwidth)
+    bw_frac = ideal_mem_s / bound if bound > 0 else 0.0
+
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        num_chips=num_chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops=cost.flops,
+        hlo_bytes=cost.hbm_bytes,
+        collective_bytes=cost.collective_wire_bytes,
+        collective_by_link=by_link,
+        collective_by_axes=by_axes,
+        model_flops=model_flops,
+        model_bytes=model_bytes,
+        useful_ratio=useful,
+        dominant=_dominant(compute_s, memory_s, collective_s),
+        bound_step_s=bound,
+        roofline_fraction=frac,
+        bw_fraction=bw_frac,
+        notes=notes,
+    )
+
+
+def report_from_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    mesh_axes: Mapping[str, int],
+    model_flops: float,
+    model_bytes: float = 0.0,
+    system: SystemSpec = DEFAULT_SYSTEM,
+    notes: str = "",
+) -> RooflineReport:
+    """Roofline record straight from a ``jax.stages.Compiled``."""
+    import math
+
+    cost = analyze_hlo_text(compiled.as_text(), mesh_axes)
+    num_chips = math.prod(mesh_axes.values())
+    return report_from_cost(
+        cost,
+        arch=arch,
+        shape=shape,
+        mesh_name=mesh_name,
+        num_chips=num_chips,
+        model_flops=model_flops,
+        model_bytes=model_bytes,
+        system=system,
+        notes=notes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Formatting for EXPERIMENTS.md
+# ---------------------------------------------------------------------------
+
+_HDR = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+    "| dominant | useful | roofline frac | what would move it |"
+)
+_SEP = "|---" * 10 + "|"
+
+
+def markdown_table(reports: list[RooflineReport]) -> str:
+    rows = [_HDR, _SEP]
+    for r in reports:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} "
+            f"| {r.compute_s*1e3:.2f} | {r.memory_s*1e3:.2f} "
+            f"| {r.collective_s*1e3:.2f} | {r.dominant} "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.1%} "
+            f"| {r.notes or '-'} |"
+        )
+    return "\n".join(rows)
+
+
+def save_reports(reports: list[RooflineReport], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in reports], f, indent=1)
+
+
+def load_reports(path: str) -> list[RooflineReport]:
+    with open(path) as f:
+        return [RooflineReport.from_json(d) for d in json.load(f)]

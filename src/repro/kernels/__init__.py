@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the data-movement hot spots.
+
+Per-kernel modules hold ``pl.pallas_call`` + BlockSpec tiling; ``ref.py``
+holds the pure-jnp oracles; ``ops.py`` is the public jit-able API with
+backend dispatch.  Validated in interpret mode on CPU (tests/test_kernels).
+"""
+
+from repro.kernels import ops  # noqa: F401
+from repro.kernels.ref import NEG_INF  # noqa: F401

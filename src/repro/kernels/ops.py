@@ -1,0 +1,184 @@
+"""Public jit'd wrappers over the Pallas kernels with ref dispatch.
+
+The model zoo calls these.  ``backend='ref'`` (default) runs the pure-jnp
+oracle — the path the multi-pod dry-run lowers (Pallas custom-calls carry
+no cost signal for the CPU-hosted roofline, and interpret mode is slow).
+``backend='pallas'`` runs the TPU-targeted kernels (interpret=True on CPU);
+tests sweep both and assert allclose.
+
+Training gradients: when the Pallas forward is selected, attention ops are
+wrapped in ``jax.custom_vjp`` whose backward *recomputes* with the oracle —
+numerically exact, flash-style-memory only in forward.  (A Pallas backward
+kernel is a further optimization documented in EXPERIMENTS.md §Perf.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blocked_matmul as _bm
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+Backend = Literal["ref", "pallas"]
+
+_DEFAULT: Backend = "ref"
+
+
+def set_default_backend(backend: Backend) -> None:
+    global _DEFAULT
+    assert backend in ("ref", "pallas")
+    _DEFAULT = backend
+
+
+def get_default_backend() -> Backend:
+    return _DEFAULT
+
+
+def _resolve(backend: Backend | None) -> Backend:
+    return backend or _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _pallas_attention(q, k, v, kind, window, chunk, scale, q_offset):
+    return _fa.flash_attention(
+        q, k, v, kind=kind, window=window, chunk=chunk,
+        scale=scale, q_offset=q_offset,
+    )
+
+
+def _pallas_attention_fwd(q, k, v, kind, window, chunk, scale, q_offset):
+    out = _pallas_attention(q, k, v, kind, window, chunk, scale, q_offset)
+    return out, (q, k, v)
+
+
+def _pallas_attention_bwd(kind, window, chunk, scale, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.attention(
+            q_, k_, v_, kind=kind, window=window, chunk=chunk,
+            scale=scale, q_offset=q_offset,
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+def attention(
+    q, k, v, *,
+    kind: str = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    k_lengths=None,
+    backend: Backend | None = None,
+):
+    """(B, Hq, Sq, D) x (B, Hkv, Sk, D) GQA attention with mask kinds."""
+    if _resolve(backend) == "pallas" and k_lengths is None:
+        return _pallas_attention(q, k, v, kind, window, chunk, scale, q_offset)
+    if k_lengths is None and q.shape[2] >= 2048:
+        # long sequences: flash-style chunked evaluation (memory O(S·bq))
+        return _ref.attention_chunked(
+            q, k, v, kind=kind, window=window, chunk=chunk,
+            scale=scale, q_offset=q_offset,
+        )
+    return _ref.attention(
+        q, k, v, kind=kind, window=window, chunk=chunk,
+        scale=scale, q_offset=q_offset, k_lengths=k_lengths,
+    )
+
+
+def decode_attention(
+    q, k_cache, v_cache, lengths, *,
+    scale: float | None = None,
+    backend: Backend | None = None,
+):
+    """(B, Hq, D) single-token decode against a padded KV cache."""
+    if _resolve(backend) == "pallas":
+        return _da.flash_decode(q, k_cache, v_cache, lengths, scale=scale)
+    return _ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _pallas_ssd(x, dt, A, Bmat, Cmat, chunk):
+    return _ssd_pallas_fwd_only(x, dt, A, Bmat, Cmat, chunk)
+
+
+def _ssd_pallas_fwd_only(x, dt, A, Bmat, Cmat, chunk):
+    from repro.kernels.ssd_scan import ssd_scan as _k
+
+    return _k(x, dt, A, Bmat, Cmat, chunk=chunk)
+
+
+def _pallas_ssd_fwd(x, dt, A, Bmat, Cmat, chunk):
+    return _pallas_ssd(x, dt, A, Bmat, Cmat, chunk), (x, dt, A, Bmat, Cmat)
+
+
+def _pallas_ssd_bwd(chunk, res, g):
+    x, dt, A, Bmat, Cmat = res
+    _, vjp = jax.vjp(
+        lambda *a: _ref.ssd_scan(*a, chunk=chunk), x, dt, A, Bmat, Cmat
+    )
+    return vjp(g)
+
+
+_pallas_ssd.defvjp(_pallas_ssd_fwd, _pallas_ssd_bwd)
+
+
+def ssd_scan(
+    x, dt, A, Bmat, Cmat, *,
+    chunk: int = 64,
+    init_state=None,
+    return_state: bool = False,
+    backend: Backend | None = None,
+):
+    if (
+        _resolve(backend) == "pallas"
+        and init_state is None
+        and not return_state
+    ):
+        return _pallas_ssd(x, dt, A, Bmat, Cmat, chunk)
+    return _ref.ssd_scan(
+        x, dt, A, Bmat, Cmat, chunk=chunk,
+        init_state=init_state, return_state=return_state,
+    )
+
+
+def ssd_decode_step(x, dt, A, Bvec, Cvec, state):
+    return _ref.ssd_decode_step(x, dt, A, Bvec, Cvec, state)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def matmul(
+    a, b, *,
+    out_dtype=None,
+    bm: int = _bm.DEFAULT_BM,
+    bn: int = _bm.DEFAULT_BN,
+    bk: int = _bm.DEFAULT_BK,
+    backend: Backend | None = None,
+):
+    if _resolve(backend) == "pallas":
+        return _bm.blocked_matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype)
+    return _ref.matmul(a, b, out_dtype=out_dtype)

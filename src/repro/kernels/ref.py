@@ -1,0 +1,328 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references (``assert_allclose`` targets in
+tests/test_kernels.py) *and* the default compute path of the model zoo:
+the dry-run lowers these — they express identical math and sharding, so the
+roofline derived from them is the roofline of the algorithm, while the
+Pallas kernels express the VMEM-tiled TPU implementation of the same ops.
+
+All attention references compute softmax in f32 regardless of input dtype
+(matching the kernels) and support the mask kinds used by the assigned
+architectures:
+
+* ``causal``             — standard decoder mask
+* ``sliding``            — causal ∧ (q - k < window)        [gemma3 local]
+* ``chunked``            — causal ∧ same-chunk(q, k)        [llama4 local]
+* ``bidirectional``      — none                              [encoders]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+MaskKind = Literal["causal", "sliding", "chunked", "bidirectional"]
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps fully-masked rows
+                 # (sliding windows near t=0, padded decode) NaN-free.
+
+
+def mask_fn(
+    kind: MaskKind,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    window: int = 0,
+    chunk: int = 0,
+) -> jax.Array:
+    """Boolean mask (True = attend) for positions q_pos x k_pos."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if kind == "bidirectional":
+        return jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    causal = q >= k
+    if kind == "causal":
+        return causal
+    if kind == "sliding":
+        return causal & (q - k < window)
+    if kind == "chunked":
+        return causal & (q // chunk == k // chunk)
+    raise ValueError(f"unknown mask kind {kind!r}")
+
+
+def attention(
+    q: jax.Array,          # (B, Hq, Sq, D)
+    k: jax.Array,          # (B, Hkv, Sk, D)
+    v: jax.Array,          # (B, Hkv, Sk, Dv)
+    *,
+    kind: MaskKind = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+    q_offset: int | jax.Array = 0,
+    k_lengths: jax.Array | None = None,  # (B,) valid KV length (decode)
+) -> jax.Array:
+    """Grouped-query attention oracle.
+
+    ``q_offset`` places the query block inside the global position space
+    (prefill chunk / decode step).  ``k_lengths`` masks cache tail slots.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    m = mask_fn(kind, q_pos, k_pos, window=window, chunk=chunk)
+    if k_lengths is not None:
+        valid = k_pos[None, :] < k_lengths[:, None]           # (B, Sk)
+        m = m[None, :, :] & valid[:, None, :]
+        m = m[:, None, None]                                   # (B,1,1,Sq,Sk)
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kind: MaskKind = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Flash-style memory profile in pure jnp: map over query blocks.
+
+    Identical math to :func:`attention`; peak live intermediate is one
+    (B, H, block_q, Sk) score block instead of the full (Sq, Sk) matrix —
+    the jnp expression of the kernel's HBM→VMEM tiling, used by the model
+    zoo for long sequences so the dry-run's memory analysis reflects a
+    production attention, not a naive one.
+    """
+    B, Hq, Sq, D = q.shape
+    from repro.models.sharding import current_mesh, current_rules
+    from repro.models.sharding import shard as _shard
+
+    # Heads that don't divide the TP axis (llama4: 40 vs 16) leave the
+    # score tensors sharded by batch only; shrink the q block so the live
+    # (B_local, Hq, bq, Sk) f32 block stays ~1 GiB — the same working-set
+    # reasoning as the Pallas BlockSpec, applied to the jnp expression.
+    # K/V are RE-READ once per q block, so bq is a peak-memory vs
+    # HBM-traffic dial (exactly the Pallas block_q trade) — overridable
+    # per run via rules["attn_block_q"] (§Perf llama4 iterations).
+    override = current_rules().get("attn_block_q")
+    if override:
+        block_q = int(override)
+    else:
+        mesh = current_mesh()
+        tp = dict(mesh.shape).get("model", 1) if mesh else 1
+        if tp > 1 and Hq % tp:
+            block_q = max(64, block_q // 4)
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0, (Sq, bq)
+    nblocks = Sq // bq
+
+    @jax.checkpoint
+    def one(i):
+        # rematerialized per chunk in the backward (flash-bwd recompute):
+        # without this the map saves all chunks' f32 probabilities at once
+        # (observed 3 x 2 GiB/device on yi-6b train_4k).
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=2)
+        # re-pin shardings: without the constraints XLA resolves the
+        # slice-inside-scan by replicating q/out when heads don't divide
+        # the TP axis (observed 20 GiB/device f32 gathers on llama4).
+        qi = _shard(qi, "batch", "heads", None, "head_dim")
+        out = attention(
+            qi, k, v, kind=kind, window=window, chunk=chunk,
+            scale=scale, q_offset=q_offset + i * bq,
+        )
+        return _shard(out, "batch", "heads", None, "head_dim")
+
+    out = jax.lax.map(one, jnp.arange(nblocks))      # (nb, B, H, bq, Dv)
+    out = jnp.moveaxis(out, 0, 2)                    # (B, H, nb, bq, Dv)
+    return out.reshape(B, Hq, Sq, v.shape[-1])
+
+
+def decode_attention(
+    q: jax.Array,          # (B, Hq, D) — one new token
+    k_cache: jax.Array,    # (B, Hkv, Smax, D)
+    v_cache: jax.Array,    # (B, Hkv, Smax, Dv)
+    lengths: jax.Array,    # (B,) valid entries per batch row
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode against a (possibly padded) KV cache."""
+    out = attention(
+        q[:, :, None, :],
+        k_cache,
+        v_cache,
+        kind="bidirectional",
+        scale=scale,
+        k_lengths=lengths,
+    )
+    return out[:, :, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — arXiv:2405.21060
+# ---------------------------------------------------------------------------
+
+def ssd_scan(
+    x: jax.Array,     # (B, T, H, P)   inputs per head
+    dt: jax.Array,    # (B, T, H)      softplus-activated step sizes
+    A: jax.Array,     # (H,)           negative decay rates
+    Bmat: jax.Array,  # (B, T, N)      input projections (shared across heads)
+    Cmat: jax.Array,  # (B, T, N)      output projections
+    *,
+    chunk: int = 64,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+    return_state: bool = False,
+):
+    """Chunked SSD reference: O(T/c · c² + T·N) like the paper's algorithm.
+
+    The recurrence (per head, per channel p, state n):
+        h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t[n] · x_t[p]
+        y_t = Σ_n C_t[n] · h_t[p,n]
+
+    Chunked evaluation: intra-chunk term is a masked quadratic form
+    (the "attention" dual); inter-chunk term carries the state.
+    """
+    Bsz, T, H, Pdim = x.shape
+    N = Bmat.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    C_ = T // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+
+    # reshape into chunks
+    xc = xf.reshape(Bsz, C_, chunk, H, Pdim)
+    dtc = dtf.reshape(Bsz, C_, chunk, H)
+    Bc = Bf.reshape(Bsz, C_, chunk, N)
+    Cc = Cf.reshape(Bsz, C_, chunk, N)
+
+    # per-position log decay a_t = A * dt_t  (negative)
+    a = Af[None, None, None, :] * dtc                     # (B,C,c,H)
+    cum = jnp.cumsum(a, axis=2)                           # inclusive
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j  (decay j+1..i)
+    li = cum[:, :, :, None, :]                            # i
+    lj = cum[:, :, None, :, :]                            # j
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # double-where: masked entries have cum_i - cum_j > 0 and exp overflows;
+    # clamping INSIDE keeps the cotangent finite (where alone does not).
+    delta = jnp.where(mask, li - lj, 0.0)
+    L = jnp.where(mask, jnp.exp(delta), 0.0)
+
+    # scores G[i,j] = C_i · B_j
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,C,c,c)
+    M = G[..., None] * L                                  # (B,C,c,c,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dtc, xc)
+
+    # chunk summaries: state contribution of chunk k
+    # S_k[h,p,n] = Σ_j exp(cum_last - cum_j) dt_j x_j[p] B_j[n]
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,C,c,H)
+    S = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn",
+                   decay_to_end, dtc, xc, Bc)             # per-chunk state add
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,C,H) total decay
+
+    # inter-chunk recurrence over C_ chunks (tiny sequential scan)
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+    )
+
+    def step(h, inputs):
+        dec, add = inputs                                  # (B,H), (B,H,P,N)
+        h_out = h                                          # state BEFORE chunk
+        h_new = h * dec[:, :, None, None] + add
+        return h_new, h_out
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)                # (C,B,H)
+    add_t = jnp.moveaxis(S, 1, 0)                          # (C,B,H,P,N)
+    h_final, h_befores = jax.lax.scan(step, h0, (dec_t, add_t))
+    h_befores = jnp.moveaxis(h_befores, 0, 1)              # (B,C,H,P,N)
+
+    # inter-chunk output: y_inter[i] = C_i · (decay_0..i · h_before)
+    decay_from_start = jnp.exp(cum)                        # (B,C,c,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc, decay_from_start, h_befores)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pdim).astype(x.dtype)
+    if return_state:
+        return y, h_final.astype(jnp.float32)
+    return y
+
+
+def ssd_decode_step(
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bvec: jax.Array,   # (B, N)
+    Cvec: jax.Array,   # (B, N)
+    state: jax.Array,  # (B, H, P, N)
+):
+    """One recurrence step (decode path). Returns (y, new_state)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dec = jnp.exp(A[None, :] * dtf)                        # (B,H)
+    add = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, Bvec.astype(jnp.float32))
+    new_state = state * dec[:, :, None, None] + add
+    y = jnp.einsum("bn,bhpn->bhp", Cvec.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def ssd_scan_sequential(
+    x, dt, A, Bmat, Cmat, *, init_state=None
+):
+    """O(T) literal recurrence — the oracle's oracle (tests only)."""
+    Bsz, T, H, Pdim = x.shape
+    N = Bmat.shape[-1]
+    h = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, Pdim, N), jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        y, h = ssd_decode_step(xt, dtt, A, Bt, Ct, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(Cmat, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Blocked matmul (the paper's GEMM study at the VMEM tier)
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    """f32-accumulating matmul oracle."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

@@ -1,0 +1,122 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan kernel (Pallas, TPU).
+
+The SSD algorithm (arXiv:2405.21060) is itself a data-movement argument of
+the kind the paper makes: the same recurrence can be evaluated as a
+sequential scan (latency-bound, no MXU) or as chunked quadratic blocks
+(MXU-friendly, VMEM-resident tiles) plus a tiny inter-chunk state
+recurrence.  This kernel implements the chunked form with the chunk loop as
+the *sequential* grid axis, carrying the (P, N) state in VMEM scratch —
+HBM traffic is exactly one read of x/dt/B/C and one write of y.
+
+Grid: (batch, heads, chunks); chunks is ``arbitrary`` (sequential).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(
+    x_ref,    # (1, c, 1, P)
+    dt_ref,   # (1, c, 1)
+    a_ref,    # (1,)
+    b_ref,    # (1, c, N)
+    c_ref,    # (1, c, N)
+    y_ref,    # (1, c, 1, P)
+    h_scr,    # (P, N) f32 state
+    *, chunk,
+):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (c,)
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    Bm = b_ref[0].astype(jnp.float32)                # (c, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (c, N)
+
+    a = A * dt                                       # (c,) log-decays
+    cum = jnp.cumsum(a)                              # inclusive
+    li = cum[:, None]
+    lj = cum[None, :]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    L = jnp.where(mask, jnp.exp(li - lj), 0.0)       # (c, c)
+
+    G = jax.lax.dot_general(                         # C_i . B_j
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    M = G * L                                        # (c, c)
+    xdt = x * dt[:, None]                            # (c, P)
+    y_intra = jax.lax.dot_general(
+        M, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (c, P)
+
+    # inter-chunk: y_inter[i] = exp(cum_i) * C_i . h_prev
+    h_prev = h_scr[...]                              # (P, N)
+    ch = jax.lax.dot_general(
+        Cm, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (c, P)
+    y = y_intra + jnp.exp(cum)[:, None] * ch
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(cum_end) * h_prev + sum_j decay_to_end_j dt_j x_j B_j
+    decay_to_end = jnp.exp(cum[-1] - cum)            # (c,)
+    sx = xdt * decay_to_end[:, None]                 # (c, P)
+    add = jax.lax.dot_general(                       # (P, N)
+        sx, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    h_scr[...] = h_prev * jnp.exp(cum[-1]) + add
+
+
+def ssd_scan(
+    x: jax.Array,     # (B, T, H, P)
+    dt: jax.Array,    # (B, T, H)
+    A: jax.Array,     # (H,)
+    Bmat: jax.Array,  # (B, T, N)
+    Cmat: jax.Array,  # (B, T, N)
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jax.Array:
+    Bsz, T, H, P = x.shape
+    N = Bmat.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, (T, c)
+    nchunks = T // c
+    grid = (Bsz, H, nchunks)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, c, 1), lambda b, h, i: (b, i, h)),
+            pl.BlockSpec((1,), lambda b, h, i: (h,)),
+            pl.BlockSpec((1, c, N), lambda b, h, i: (b, i, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, P), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, T, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat)

@@ -1,0 +1,7 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve CLIs.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — import it only in
+a dedicated process (its __main__ / subprocess), never from tests.
+"""
+
+from repro.launch.mesh import make_mesh_for, make_production_mesh, mesh_axes_dict  # noqa: F401

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  512 placeholder host devices let
+# jax.make_mesh build the production meshes; nothing is ever allocated —
+# every input is a ShapeDtypeStruct and we stop at .lower().compile().
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+
+1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+2. constructs ShapeDtypeStruct stand-ins for every input of the step
+   function (params, optimizer state, batch, KV caches) with the baseline
+   shardings (TP over ``model``, DP over ``data``/``pod``, FSDP for
+   params+optimizer, split-KV decode);
+3. ``jit(step).lower(...).compile()`` — sharding mismatches, unsupported
+   collectives, or capacity blowups fail HERE, which is the point;
+4. records ``memory_analysis()`` (proves it fits), ``cost_analysis()``,
+   and the HLO-derived roofline terms (FLOPs / HBM bytes / collective wire
+   bytes by axis) into a JSON consumed by EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+    python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.core.hlo_analysis import analyze_hlo_text
+from repro.core.roofline import report_from_cost
+from repro.launch.mesh import make_production_mesh, mesh_axes_dict
+from repro.models.model_zoo import ModelBundle
+from repro.models.sharding import (
+    defs_to_shapes,
+    defs_to_specs,
+    spec_for,
+    use_sharding,
+)
+from repro.train.train_step import TrainConfig, make_train_step
+from repro.optim.adamw import init_opt_state
+
+#: baseline rule overrides per mode (see DESIGN.md §4).
+#: train/prefill: sequence-parallel activations at layer boundaries
+#: (Megatron-SP; layer-boundary remat residency /16) — without it the
+#: train cells hold 32+ layers x full-seq activations per chip.
+TRAIN_RULES = {"seq": ("model",)}
+PREFILL_RULES = {"seq": ("model",), "kv_seq": ("data", "model")}
+DECODE_RULES = {"kv_seq": ("data", "model")}
+FSDP_AXES = ("data",)
+
+#: §Perf-winning configurations (EXPERIMENTS.md) — reproducible via
+#: ``--optimized``.  Keys: (arch, shape) -> lower_cell overrides.
+OPTIMIZED_CELLS = {
+    # worst-fraction cell: idle TP axis (heads=14, vocab=151655 don't
+    # divide 16) reassigned to batch; remat dots for the freed memory.
+    ("internvl2-1b", "train_4k"): dict(
+        rules={**TRAIN_RULES, "batch": ("pod", "data", "model")},
+        remat="dots",
+    ),
+    # most collective-bound cell: drop gradient accumulation (collective
+    # traffic repeats per microbatch) — frac 5.5% -> 10.2%.
+    ("gemma3-27b", "train_4k"): dict(n_micro=1),
+    # paper-representative cell: MLA storage-dtype streaming is already in
+    # the model (models/attention.py); baseline == optimized here.
+    ("deepseek-v2-236b", "decode_32k"): dict(),
+}
+
+
+def input_specs(arch: str, shape_name: str = "train_4k"):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns (bundle, inputs:dict) where inputs carries ``batch`` plus, per
+    mode, params/opt_state (train) or params/caches (serve) structs.
+    """
+    bundle = ModelBundle(get_config(arch))
+    shape = SHAPES[shape_name]
+    dtype = bundle.cfg.dtype
+
+    batch_defs = bundle.input_defs(shape)
+    batch = defs_to_shapes(batch_defs, dtype)
+    params = defs_to_shapes(bundle.param_defs(), dtype)
+    out = {"batch": batch, "params": params, "mode": shape.mode}
+    if shape.mode == "train":
+        out["opt_state"] = {
+            "master": defs_to_shapes(bundle.param_defs(), "float32"),
+            "mu": defs_to_shapes(bundle.param_defs(), "float32"),
+            "nu": defs_to_shapes(bundle.param_defs(), "float32"),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        out["ef"] = jax.tree.map(
+            lambda _: jax.ShapeDtypeStruct((), jnp.float32), params
+        )
+    else:
+        out["caches"] = defs_to_shapes(
+            bundle.cache_defs(shape.global_batch, bundle.decode_cache_len(shape)),
+            dtype,
+        )
+    return bundle, out
+
+
+def _shardings_for(bundle, mesh, shape_name: str, rules, zero_stage: int = 3):
+    shape = SHAPES[shape_name]
+    defs = bundle.param_defs()
+    param_s = defs_to_specs(
+        defs, mesh, rules,
+        fsdp_axes=FSDP_AXES if zero_stage >= 3 else (),
+    )
+    batch_defs = bundle.input_defs(shape)
+    batch_s = defs_to_specs(batch_defs, mesh, rules)
+    out = {"params": param_s, "batch": batch_s}
+    if shape.mode == "train":
+        member = defs_to_specs(defs, mesh, rules, fsdp_axes=FSDP_AXES)
+        out["opt_state"] = {
+            "master": member,
+            "mu": member,
+            "nu": member,
+            "step": NamedSharding(mesh, P()),
+        }
+        out["ef"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), defs,
+            is_leaf=lambda x: hasattr(x, "axes"),
+        )
+    else:
+        cache_defs = bundle.cache_defs(
+            shape.global_batch, bundle.decode_cache_len(shape)
+        )
+        out["caches"] = defs_to_specs(cache_defs, mesh, rules)
+    return out
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules: dict | None = None,
+    zero_stage: int = 3,
+    n_micro: int | None = None,
+    remat: str = "full",
+    verbose: bool = True,
+):
+    """Lower + compile one cell. Returns (record, compiled)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = SHAPES[shape_name]
+    bundle, specs_in = input_specs(arch, shape_name)
+    mode = shape.mode
+    if rules is None:
+        rules = {
+            "train": TRAIN_RULES,
+            "prefill": PREFILL_RULES,
+            "decode": DECODE_RULES,
+        }[mode]
+    sh = _shardings_for(bundle, mesh, shape_name, rules,
+                        zero_stage=zero_stage)
+
+    scalar = NamedSharding(mesh, P())
+    logits_spec = NamedSharding(
+        mesh,
+        spec_for(
+            (SHAPES[shape_name].global_batch, bundle.cfg.vocab),
+            ("batch", "vocab"), mesh, rules,
+        ),
+    )
+
+    t0 = time.time()
+    if mode == "train":
+        # gradient accumulation for the wide archs: transient activation
+        # buffers scale with the microbatch, grads accumulate sharded.
+        if n_micro is None:
+            n_micro = 4 if bundle.cfg.d_model >= 5000 else 1
+        tcfg = TrainConfig(
+            remat=remat, rules=rules, fsdp_axes=FSDP_AXES,
+            n_microbatches=n_micro, zero_stage=zero_stage,
+        )
+        step = make_train_step(bundle, mesh, tcfg)
+        metrics_s = {k: scalar for k in ("loss", "ce", "aux", "grad_norm", "lr")}
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh["params"], sh["opt_state"], sh["ef"], sh["batch"]),
+            out_shardings=(sh["params"], sh["opt_state"], sh["ef"], metrics_s),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(
+            specs_in["params"], specs_in["opt_state"], specs_in["ef"],
+            specs_in["batch"],
+        )
+    else:
+        fn = bundle.prefill if mode == "prefill" else bundle.decode_step
+
+        def serve_step(params, batch, caches, _fn=fn):
+            with use_sharding(mesh, rules):
+                return _fn(params, batch, caches)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(sh["params"], sh["batch"], sh["caches"]),
+            out_shardings=(logits_spec, sh["caches"]),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(
+            specs_in["params"], specs_in["batch"], specs_in["caches"]
+        )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    mesh_axes = mesh_axes_dict(mesh)
+    cost = analyze_hlo_text(compiled.as_text(), mesh_axes)
+    report = report_from_cost(
+        cost,
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        num_chips=math.prod(mesh_axes.values()),
+        model_flops=bundle.model_flops(shape),
+        model_bytes=bundle.model_bytes(shape),
+    )
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes
+            ),
+        },
+        "cost_analysis": {
+            "xla_flops_per_device": ca.get("flops", 0.0),
+            "xla_bytes_per_device": ca.get("bytes accessed", 0.0),
+        },
+        "roofline": report.to_json(),
+        "collectives": [
+            {
+                "op": c.opcode,
+                "wire_bytes": c.wire_bytes,
+                "group_size": c.group_size,
+                "axes": list(c.axes),
+                "count": c.count,
+            }
+            for c in cost.collectives
+        ],
+    }
+    if verbose:
+        print(
+            f"[{arch} × {shape_name} × {mesh_name}] compile {t_compile:.1f}s | "
+            f"peak/dev {record['memory_analysis']['peak_bytes_per_device']/2**30:.2f} GiB | "
+            f"flops/dev {cost.flops:.3g} | hbm/dev {cost.hbm_bytes:.3g} B | "
+            f"coll/dev {cost.collective_wire_bytes:.3g} B | "
+            f"dominant {report.dominant} | frac {report.roofline_fraction:.1%} "
+            f"| bw-frac {report.bw_fraction:.1%}"
+        )
+        print("  memory_analysis:", ma)
+    return record, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod-only", action="store_true")
+    ap.add_argument("--singlepod-only", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf-winning per-cell configs")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multipod_only:
+        meshes.append(False)
+    if not args.singlepod_only:
+        meshes.append(True)
+
+    records = []
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            ok, why = shape_applicable(arch, shape_name)
+            if not ok:
+                for mp in meshes:
+                    records.append({
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "skipped", "reason": why,
+                    })
+                print(f"[{arch} × {shape_name}] SKIP: {why}")
+                continue
+            for mp in meshes:
+                try:
+                    overrides = (
+                        OPTIMIZED_CELLS.get((arch, shape_name), {})
+                        if args.optimized else {}
+                    )
+                    rec, _ = lower_cell(
+                        arch, shape_name, multi_pod=mp, **overrides
+                    )
+                    records.append(rec)
+                except Exception as e:
+                    failures += 1
+                    traceback.print_exc()
+                    records.append({
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "failed", "error": f"{type(e).__name__}: {e}",
+                    })
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {failures} failed -> {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Axis semantics (see DESIGN.md §4): ``model`` = tensor/expert parallelism
+(highest collective volume — lives on the fastest ICI axis), ``data`` =
+data/FSDP parallelism, ``pod`` = the DCN axis (gradient all-reduce once per
+step, or pipeline handoffs).  Functions, not module constants — importing
+this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_for(devices_shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests, benchmarks, elastic rescale)."""
+    return jax.make_mesh(
+        devices_shape,
+        axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_axes_dict(mesh) -> dict[str, int]:
+    return dict(mesh.shape)

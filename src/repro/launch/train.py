@@ -1,0 +1,134 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires together the whole stack: mesh, model bundle, placement policy (from
+the planner unless forced), data pipeline with prefetch, fault-tolerant
+supervisor with async checkpoints and straggler monitoring.  On this CPU
+container it runs the smoke-scale configs end-to-end; on a TPU fleet the
+same file is the per-process entry point (jax.distributed handles the
+process group; the mesh helper sizes itself from jax.device_count()).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, smoke_config
+from repro.core.placement import POLICIES
+from repro.core.planner import plan, train_profile
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.launch.mesh import make_mesh_for
+from repro.models.model_zoo import ModelBundle
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import Supervisor, SupervisorConfig
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+def pick_policy(bundle: ModelBundle, num_chips: int, name: str | None):
+    if name:
+        return POLICIES[name]
+    prof = train_profile(
+        name=bundle.cfg.name,
+        param_bytes=bundle.cfg.num_params() * 2,
+        step_flops=bundle.model_flops(
+            type("S", (), {"mode": "train", "global_batch": 8, "seq_len": 128})()
+        ),
+        activation_bytes=1e6,
+        num_chips=num_chips,
+    )
+    best, preds = plan(prof)
+    for p in preds:
+        log.info("planner: %s", p.explain())
+    log.info("planner picked %s", best.policy)
+    return POLICIES[best.policy]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="1x1",
+                    help="e.g. 2x2x2 -> (pod,data,model); 4x2 -> (data,model)")
+    ap.add_argument("--policy", default=None, choices=[None, *POLICIES])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):] if len(dims) > 1 else ("data",)
+    mesh = make_mesh_for(dims, axes)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    bundle = ModelBundle(cfg)
+    policy = pick_policy(bundle, mesh.devices.size, args.policy)
+
+    tcfg = TrainConfig(
+        remat=args.remat,
+        n_microbatches=args.microbatches,
+        compress_pod_grads=args.compress_pod_grads,
+        optimizer=AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5 + 1)),
+    )
+    params, opt_state, ef = init_train_state(
+        bundle, mesh, jax.random.PRNGKey(0), tcfg, policy
+    )
+    step_fn = jax.jit(
+        make_train_step(bundle, mesh, tcfg, policy), donate_argnums=(0, 1)
+    )
+
+    data = SyntheticLM(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch),
+        process_index=jax.process_index(),
+        process_count=jax.process_count(),
+    )
+    it = Prefetcher(data)
+
+    ckpt = Checkpointer(args.ckpt_dir)
+    sup = Supervisor(ckpt, SupervisorConfig(checkpoint_every=args.ckpt_every))
+
+    state = {"params": params, "opt": opt_state, "ef": ef}
+    losses = []
+
+    def one_step(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, e, metrics = step_fn(
+            state["params"], state["opt"], state["ef"], batch
+        )
+        losses.append(float(metrics["loss"]))
+        if len(losses) % args.log_every == 0:
+            log.info(
+                "step %d loss %.4f grad_norm %.3f",
+                len(losses), losses[-1], float(metrics["grad_norm"]),
+            )
+        return {"params": p, "opt": o, "ef": e}, metrics
+
+    state, step = sup.run(
+        state, one_step, it, args.steps, extra_state=lambda: {"data": data.state()}
+    )
+    it.close()
+    log.info(
+        "done: %d steps, loss %.4f -> %.4f, straggler stats %s",
+        step, losses[0] if losses else float("nan"),
+        losses[-1] if losses else float("nan"), sup.monitor.summary(),
+    )
+
+
+if __name__ == "__main__":
+    main()

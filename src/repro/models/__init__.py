@@ -1,0 +1,13 @@
+"""Model zoo: all 10 assigned architectures as composable JAX modules."""
+
+from repro.models.model_zoo import ModelBundle, get_bundle, get_smoke_bundle  # noqa: F401
+from repro.models.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    Param,
+    defs_to_shapes,
+    defs_to_specs,
+    materialize,
+    shard,
+    spec_for,
+    use_sharding,
+)

@@ -1,0 +1,362 @@
+"""Attention blocks: GQA (+sliding/chunked/global variants) and MLA.
+
+Three execution paths per block, matching the assigned shapes:
+
+* ``train``    — full-sequence causal/windowed attention, differentiable;
+* ``prefill``  — same math, also materializes the KV cache;
+* ``decode``   — one token against the cache (flash-decode datapath).
+
+MLA (DeepSeek-V2) caches the 512-dim latent + shared rope key and uses the
+**absorbed** decode formulation (q absorbed through W_uk, output through
+W_uv) so decode reads scale with kv_lora, not heads — the architecture-level
+version of the paper's "shrink what you must stream" lesson.
+
+Sliding-window layers keep a **ring-buffer cache of size window** (order
+does not matter to softmax; masking handles validity) — ``long_500k``
+memory for gemma3 local layers is O(window), not O(seq).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import AttentionSpec
+from repro.kernels import ops
+from repro.models.layers import rope
+from repro.models.sharding import Param, shard
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def attention_defs(d_model: int, spec: AttentionSpec) -> dict:
+    if spec.kind == "mla":
+        qk_head = spec.nope_head_dim + spec.rope_head_dim
+        defs = {
+            "w_kv_a": Param((d_model, spec.kv_lora), ("embed", "lora")),
+            "w_k_rope": Param((d_model, spec.rope_head_dim), ("embed", None)),
+            "w_k_b": Param(
+                (spec.kv_lora, spec.n_heads, spec.nope_head_dim),
+                ("lora", "heads", "head_dim"),
+            ),
+            "w_v_b": Param(
+                (spec.kv_lora, spec.n_heads, spec.v_head_dim),
+                ("lora", "heads", "head_dim"),
+            ),
+            "w_o": Param(
+                (spec.n_heads, spec.v_head_dim, d_model),
+                ("heads", "head_dim", "embed"),
+            ),
+        }
+        if spec.q_lora:
+            defs["w_q_a"] = Param((d_model, spec.q_lora), ("embed", "lora"))
+            defs["w_q_b"] = Param(
+                (spec.q_lora, spec.n_heads, qk_head),
+                ("lora", "heads", "head_dim"),
+            )
+        else:
+            defs["w_q"] = Param(
+                (d_model, spec.n_heads, qk_head),
+                ("embed", "heads", "head_dim"),
+            )
+        return defs
+
+    defs = {
+        "w_q": Param(
+            (d_model, spec.n_heads, spec.d_head),
+            ("embed", "heads", "head_dim"),
+        ),
+        "w_k": Param(
+            (d_model, spec.n_kv_heads, spec.d_head),
+            ("embed", "kv_heads", "head_dim"),
+        ),
+        "w_v": Param(
+            (d_model, spec.n_kv_heads, spec.d_head),
+            ("embed", "kv_heads", "head_dim"),
+        ),
+        "w_o": Param(
+            (spec.n_heads, spec.d_head, d_model),
+            ("heads", "head_dim", "embed"),
+        ),
+    }
+    if spec.qk_norm:
+        defs["q_norm"] = Param((spec.d_head,), (None,), init="ones")
+        defs["k_norm"] = Param((spec.d_head,), (None,), init="ones")
+    return defs
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mask_kind(code: str) -> str:
+    return {"F": "causal", "G": "causal", "L": "sliding", "C": "chunked",
+            "X": "bidirectional"}[code]
+
+
+def _theta(spec: AttentionSpec, code: str) -> float:
+    if code == "G" and spec.rope_theta_global:
+        return spec.rope_theta_global
+    return spec.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# Cache defs
+# ---------------------------------------------------------------------------
+
+def cache_defs(
+    batch: int, max_len: int, spec: AttentionSpec, code: str = "F"
+) -> dict:
+    """Per-layer decode-cache defs (Param reused as a shaped placeholder)."""
+    if spec.kind == "mla":
+        return {
+            "ckv": Param(
+                (batch, max_len, spec.kv_lora),
+                ("batch", "kv_seq", "lora"), init="zeros",
+            ),
+            "krope": Param(
+                (batch, max_len, spec.rope_head_dim),
+                ("batch", "kv_seq", None), init="zeros",
+            ),
+        }
+    size = min(max_len, spec.window) if code == "L" and spec.window else max_len
+    if code == "C" and spec.chunk:
+        size = min(max_len, 2 * spec.chunk)  # ring over current+prev chunk
+    return {
+        "k": Param(
+            (batch, spec.n_kv_heads, size, spec.d_head),
+            ("batch", "kv_heads", "kv_seq", "head_dim"), init="zeros",
+        ),
+        "v": Param(
+            (batch, spec.n_kv_heads, size, spec.d_head),
+            ("batch", "kv_heads", "kv_seq", "head_dim"), init="zeros",
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Apply: GQA
+# ---------------------------------------------------------------------------
+
+def _gqa_project(params, x, spec, positions, code):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["w_v"])
+    if spec.qk_norm:
+        q = _rms(q, params["q_norm"])
+        k = _rms(k, params["k_norm"])
+    th = _theta(spec, code)
+    q = rope(q, positions, th)
+    k = rope(k, positions, th)
+    # NOTE: deliberately not "seq"-sharded here.  Under sequence-parallel
+    # rules x is seq-sharded at layer boundaries; attention needs the full
+    # sequence per head, so q/k/v carry head sharding only — the implied
+    # reshard is the Megatron-SP all-gather.  Seq-sharding KV when
+    # kv_heads < TP degree trips XLA involuntary full rematerialization
+    # against the q-chunked attention loop (observed on yi-6b: 16 GiB
+    # replication copies in the backward).
+    q = shard(q, "batch", "heads", None, "head_dim")
+    k = shard(k, "batch", "kv_heads", None, "head_dim")
+    v = shard(v, "batch", "kv_heads", None, "head_dim")
+    return q, k, v
+
+
+def gqa_train(params, x, spec: AttentionSpec, code: str):
+    """Full-sequence attention; x (B,S,D)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _gqa_project(params, x, spec, positions, code)
+    o = ops.attention(
+        q, k, v,
+        kind=_mask_kind(code), window=spec.window, chunk=spec.chunk,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
+    return shard(out, "batch", "seq", "embed")
+
+
+def gqa_prefill(params, x, cache, spec: AttentionSpec, code: str):
+    """Train-path attention + cache fill. Returns (out, cache)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _gqa_project(params, x, spec, positions, code)
+    o = ops.attention(
+        q, k, v,
+        kind=_mask_kind(code), window=spec.window, chunk=spec.chunk,
+    )
+    size = cache["k"].shape[2]
+    if size >= S:
+        kpad = jnp.zeros_like(cache["k"]).at[:, :, :S].set(
+            k.astype(cache["k"].dtype))
+        vpad = jnp.zeros_like(cache["v"]).at[:, :, :S].set(
+            v.astype(cache["v"].dtype))
+    else:
+        # ring cache keeps the last `size` positions; ring index = pos % size
+        # S % size == 0 for our window/chunk sizes, so the tail maps cleanly.
+        kpad = k[:, :, -size:].astype(cache["k"].dtype)
+        vpad = v[:, :, -size:].astype(cache["v"].dtype)
+    cache = {"k": kpad, "v": vpad}
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
+    return shard(out, "batch", "seq", "embed"), cache
+
+
+def gqa_decode(params, x, cache, lengths, spec: AttentionSpec, code: str):
+    """One-token decode; x (B,1,D); lengths (B,) tokens already cached."""
+    B = x.shape[0]
+    positions = lengths[:, None, None]           # (B,1,1) for (B,H,1,dh)
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["w_v"])
+    if spec.qk_norm:
+        q = _rms(q, params["q_norm"])
+        k = _rms(k, params["k_norm"])
+    th = _theta(spec, code)
+    q = rope(q, positions, th)[:, :, 0]          # (B,H,D)
+    k = rope(k, positions, th)[:, :, 0]          # (B,Hkv,D)
+    v = v[:, :, 0]
+
+    size = cache["k"].shape[2]
+    slot = (lengths % size).astype(jnp.int32)    # ring index
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, :, slot].set(k.astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, :, slot].set(v.astype(cache["v"].dtype))
+
+    if code == "L" and spec.window:
+        valid = jnp.minimum(lengths + 1, size)
+    elif code == "C" and spec.chunk:
+        # entries in the current chunk (ring holds 2 chunks; mask the rest)
+        valid = (lengths % spec.chunk) + 1
+        # ring layout: we mask by recency -> approximate with ring validity
+        valid = jnp.minimum(valid, size)
+    else:
+        valid = jnp.minimum(lengths + 1, size)
+    o = ops.decode_attention(q, k_cache, v_cache, valid)
+    out = jnp.einsum("bhk,hkd->bd", o, params["w_o"])[:, None]
+    return shard(out, "batch", "seq", "embed"), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Apply: MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, x, spec, positions):
+    if "w_q_a" in params:
+        qa = jnp.einsum("bsd,dr->bsr", x, params["w_q_a"])
+        q = jnp.einsum("bsr,rhk->bhsk", qa, params["w_q_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["w_q"])
+    qn = q[..., : spec.nope_head_dim]
+    qr = rope(q[..., spec.nope_head_dim:], positions, spec.rope_theta)
+    return qn, qr
+
+
+def mla_train(params, x, spec: AttentionSpec, code: str = "F"):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    qn, qr = _mla_q(params, x, spec, positions)
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_kv_a"])
+    kr = rope(
+        jnp.einsum("bsd,dk->bsk", x, params["w_k_rope"])[:, None],
+        positions, spec.rope_theta,
+    )                                             # (B,1,S,rope)
+    kn = jnp.einsum("bsr,rhk->bhsk", ckv, params["w_k_b"])
+    v = jnp.einsum("bsr,rhk->bhsk", ckv, params["w_v_b"])
+    q = jnp.concatenate([qn, qr], -1)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr, (*kn.shape[:-1], spec.rope_head_dim))], -1
+    )
+    q = shard(q, "batch", "heads", "seq", "head_dim")
+    k = shard(k, "batch", "heads", "seq", "head_dim")
+    v = shard(v, "batch", "heads", "seq", "head_dim")
+    o = ops.attention(q, k, v, kind="causal")
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
+    return shard(out, "batch", "seq", "embed")
+
+
+def mla_prefill(params, x, cache, spec: AttentionSpec, code: str = "F"):
+    B, S, _ = x.shape
+    out = mla_train(params, x, spec, code)
+    positions = jnp.arange(S)[None, :]
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_kv_a"])
+    kr = rope(
+        jnp.einsum("bsd,dk->bsk", x, params["w_k_rope"]),
+        positions, spec.rope_theta,
+    )
+    Smax = cache["ckv"].shape[1]
+    cache = {
+        "ckv": jnp.zeros_like(cache["ckv"]).at[:, :S].set(
+            ckv.astype(cache["ckv"].dtype)),
+        "krope": jnp.zeros_like(cache["krope"]).at[:, :S].set(
+            kr.astype(cache["krope"].dtype)),
+    }
+    return out, cache
+
+
+def mla_decode(params, x, cache, lengths, spec: AttentionSpec, code: str = "F"):
+    """Absorbed MLA decode: reads scale with kv_lora, not n_heads*d_head."""
+    B = x.shape[0]
+    pos4 = lengths[:, None, None]                   # for (B,H,1,dh)
+    qn, qr = _mla_q(params, x, spec, pos4)          # (B,H,1,*)
+    qn, qr = qn[:, :, 0], qr[:, :, 0]               # (B,H,nope/rope)
+
+    ckv_new = jnp.einsum("bsd,dr->bsr", x, params["w_kv_a"])[:, 0]
+    kr_new = rope(
+        jnp.einsum("bsd,dk->bsk", x, params["w_k_rope"]),
+        lengths[:, None], spec.rope_theta,
+    )[:, 0]
+
+    bidx = jnp.arange(B)
+    Smax = cache["ckv"].shape[1]
+    slot = jnp.minimum(lengths, Smax - 1)
+    ckv = cache["ckv"].at[bidx, slot].set(ckv_new.astype(cache["ckv"].dtype))
+    kr = cache["krope"].at[bidx, slot].set(kr_new.astype(cache["krope"].dtype))
+
+    # absorb: q_eff[b,h,r] = sum_k qn[b,h,k] * w_k_b[r,h,k]
+    # NOTE: the streamed buffer (ckv/kr, the per-token read of the whole
+    # cache) stays in its STORAGE dtype through the einsums; upcasting the
+    # operand would make XLA hoist an f32 convert of the entire stacked
+    # cache out of the decode loop (observed: 3 GB/device buffers + 2x
+    # cache HBM traffic).  f32 accumulation via preferred_element_type.
+    q_abs = jnp.einsum("bhk,rhk->bhr", qn, params["w_k_b"]).astype(ckv.dtype)
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhk,bsk->bhs", qr.astype(kr.dtype), kr,
+                     preferred_element_type=jnp.float32)
+    ) * ((spec.nope_head_dim + spec.rope_head_dim) ** -0.5)
+    valid = jnp.arange(Smax)[None, :] < jnp.minimum(lengths + 1, Smax)[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", p, ckv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bhr,rhk->bhk", ctx, params["w_v_b"])
+    out = jnp.einsum("bhk,hkd->bd", o, params["w_o"])[:, None]
+    return shard(out, "batch", "seq", "embed"), {"ckv": ckv, "krope": kr}
+
+
+# ---------------------------------------------------------------------------
+# Unified dispatch
+# ---------------------------------------------------------------------------
+
+def attn_train(params, x, spec, code):
+    if spec.kind == "mla":
+        return mla_train(params, x, spec, code)
+    return gqa_train(params, x, spec, code)
+
+
+def attn_prefill(params, x, cache, spec, code):
+    if spec.kind == "mla":
+        return mla_prefill(params, x, cache, spec, code)
+    return gqa_prefill(params, x, cache, spec, code)
+
+
+def attn_decode(params, x, cache, lengths, spec, code):
+    if spec.kind == "mla":
+        return mla_decode(params, x, cache, lengths, spec, code)
+    return gqa_decode(params, x, cache, lengths, spec, code)

@@ -1,0 +1,197 @@
+"""Encoder-decoder transformer (SeamlessM4T backbone).
+
+The modality frontend is a STUB per the task: the encoder consumes
+precomputed frame embeddings from ``input_specs``.  Decode caches both the
+decoder self-attention KV and the *precomputed cross-attention KV* (the
+encoder memory is projected once at prefill — the read-mostly buffer whose
+placement bench_llm_inference studies).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_embed,
+    apply_head,
+    apply_mlp,
+    apply_norm,
+    embed_defs,
+    head_defs,
+    mlp_defs,
+    norm_defs,
+)
+from repro.models.sharding import Param, shard, stack_defs
+
+
+def _enc_layer_defs(cfg: ArchConfig) -> dict:
+    return {
+        "attn_norm": norm_defs(cfg.d_model, cfg.norm),
+        "attn": attn.attention_defs(cfg.d_model, cfg.attention),
+        "mlp_norm": norm_defs(cfg.d_model, cfg.norm),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_layer_defs(cfg: ArchConfig) -> dict:
+    return {
+        "self_norm": norm_defs(cfg.d_model, cfg.norm),
+        "self_attn": attn.attention_defs(cfg.d_model, cfg.attention),
+        "cross_norm": norm_defs(cfg.d_model, cfg.norm),
+        "cross_attn": attn.attention_defs(cfg.d_model, cfg.attention),
+        "mlp_norm": norm_defs(cfg.d_model, cfg.norm),
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_defs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": embed_defs(cfg.vocab, cfg.d_model),
+        "head": head_defs(cfg.vocab, cfg.d_model, cfg.tie_embeddings),
+        "enc_final_norm": norm_defs(cfg.d_model, cfg.norm),
+        "dec_final_norm": norm_defs(cfg.d_model, cfg.norm),
+        "encoder": stack_defs(_enc_layer_defs(cfg), cfg.n_encoder_layers),
+        "decoder": stack_defs(_dec_layer_defs(cfg), cfg.n_layers),
+    }
+
+
+def encdec_cache_defs(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    a = cfg.attention
+    cross = {
+        "k": Param(
+            (batch, a.n_kv_heads, cfg.frontend_tokens, a.d_head),
+            ("batch", "kv_heads", None, "head_dim"), init="zeros",
+        ),
+        "v": Param(
+            (batch, a.n_kv_heads, cfg.frontend_tokens, a.d_head),
+            ("batch", "kv_heads", None, "head_dim"), init="zeros",
+        ),
+    }
+    layer = {
+        "self": attn.cache_defs(batch, max_len, a, "F"),
+        "cross": cross,
+    }
+    return {"decoder": stack_defs(layer, cfg.n_layers)}
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder memory."""
+    x = shard(frames, "batch", "seq", "embed")
+
+    def body(x, lp):
+        h = apply_norm(lp["attn_norm"], x, cfg.norm)
+        x = x + attn.gqa_train(lp["attn"], h, cfg.attention, "X")
+        h = apply_norm(lp["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(lp["mlp"], h, cfg.act)
+        return shard(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def _cross_kv(lp, memory):
+    k = jnp.einsum("bsd,dhk->bhsk", memory, lp["w_k"])
+    v = jnp.einsum("bsd,dhk->bhsk", memory, lp["w_v"])
+    return k, v
+
+
+def _cross_attend(lp, x, k, v):
+    q = jnp.einsum("bsd,dhk->bhsk", x, lp["w_q"])
+    o = ops.attention(q, k, v, kind="bidirectional")
+    return jnp.einsum("bhsk,hkd->bsd", o, lp["w_o"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def decode_train(params, tokens, memory, cfg: ArchConfig):
+    """Teacher-forced decoder -> logits (B, S_dec, vocab)."""
+    x = apply_embed(params["embed"], tokens)
+
+    def body(x, lp):
+        h = apply_norm(lp["self_norm"], x, cfg.norm)
+        x = x + attn.gqa_train(lp["self_attn"], h, cfg.attention, "F")
+        h = apply_norm(lp["cross_norm"], x, cfg.norm)
+        k, v = _cross_kv(lp["cross_attn"], memory)
+        x = x + _cross_attend(lp["cross_attn"], h, k, v)
+        h = apply_norm(lp["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(lp["mlp"], h, cfg.act)
+        return shard(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    return apply_head(params["head"], params["embed"], x)
+
+
+def encdec_train_loss(params, frames, tokens, labels, cfg: ArchConfig):
+    from repro.models.layers import cross_entropy
+
+    memory = encode(params, frames, cfg)
+    logits = decode_train(params, tokens, memory, cfg)
+    loss = cross_entropy(logits, labels)
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def encdec_prefill(params, frames, tokens, caches, cfg: ArchConfig):
+    """Encode + teacher-forced prompt + cache fill."""
+    memory = encode(params, frames, cfg)
+    x = apply_embed(params["embed"], tokens)
+
+    def body(x, slices):
+        lp, cache = slices
+        h = apply_norm(lp["self_norm"], x, cfg.norm)
+        out, self_c = attn.gqa_prefill(
+            lp["self_attn"], h, cache["self"], cfg.attention, "F"
+        )
+        x = x + out
+        k, v = _cross_kv(lp["cross_attn"], memory)
+        h = apply_norm(lp["cross_norm"], x, cfg.norm)
+        x = x + _cross_attend(lp["cross_attn"], h, k, v)
+        h = apply_norm(lp["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(lp["mlp"], h, cfg.act)
+        x = shard(x, "batch", "seq", "embed")
+        return x, {"self": self_c, "cross": {"k": k, "v": v}}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["decoder"], caches["decoder"])
+    )
+    x = apply_norm(params["dec_final_norm"], x[:, -1:], cfg.norm)
+    logits = apply_head(params["head"], params["embed"], x)
+    return logits[:, 0], {"decoder": new_cache}
+
+
+def encdec_decode_step(params, tokens, caches, lengths, cfg: ArchConfig):
+    """One decoder step against self+cross caches; tokens (B,1)."""
+    x = apply_embed(params["embed"], tokens)
+
+    def body(x, slices):
+        lp, cache = slices
+        h = apply_norm(lp["self_norm"], x, cfg.norm)
+        out, self_c = attn.gqa_decode(
+            lp["self_attn"], h, cache["self"], lengths, cfg.attention, "F"
+        )
+        x = x + out
+        h = apply_norm(lp["cross_norm"], x, cfg.norm)
+        x = x + _cross_attend(
+            lp["cross_attn"], h, cache["cross"]["k"], cache["cross"]["v"]
+        )
+        h = apply_norm(lp["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(lp["mlp"], h, cfg.act)
+        x = shard(x, "batch", "seq", "embed")
+        return x, {"self": self_c, "cross": cache["cross"]}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["decoder"], caches["decoder"])
+    )
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    logits = apply_head(params["head"], params["embed"], x)
+    return logits[:, 0], {"decoder": new_cache}

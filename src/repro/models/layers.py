@@ -1,0 +1,172 @@
+"""Shared layers: norms, embeddings, RoPE, gated MLP, logits head.
+
+Everything is a (param-defs builder, apply fn) pair over plain dict
+pytrees; compute is bf16 with f32 normalization statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import Param, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": Param((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        return {
+            "scale": Param((d,), ("embed",), init="ones"),
+            "bias": Param((d,), ("embed",), init="zeros"),
+        }
+    if kind == "nonparametric":
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm / olmo's non-parametric layernorm
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + logits
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int) -> dict:
+    return {"embedding": Param((vocab, d), ("vocab", "embed"), scale=0.02)}
+
+
+def apply_embed(params: dict, tokens: jax.Array, *, scale: bool = False):
+    e = params["embedding"]
+    out = jnp.take(e, tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(e.shape[1] ** 0.5, out.dtype)
+    return shard(out, "batch", "seq", "embed")
+
+
+def head_defs(vocab: int, d: int, tied: bool) -> dict:
+    if tied:
+        return {}
+    return {"unembed": Param((d, vocab), ("embed", "vocab"))}
+
+
+def apply_head(params: dict, embed_params: dict, x: jax.Array):
+    """Final logits; vocab dim sharded over 'model' (Megatron head)."""
+    if "unembed" in params:
+        w = params["unembed"]
+    else:
+        w = embed_params["embedding"].T
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, w, preferred_element_type=jnp.float32
+    )
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float):
+    """Apply rotary embedding.
+
+    x: (..., S, D) with D even; positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (GLU family)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, ff: int) -> dict:
+    return {
+        "w_gate": Param((d, ff), ("embed", "d_ff")),
+        "w_up": Param((d, ff), ("embed", "d_ff")),
+        "w_down": Param((ff, d), ("d_ff", "embed")),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array, act: str = "silu"):
+    actfn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = shard(actfn(g) * u, "batch", "seq", "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return shard(out, "batch", "seq", "embed")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; logits (B,S,V) f32, labels (B,S) int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def fused_cross_entropy(
+    params: dict,
+    embed_params: dict,
+    x: jax.Array,            # (B, S, d) final hidden states
+    labels: jax.Array,       # (B, S)
+    block: int = 512,
+) -> jax.Array:
+    """Head projection fused into a seq-chunked CE.
+
+    Never materializes the full (B, S, V) f32 logits — at vocab 202k that
+    tensor chain is ~15 GiB/device (observed on llama4) — one (B, block, V)
+    slab lives at a time, rematerialized in the backward.  The projection
+    keeps the unembed in bf16 with f32 accumulation, and the vocab dim
+    keeps its Megatron sharding (logsumexp/gather reduce over it).
+    """
+    if "unembed" in params:
+        w = params["unembed"]                        # (d, V)
+    else:
+        w = embed_params["embedding"].T
+    B, S, d = x.shape
+    blk = min(block, S)
+    if S % blk:
+        blk = S
+    nblocks = S // blk
+
+    @jax.checkpoint
+    def one(i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * blk, blk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * blk, blk, axis=1)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xs, w, preferred_element_type=jnp.float32
+        )
+        logits = shard(logits, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    total = jnp.sum(jax.lax.map(one, jnp.arange(nblocks)))
+    return total / (B * S)

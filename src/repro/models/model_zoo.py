@@ -1,0 +1,151 @@
+"""Unified model bundle: one object per architecture, four entry points.
+
+``ModelBundle`` is what the launcher, dry-run, trainer, server, tests and
+benchmarks all consume: param/cache/input *defs* (shape+sharding
+declarations — materializable as arrays, ShapeDtypeStructs, or
+NamedShardings) plus the jit-able ``train_loss`` / ``prefill`` /
+``decode_step`` functions, plus the analytic MODEL_FLOPS used by the
+roofline's useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeSpec, get_config
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.multimodal import frontend_embeds, frontend_input_defs
+from repro.models.sharding import Param, materialize
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+
+    # -- defs ----------------------------------------------------------------
+    def param_defs(self):
+        if self.cfg.family == "audio" and self.cfg.n_encoder_layers:
+            return encdec_mod.encdec_defs(self.cfg)
+        return tf_mod.lm_defs(self.cfg)
+
+    def cache_defs(self, batch: int, max_len: int):
+        if self.cfg.family == "audio" and self.cfg.n_encoder_layers:
+            return encdec_mod.encdec_cache_defs(self.cfg, batch, max_len)
+        return tf_mod.lm_cache_defs(self.cfg, batch, max_len)
+
+    def input_defs(self, shape: ShapeSpec) -> dict:
+        """Batch-input defs for one assigned (shape) cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        enc_dec = cfg.family == "audio" and cfg.n_encoder_layers > 0
+        text_len = S if enc_dec else S - cfg.frontend_tokens
+        toks = ("batch", "seq")
+
+        if shape.mode == "train":
+            d = {
+                "tokens": Param((B, text_len), toks, dtype="int32"),
+                "labels": Param((B, text_len), toks, dtype="int32"),
+            }
+            d.update(frontend_input_defs(cfg, B))
+            return d
+        if shape.mode == "prefill":
+            d = {"tokens": Param((B, text_len), toks, dtype="int32")}
+            d.update(frontend_input_defs(cfg, B))
+            return d
+        # decode: one new token against a cache of S entries
+        return {
+            "tokens": Param((B, 1), toks, dtype="int32"),
+            "lengths": Param((B,), ("batch",), dtype="int32"),
+        }
+
+    def decode_cache_len(self, shape: ShapeSpec) -> int:
+        return shape.seq_len
+
+    # -- materialization -------------------------------------------------
+    def init_params(self, key, dtype=None):
+        return materialize(self.param_defs(), key, dtype or self.cfg.dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        defs = self.cache_defs(batch, max_len)
+        return materialize(defs, jax.random.PRNGKey(0), dtype or self.cfg.dtype)
+
+    # -- compute entry points ---------------------------------------------
+    def train_loss(self, params, batch: dict, *, remat: str = "full"):
+        cfg = self.cfg
+        if cfg.family == "audio" and cfg.n_encoder_layers:
+            return encdec_mod.encdec_train_loss(
+                params, batch["frame_embeds"], batch["tokens"],
+                batch["labels"], cfg,
+            )
+        return tf_mod.lm_loss(
+            params, batch["tokens"], batch["labels"], cfg,
+            extra_embeds=frontend_embeds(batch), remat=remat,
+        )
+
+    def prefill(self, params, batch: dict, caches):
+        cfg = self.cfg
+        if cfg.family == "audio" and cfg.n_encoder_layers:
+            return encdec_mod.encdec_prefill(
+                params, batch["frame_embeds"], batch["tokens"], caches, cfg
+            )
+        return tf_mod.lm_prefill(
+            params, batch["tokens"], caches, cfg,
+            extra_embeds=frontend_embeds(batch),
+        )
+
+    def decode_step(self, params, batch: dict, caches):
+        cfg = self.cfg
+        if cfg.family == "audio" and cfg.n_encoder_layers:
+            return encdec_mod.encdec_decode_step(
+                params, batch["tokens"], caches, batch["lengths"], cfg
+            )
+        return tf_mod.lm_decode_step(
+            params, batch["tokens"], caches, batch["lengths"], cfg
+        )
+
+    # -- analytics ---------------------------------------------------------
+    def model_bytes(self, shape: ShapeSpec) -> float:
+        """Bytes that must cross the HBM bus per step: one read of the
+        active parameters (+ the decode-state read for decode shapes)."""
+        itemsize = 2  # bf16
+        nbytes = self.cfg.active_params() * itemsize
+        if shape.mode == "decode":
+            nbytes += self.cache_bytes(shape)
+        return nbytes
+
+    def cache_bytes(self, shape: ShapeSpec) -> float:
+        import math as _m
+
+        defs = self.cache_defs(shape.global_batch, shape.seq_len)
+        leaves = jax.tree.leaves(
+            defs, is_leaf=lambda x: hasattr(x, "axes")
+        )
+        total = 0.0
+        for p in leaves:
+            width = 4 if p.dtype == "float32" else 2
+            total += _m.prod(p.shape) * width
+        return total
+
+    def model_flops(self, shape: ShapeSpec) -> float:
+        """MODEL_FLOPS per step: 6·N·D train (N=active for MoE), 2·N·D fwd."""
+        n = self.cfg.active_params()
+        if shape.mode == "train":
+            return 6.0 * n * shape.global_batch * shape.seq_len
+        if shape.mode == "prefill":
+            return 2.0 * n * shape.global_batch * shape.seq_len
+        return 2.0 * n * shape.global_batch  # one token per row
+
+
+def get_bundle(arch: str) -> ModelBundle:
+    return ModelBundle(get_config(arch))
+
+
+def get_smoke_bundle(arch: str) -> ModelBundle:
+    from repro.configs import smoke_config
+
+    return ModelBundle(smoke_config(arch))

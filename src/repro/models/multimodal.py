@@ -1,0 +1,36 @@
+"""Modality frontends — STUBS per the task assignment.
+
+``[audio]``/``[vlm]`` architectures specify the transformer BACKBONE only;
+``input_specs()`` provides precomputed frame/patch embeddings.  The defs
+here describe those stub inputs so the dry-run and smoke tests are
+shape-exact; a real InternViT / w2v-BERT frontend would produce arrays of
+exactly these shapes and plug in without touching the backbone.
+"""
+
+from __future__ import annotations
+
+from repro.configs import ArchConfig
+from repro.models.sharding import Param
+
+
+def frontend_input_defs(cfg: ArchConfig, batch: int) -> dict:
+    """Stub embedding inputs for a batch (empty for text-only archs)."""
+    if cfg.frontend == "none" or cfg.frontend_tokens == 0:
+        return {}
+    name = {"vision_stub": "patch_embeds", "audio_stub": "frame_embeds"}[
+        cfg.frontend
+    ]
+    return {
+        name: Param(
+            (batch, cfg.frontend_tokens, cfg.d_model),
+            ("batch", "seq", "embed"),
+        )
+    }
+
+
+def frontend_embeds(batch_inputs: dict):
+    """Extract the stub embedding array from a batch dict (or None)."""
+    for key in ("patch_embeds", "frame_embeds"):
+        if key in batch_inputs:
+            return batch_inputs[key]
+    return None

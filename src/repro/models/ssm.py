@@ -1,0 +1,182 @@
+"""Mamba-2 block (SSD) with train/prefill/decode paths.
+
+Train/prefill run the chunked SSD scan (kernels/ssd_scan oracle or Pallas);
+decode is the O(1) recurrence against the (conv, ssm) state cache — the SSM
+answer to the KV cache, and the reason ``long_500k`` is *runnable* for
+SSM/hybrid archs: decode-state bytes are constant in sequence length
+(the paper's Fig. 17 workload with the big read-mostly buffer designed
+away — we quantify exactly this in the roofline tables).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SSMSpec
+from repro.kernels import ops
+from repro.models.sharding import Param, shard
+
+SSD_CHUNK = 256
+
+
+def ssm_defs(d_model: int, spec: SSMSpec) -> dict:
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    conv_dim = di + 2 * n
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": Param(
+            (d_model, 2 * di + 2 * n + h), ("embed", "d_inner")
+        ),
+        "conv_w": Param((spec.d_conv, conv_dim), (None, "d_inner")),
+        "conv_b": Param((conv_dim,), ("d_inner",), init="zeros"),
+        "a_log": Param((h,), ("ssm_heads",), init="zeros"),
+        "dt_bias": Param((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": Param((h,), ("ssm_heads",), init="ones"),
+        "norm_scale": Param((di,), ("d_inner",), init="ones"),
+        "w_out": Param((di, d_model), ("d_inner", "embed")),
+    }
+
+
+def ssm_cache_defs(batch: int, d_model: int, spec: SSMSpec) -> dict:
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    return {
+        "conv": Param(
+            (batch, spec.d_conv - 1, di + 2 * n),
+            ("batch", None, "d_inner"), init="zeros",
+        ),
+        "ssm": Param(
+            (batch, h, spec.head_dim, n),
+            ("batch", "ssm_heads", None, "state"), init="zeros",
+            dtype="float32",   # recurrent state accumulates in f32
+        ),
+    }
+
+
+def _split(proj, di, n, h):
+    z = proj[..., :di]
+    xs = proj[..., di : 2 * di]
+    b = proj[..., 2 * di : 2 * di + n]
+    c = proj[..., 2 * di + n : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xs, b, c, dt
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = yz.astype(jnp.float32)
+    out = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_train(params, x, d_model: int, spec: SSMSpec):
+    """x: (B,S,d) -> (B,S,d)."""
+    B, S, _ = x.shape
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    p = spec.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xs, bmat, cmat, dt = _split(proj, di, n, h)
+
+    # causal depthwise conv over [x, B, C]
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc = shard(xbc, "batch", "seq", "d_inner")
+    pad = jnp.pad(xbc, ((0, 0), (spec.d_conv - 1, 0), (0, 0)))
+    kern = params["conv_w"]
+    conv = sum(
+        pad[:, i : i + S] * kern[i][None, None, :]
+        for i in range(spec.d_conv)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, h, p)
+    chunk = min(SSD_CHUNK, S)
+    y = ops.ssd_scan(xh, dt, A, bmat, cmat, chunk=chunk)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = shard(y, "batch", "seq", "d_inner")
+
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return shard(out, "batch", "seq", "embed")
+
+
+def ssm_prefill(params, x, cache, d_model: int, spec: SSMSpec):
+    """Train-path + final (conv, ssm) state capture."""
+    B, S, _ = x.shape
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    p = spec.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xs, bmat, cmat, dt = _split(proj, di, n, h)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_state = xbc[:, -(spec.d_conv - 1):, :]   # pre-activation window
+    pad = jnp.pad(xbc, ((0, 0), (spec.d_conv - 1, 0), (0, 0)))
+    kern = params["conv_w"]
+    conv = sum(
+        pad[:, i : i + S] * kern[i][None, None, :]
+        for i in range(spec.d_conv)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, h, p)
+    chunk = min(SSD_CHUNK, S)
+    y, state = ops.ssd_scan(
+        xh, dt, A, bmat, cmat, chunk=chunk, return_state=True
+    )
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = _gated_rmsnorm(y.reshape(B, S, di), z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    cache = {"conv": conv_state, "ssm": state.astype(jnp.float32)}
+    return shard(out, "batch", "seq", "embed"), cache
+
+
+def ssm_decode(params, x, cache, d_model: int, spec: SSMSpec):
+    """One-token step; x (B,1,d). Returns (out, cache)."""
+    B = x.shape[0]
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    p = spec.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x[:, 0:1], params["w_in"])[:, 0]
+    z, xs, bmat, cmat, dt = _split(proj, di, n, h)
+
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)      # (B, conv_dim)
+    window = jnp.concatenate(
+        [cache["conv"], xbc[:, None].astype(cache["conv"].dtype)], axis=1
+    )
+    kern = params["conv_w"]
+    conv = jnp.einsum("bkc,kc->bc", window, kern) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+
+    dtf = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, h, p)
+    y, new_state = ops.ssd_decode_step(xh, dtf, A, bmat, cmat, cache["ssm"])
+    y = y + params["d_skip"].astype(y.dtype)[None, :, None] * xh
+    y = _gated_rmsnorm(y.reshape(B, di), z, params["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])[:, None]
+    cache = {"conv": window[:, 1:], "ssm": new_state}
+    return shard(out, "batch", "seq", "embed"), cache

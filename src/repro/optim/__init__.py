@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compressed_grad_sync,
+    dequantize,
+    init_error_feedback,
+    quantize,
+    quantized_all_reduce,
+)

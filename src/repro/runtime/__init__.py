@@ -1,0 +1,2 @@
+from repro.runtime.straggler import StepTimeMonitor, StragglerConfig  # noqa: F401
+from repro.runtime.supervisor import Supervisor, SupervisorConfig  # noqa: F401

@@ -1,0 +1,7 @@
+from repro.train.train_step import (  # noqa: F401
+    TrainConfig,
+    init_train_state,
+    make_state_specs,
+    make_train_step,
+)
+from repro.train.pipeline_parallel import pipelined_forward  # noqa: F401

@@ -1,0 +1,237 @@
+"""Training step: value_and_grad + sharded AdamW + placement policies.
+
+Structure per step (paper-faithful baseline, then the optimization levers):
+
+* loss/grads under pjit — TP collectives on the ``model`` axis (ICI),
+  gradient reduction over ``data``(+``pod``) inserted by SPMD;
+* optional **microbatch accumulation**: grads of microbatch *i* are summed
+  while *i+1*'s forward runs — XLA's latency-hiding scheduler overlaps the
+  per-microbatch reduction with compute (the collective-overlap trick);
+* optional **cross-pod int8 compression** (optim/compression.py) applied to
+  the DCN-axis reduction inside a manual-``pod`` shard_map;
+* AdamW update with the placement policy's storage hooks (host-offloaded
+  master/moments stream through PCIe once per step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.placement import (
+    HBM_RESIDENT,
+    PlacementPolicy,
+    Role,
+    Strategy,
+)
+from repro.models.model_zoo import ModelBundle
+from repro.models.sharding import (
+    defs_to_specs,
+    spec_for,
+    use_sharding,
+)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+from repro.optim.compression import compressed_grad_sync, init_error_feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "full"             # none | full | dots
+    n_microbatches: int = 1
+    compress_pod_grads: bool = False
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    rules: dict | None = None       # sharding-rule overrides (hillclimb knob)
+    fsdp_axes: tuple = ("data",)    # ZeRO axes for optimizer state (+ params)
+    zero_stage: int = 3             # 3: shard params+opt; 1: opt only
+                                    # (ZeRO-1 drops the per-layer param
+                                    #  all-gathers at the cost of replicated
+                                    #  bf16 params across the data axis)
+
+
+def make_state_specs(
+    bundle: ModelBundle,
+    mesh: Mesh,
+    policy: PlacementPolicy = HBM_RESIDENT,
+    rules: dict | None = None,
+    fsdp_axes: tuple = ("data",),
+    zero_stage: int = 3,
+):
+    """NamedShardings for (params, opt_state) under the placement policy."""
+    defs = bundle.param_defs()
+    param_specs = defs_to_specs(
+        defs, mesh, rules, memory_kind=policy.memory_kind(Role.PARAMS),
+        fsdp_axes=fsdp_axes if zero_stage >= 3 else (),
+    )
+    opt_kind = policy.memory_kind(Role.OPT_STATE)
+    opt_member = defs_to_specs(
+        defs, mesh, rules, memory_kind=opt_kind, fsdp_axes=fsdp_axes
+    )
+    opt_specs = {
+        "master": opt_member,
+        "mu": opt_member,
+        "nu": opt_member,
+        "step": NamedSharding(mesh, P()),
+    }
+    return param_specs, opt_specs
+
+
+def _batch_spec(batch, mesh: Mesh, rules):
+    def one(x):
+        axes = ("batch",) + (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, spec_for(x.shape, axes, mesh, rules))
+
+    return jax.tree.map(one, batch)
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    mesh: Mesh,
+    tcfg: TrainConfig,
+    policy: PlacementPolicy = HBM_RESIDENT,
+):
+    """Returns a jit-able fn: (params, opt_state, ef, batch) ->
+    (params, opt_state, ef, metrics)."""
+
+    opt_on_host = policy.placement(Role.OPT_STATE).on_host
+    # expose the FSDP axes to model bodies through the rule table (used by
+    # shard_defs inside scan bodies) and keep specs consistent with it.
+    rules = dict(tcfg.rules or {})
+    rules["fsdp"] = tuple(tcfg.fsdp_axes) if tcfg.zero_stage >= 3 else ()
+    param_specs, _ = make_state_specs(
+        bundle, mesh, policy, rules, tcfg.fsdp_axes, tcfg.zero_stage
+    )
+    grad_specs = jax.tree.map(
+        lambda s: NamedSharding(mesh, s.spec), param_specs
+    )
+
+    def move(tree, kind: str):
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                x,
+                NamedSharding(
+                    mesh,
+                    spec_for(x.shape, (None,) * x.ndim, mesh, tcfg.rules),
+                    memory_kind=kind,
+                ),
+            )
+            if False else x,
+            tree,
+        )
+
+    # In-jit H2D (to_compute) lowers on every backend; the in-jit D2H
+    # return trip (to_storage) only lowers on TPU — elsewhere the state
+    # returns in device memory and repin_opt_state moves it back outside
+    # jit (same bytes over the same link, without the scheduler overlap).
+    in_jit_storage = jax.default_backend() == "tpu"
+
+    def to_compute(tree):
+        if not opt_on_host:
+            return tree
+        # host -> HBM, preserving each leaf's sharding spec
+        def mv(x):
+            s = getattr(x, "sharding", None)
+            spec = s.spec if isinstance(s, NamedSharding) else P()
+            return jax.device_put(
+                x, NamedSharding(mesh, spec, memory_kind="device")
+            )
+        return jax.tree.map(mv, tree)
+
+    def to_storage(tree):
+        if not opt_on_host or not in_jit_storage:
+            return tree
+        def mv(x):
+            s = getattr(x, "sharding", None)
+            spec = s.spec if isinstance(s, NamedSharding) else P()
+            return jax.device_put(
+                x, NamedSharding(mesh, spec, memory_kind="pinned_host")
+            )
+        return jax.tree.map(mv, tree)
+
+    def loss_fn(params, batch):
+        loss, metrics = bundle.train_loss(params, batch, remat=tcfg.remat)
+        return loss, metrics
+
+    def step(params, opt_state, ef, batch):
+        with use_sharding(mesh, rules):
+            if tcfg.n_microbatches > 1:
+                n = tcfg.n_microbatches
+
+                def micro(carry, mb):
+                    gsum, _ = carry
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True
+                    )(params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, metrics), loss
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]),
+                    batch,
+                )
+                (gsum, metrics), losses = jax.lax.scan(
+                    micro, (zeros, {"ce": 0.0, "aux": 0.0}), mbs
+                )
+                grads = jax.tree.map(lambda g: g / n, gsum)
+                loss = jnp.mean(losses)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, batch)
+
+            # pin gradient shardings to the (FSDP) param layout; without
+            # this XLA materializes full f32 replicated grad stacks before
+            # the optimizer (observed: 5.4 GiB/device all-gathers).
+            grads = jax.tree.map(
+                jax.lax.with_sharding_constraint, grads, grad_specs
+            )
+
+            if tcfg.compress_pod_grads:
+                grads, ef = compressed_grad_sync(grads, ef, mesh, "pod")
+
+            new_params, new_opt, opt_metrics = apply_updates(
+                params, grads, opt_state, tcfg.optimizer,
+                to_compute=to_compute, to_storage=to_storage,
+            )
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_opt, ef, out_metrics
+
+    return step
+
+
+def repin_opt_state(opt_state, opt_specs):
+    """Re-place optimizer state per its policy shardings OUTSIDE jit —
+    the CPU-backend path for host-offloaded state (no-op when shardings
+    already match, e.g. hbm_resident or TPU in-jit round-trip)."""
+    return jax.tree.map(jax.device_put, opt_state, opt_specs)
+
+
+def init_train_state(
+    bundle: ModelBundle,
+    mesh: Mesh,
+    key,
+    tcfg: TrainConfig,
+    policy: PlacementPolicy = HBM_RESIDENT,
+):
+    """Initialize params + optimizer state with policy placements applied."""
+    param_specs, opt_specs = make_state_specs(
+        bundle, mesh, policy, tcfg.rules, tcfg.fsdp_axes, tcfg.zero_stage
+    )
+    with use_sharding(mesh, tcfg.rules):
+        params = bundle.init_params(key)
+        params = jax.tree.map(jax.device_put, params, param_specs)
+        opt_state = init_opt_state(params)
+        opt_state = jax.tree.map(jax.device_put, opt_state, opt_specs)
+        ef = (
+            init_error_feedback(params)
+            if tcfg.compress_pod_grads
+            else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+        )
+    return params, opt_state, ef

@@ -1,0 +1,155 @@
+"""Property tests (hypothesis) for the datapath model — the paper's Fig. 3
+rules as machine-checked invariants — plus the planner's decision logic."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (
+    DEFAULT_SYSTEM,
+    Link,
+    MemoryTier,
+    PlacementPolicy,
+    Role,
+    WorkloadProfile,
+    bound_matrix,
+    collective_bound,
+    copy_bound,
+    migration_crossover_touches,
+    plan,
+    predict,
+    read_bound,
+    streaming_time,
+    wire_bytes,
+    write_bound,
+)
+from repro.core.placement import HBM_RESIDENT, OPT_HOST, POLICIES
+
+TIERS = [t for t in MemoryTier if t != MemoryTier.VMEM]
+tier_st = st.sampled_from(TIERS)
+
+
+class TestDatapathInvariants:
+    @given(tier_st)
+    def test_read_write_symmetric_bounds(self, tier):
+        # bounds are path properties; measured asymmetry is an efficiency
+        # effect (paper Fig. 9), never a bound effect.
+        assert read_bound(tier).bandwidth == write_bound(tier).bandwidth
+
+    @given(tier_st, tier_st)
+    def test_copy_bound_symmetric(self, a, b):
+        assert copy_bound(a, b).bandwidth == pytest.approx(
+            copy_bound(b, a).bandwidth
+        )
+
+    @given(tier_st, tier_st)
+    def test_copy_never_beats_slower_endpoint(self, a, b):
+        cb = copy_bound(a, b).bandwidth
+        assert cb <= read_bound(a).bandwidth + 1e-9
+        assert cb <= read_bound(b).bandwidth + 1e-9
+
+    @given(tier_st)
+    def test_same_tier_copy_halves(self, tier):
+        # the paper's central rule: a link traversed twice contributes at
+        # half bandwidth (DDR->DDR at 250 = C2C/2; here HBM->HBM = 819/2).
+        assert copy_bound(tier, tier).bandwidth == pytest.approx(
+            read_bound(tier).bandwidth / 2
+        )
+
+    def test_local_faster_than_peer_faster_than_remote(self):
+        # the locality ordering the paper measures (Figs. 7, 11)
+        assert (
+            read_bound(MemoryTier.HBM).bandwidth
+            > read_bound(MemoryTier.PEER_HBM).bandwidth
+            > read_bound(MemoryTier.REMOTE_HBM).bandwidth
+        )
+        assert (
+            read_bound(MemoryTier.HBM).latency
+            < read_bound(MemoryTier.PEER_HBM).latency
+            < read_bound(MemoryTier.REMOTE_HBM).latency
+        )
+
+    def test_limiting_link_identity(self):
+        assert read_bound(MemoryTier.HOST).limiting_link == Link.PCIE
+        assert read_bound(MemoryTier.PEER_HBM).limiting_link == Link.ICI
+        assert read_bound(MemoryTier.REMOTE_HBM).limiting_link == Link.DCN
+
+    @given(st.floats(1.0, 1e12), st.integers(2, 512))
+    def test_wire_bytes_bounds(self, payload, n):
+        ar = wire_bytes("all-reduce", payload, n)
+        ag = wire_bytes("all-gather", payload, n)
+        assert 0 <= ag < payload
+        assert ag <= ar <= 2 * payload
+        assert wire_bytes("all-reduce", payload, 1) == 0.0
+
+    @given(st.integers(2, 64))
+    def test_collective_bound_allreduce_is_half_gather(self, n):
+        ar = collective_bound(n, Link.ICI, "all_reduce")
+        ag = collective_bound(n, Link.ICI, "all_gather")
+        assert ar == pytest.approx(ag / 2)
+
+    def test_bound_matrix_shape(self):
+        m = bound_matrix("copy")
+        assert set(m) == {str(t) for t in TIERS}
+        assert m["hbm"]["hbm"] == pytest.approx(819 / 2, rel=1e-3)
+
+    @given(tier_st)
+    def test_migration_crossover_positive(self, tier):
+        x = migration_crossover_touches(tier)
+        if read_bound(tier).bandwidth < DEFAULT_SYSTEM.chip.hbm_bandwidth:
+            assert x > 0
+            # at crossover, streaming == migrate+resident (paper Fig. 4)
+            nbytes = 1e9
+            stream = streaming_time(nbytes, tier, touches=x)
+            migrate = (
+                nbytes / copy_bound(tier, MemoryTier.HBM).bandwidth
+                + streaming_time(nbytes, MemoryTier.HBM, touches=x)
+            )
+            assert stream == pytest.approx(migrate, rel=0.05)
+
+
+class TestPlanner:
+    def _profile(self, param_gb=1.0, flops=1e15):
+        return WorkloadProfile(
+            name="t",
+            flops=flops,
+            bytes_per_role={
+                Role.PARAMS: param_gb * 1e9,
+                Role.MASTER: 2 * param_gb * 1e9,
+                Role.OPT_STATE: 4 * param_gb * 1e9,
+            },
+            touches_per_role={
+                Role.PARAMS: 3, Role.MASTER: 2, Role.OPT_STATE: 2
+            },
+        )
+
+    def test_small_model_prefers_hbm(self):
+        best, _ = plan(self._profile(param_gb=0.5))
+        assert best.policy == "hbm_resident"
+
+    def test_oversized_model_offloads(self):
+        # 8 GB params -> 56 GB of state: hbm_resident does not fit 16 GB,
+        # opt_host (8+8=16... params+grads) borderline -> planner must not
+        # pick an infeasible policy.
+        best, preds = plan(self._profile(param_gb=4.0))
+        assert best.policy != "hbm_resident"
+        infeasible = {p.policy for p in preds if not p.fits}
+        assert "hbm_resident" in infeasible
+
+    def test_prediction_terms_positive(self):
+        p = predict(self._profile(), OPT_HOST)
+        assert p.pcie_s > 0 and p.hbm_s > 0 and p.compute_s > 0
+        assert p.step_s >= max(p.compute_s, p.pcie_s)
+
+    @given(st.floats(0.1, 8.0))
+    @settings(max_examples=20, deadline=None)
+    def test_offload_never_increases_hbm(self, gb):
+        prof = self._profile(param_gb=gb)
+        r = predict(prof, HBM_RESIDENT)
+        o = predict(prof, OPT_HOST)
+        assert o.hbm_bytes <= r.hbm_bytes
+
+    def test_policies_registry(self):
+        assert set(POLICIES) == {
+            "hbm_resident", "opt_host", "kv_host", "weights_stream"
+        }

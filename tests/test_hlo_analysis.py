@@ -1,0 +1,130 @@
+"""HLO analyzer tests: synthetic text fixtures + a real compiled module."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_analysis import (
+    analyze_hlo_text,
+    decode_replica_groups,
+    group_axes,
+    parse_hlo,
+    parse_shapes,
+    total_bytes,
+)
+
+SYNTHETIC = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %c = s32[] constant(0)
+  %x0 = f32[8,8]{1,0} constant({...})
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%c, %x0)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  %cp = f32[8,8]{1,0} collective-permute(%r), channel_id=2, source_target_pairs={{0,4},{4,0}}
+  ROOT %s = f32[] reduce(%cp, %c), dimensions={0,1}, to_apply=%add2
+}
+"""
+
+
+class TestShapeParsing:
+    def test_simple(self):
+        (s,) = parse_shapes("bf16[4,64,128]{2,1,0}")
+        assert s.dims == (4, 64, 128) and s.nbytes == 4 * 64 * 128 * 2
+
+    def test_tuple_with_comments(self):
+        shapes = parse_shapes(
+            "(s32[], bf16[2,2]{1,0}, /*index=5*/f32[3]{0})"
+        )
+        assert [x.dims for x in shapes] == [(), (2, 2), (3,)]
+        assert total_bytes("(s32[], f32[4]{0})") == 4 + 16
+
+    def test_scalar(self):
+        (s,) = parse_shapes("pred[]")
+        assert s.numel == 1 and s.nbytes == 1
+
+
+class TestSyntheticModule:
+    def test_trip_count_multiplies(self):
+        cost = analyze_hlo_text(SYNTHETIC, {"data": 2, "model": 4})
+        # dot: 2*8*8*8 flops, x10 trips
+        assert cost.flops == pytest.approx(2 * 8 * 8 * 8 * 10)
+
+    def test_collectives_attributed(self):
+        cost = analyze_hlo_text(SYNTHETIC, {"data": 2, "model": 4})
+        ops = {c.opcode: c for c in cost.collectives}
+        ar = ops["all-reduce"]
+        assert ar.count == 10
+        assert ar.group_size == 4 and ar.axes == ("model",)
+        # ring all-reduce wire: 2*(n-1)/n * payload
+        assert ar.wire_bytes == pytest.approx(
+            2 * 3 / 4 * 8 * 8 * 4 * 10
+        )
+        cp = ops["collective-permute"]
+        assert cp.axes == ("data",) and cp.count == 1
+
+    def test_replica_group_decoding(self):
+        g = decode_replica_groups("replica_groups=[2,4]<=[8]")
+        assert g == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        g = decode_replica_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+        assert g == [[0, 4], [1, 5], [2, 6], [3, 7]]
+        g = decode_replica_groups("replica_groups={{0,2},{1,3}}")
+        assert g == [[0, 2], [1, 3]]
+
+    def test_group_axes(self):
+        axes = {"pod": 2, "data": 2, "model": 2}
+        assert group_axes([[0, 1]], axes) == ("model",)
+        assert group_axes([[0, 2]], axes) == ("data",)
+        assert group_axes([[0, 4]], axes) == ("pod",)
+        assert group_axes([[0, 1, 2, 3]], axes) == ("data", "model")
+
+
+class TestRealModule:
+    def test_scan_matmul_exact_flops(self):
+        D, L = 64, 6
+
+        def f(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+            return y
+
+        x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+        ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        cost = analyze_hlo_text(compiled.as_text())
+        assert cost.flops == pytest.approx(2 * D**3 * L)
+        # XLA's own cost_analysis counts the body ONCE — document the gap
+        # (+ a couple of scalar loop-counter flops)
+        xla = compiled.cost_analysis()["flops"]
+        assert xla == pytest.approx(2 * D**3, abs=16)
+
+    def test_bytes_positive_and_bounded(self):
+        def f(a, b):
+            return jnp.dot(a, b)
+
+        a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        compiled = jax.jit(f).lower(a, a).compile()
+        cost = analyze_hlo_text(compiled.as_text())
+        nbytes = 128 * 128 * 4
+        assert cost.hbm_bytes >= 3 * nbytes  # 2 reads + 1 write minimum
+        assert cost.hbm_bytes <= 10 * nbytes

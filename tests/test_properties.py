@@ -1,0 +1,137 @@
+"""Hypothesis property tests on the model-math invariants."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+dims = st.sampled_from([16, 32, 64])
+
+
+class TestAttentionProperties:
+    @given(dims, st.integers(0, 2**31 - 1))
+    def test_output_in_value_hull(self, S, seed):
+        """Attention output is a convex combination of V rows: every output
+        coordinate lies within [min_k v, max_k v]."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (1, 2, S, 8))
+        k = jax.random.normal(ks[1], (1, 2, S, 8))
+        v = jax.random.normal(ks[2], (1, 2, S, 8))
+        out = np.asarray(ref.attention(q, k, v, kind="bidirectional"))
+        vmin = np.asarray(v).min(axis=2, keepdims=True)
+        vmax = np.asarray(v).max(axis=2, keepdims=True)
+        assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+    @given(dims, st.integers(0, 2**31 - 1))
+    def test_window_ge_seq_equals_causal(self, S, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (1, 2, S, 8)) for kk in ks)
+        a = ref.attention(q, k, v, kind="sliding", window=S)
+        b = ref.attention(q, k, v, kind="causal")
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    @given(dims, st.integers(0, 2**31 - 1))
+    def test_chunk_ge_seq_equals_causal(self, S, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (1, 2, S, 8)) for kk in ks)
+        a = ref.attention(q, k, v, kind="chunked", chunk=S)
+        b = ref.attention(q, k, v, kind="causal")
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_first_token_attends_only_itself(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (jax.random.normal(kk, (1, 1, 8, 4)) for kk in ks)
+        out = ref.attention(q, k, v, kind="causal")
+        np.testing.assert_allclose(
+            np.asarray(out)[:, :, 0], np.asarray(v)[:, :, 0], atol=1e-6
+        )
+
+    @given(st.integers(1, 16), st.integers(0, 2**31 - 1))
+    def test_decode_respects_lengths(self, L, seed):
+        """Cache entries beyond `lengths` must not influence the output."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        B, H, Smax, D = 1, 2, 16, 4
+        q = jax.random.normal(ks[0], (B, H, D))
+        kc = jax.random.normal(ks[1], (B, H, Smax, D))
+        vc = jax.random.normal(ks[2], (B, H, Smax, D))
+        lengths = jnp.asarray([L], jnp.int32)
+        out1 = ref.decode_attention(q, kc, vc, lengths)
+        garbage = kc.at[:, :, L:].set(999.0)
+        vg = vc.at[:, :, L:].set(-999.0)
+        out2 = ref.decode_attention(q, garbage, vg, lengths)
+        np.testing.assert_allclose(out1, out2, atol=1e-5)
+
+
+class TestSSDProperties:
+    @given(st.integers(0, 2**31 - 1))
+    def test_zero_dt_zero_output(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        B, T, H, P, N = 1, 32, 2, 8, 4
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jnp.zeros((B, T, H))
+        A = -jnp.ones((H,))
+        Bm = jax.random.normal(ks[1], (B, T, N))
+        Cm = jax.random.normal(ks[2], (B, T, N))
+        y = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=16)
+        np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_linearity_in_x(self, seed):
+        """The SSD map is linear in x for fixed (dt, A, B, C)."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        B, T, H, P, N = 1, 32, 2, 8, 4
+        x1 = jax.random.normal(ks[0], (B, T, H, P))
+        x2 = jax.random.normal(ks[1], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[2], (B, T, H))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[3], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[4], (B, T, N)) * 0.5
+        Cm = jnp.ones((B, T, N)) * 0.5
+        f = lambda x: ref.ssd_scan(x, dt, A, Bm, Cm, chunk=16)
+        lhs = f(2.0 * x1 + 3.0 * x2)
+        rhs = 2.0 * f(x1) + 3.0 * f(x2)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-4)
+
+    @given(st.sampled_from([8, 16, 32]), st.integers(0, 2**31 - 1))
+    def test_chunk_size_invariance(self, chunk, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        B, T, H, P, N = 1, 64, 2, 8, 4
+        x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.1
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+        Cm = jax.random.normal(ks[4], (B, T, N)) * 0.5
+        a = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+        b = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=T)
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+class TestCompressionProperties:
+    @given(
+        st.floats(1e-4, 1e4),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_quantize_roundtrip_error_bound(self, scale, seed):
+        from repro.optim.compression import dequantize, quantize
+
+        x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * scale
+        q, s = quantize(x)
+        err = jnp.abs(dequantize(q, s) - x).max()
+        # max error <= half a quantization step
+        assert float(err) <= float(s) * 0.5 + 1e-9
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_quantize_preserves_sign_and_zero(self, seed):
+        from repro.optim.compression import dequantize, quantize
+
+        x = jnp.asarray([0.0, 1.0, -1.0, 0.5])
+        q, s = quantize(x)
+        deq = dequantize(q, s)
+        assert float(deq[0]) == 0.0
+        assert float(deq[1]) > 0 and float(deq[2]) < 0

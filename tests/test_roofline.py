@@ -1,0 +1,88 @@
+"""Roofline engine: term arithmetic, link attribution, report round-trip."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_analysis import CollectiveStat, HloCost
+from repro.core.roofline import (
+    RooflineReport,
+    load_reports,
+    markdown_table,
+    report_from_compiled,
+    report_from_cost,
+    save_reports,
+)
+
+
+def _cost():
+    c = HloCost(flops=197e12, hbm_bytes=819e9)  # exactly 1 s each
+    c.collectives = [
+        CollectiveStat("all-reduce", 1e9, 50e9, 16, ("model",), 1.0),
+        CollectiveStat("all-reduce", 1e9, 25e9, 2, ("pod",), 1.0),
+    ]
+    return c
+
+
+class TestTerms:
+    def test_term_seconds(self):
+        r = report_from_cost(
+            _cost(), arch="a", shape="s", mesh_name="m", num_chips=256,
+            model_flops=197e12 * 256,
+        )
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(1.0)
+        # 50 GB over ICI (50 GB/s) + 25 GB over DCN (25 GB/s) = 2 s
+        assert r.collective_s == pytest.approx(2.0)
+        assert r.dominant == "collective"
+        assert r.useful_ratio == pytest.approx(1.0)
+        # ideal 1 s of useful compute over a 2 s bound
+        assert r.roofline_fraction == pytest.approx(0.5)
+
+    def test_link_attribution(self):
+        r = report_from_cost(
+            _cost(), arch="a", shape="s", mesh_name="m", num_chips=256,
+            model_flops=1.0,
+        )
+        assert r.collective_by_link["ici"] == pytest.approx(50e9)
+        assert r.collective_by_link["dcn"] == pytest.approx(25e9)
+
+    def test_bw_fraction(self):
+        r = report_from_cost(
+            HloCost(flops=1.0, hbm_bytes=819e9),
+            arch="a", shape="s", mesh_name="m", num_chips=1,
+            model_flops=1.0, model_bytes=819e9 / 2,
+        )
+        assert r.bw_fraction == pytest.approx(0.5)
+
+
+class TestRoundTrip:
+    def test_save_load_markdown(self, tmp_path):
+        r = report_from_cost(
+            _cost(), arch="a", shape="s", mesh_name="m", num_chips=4,
+            model_flops=1e12,
+        )
+        p = str(tmp_path / "r.json")
+        save_reports([r], p)
+        (r2,) = load_reports(p)
+        assert r2 == r
+        table = markdown_table([r])
+        assert "| a | s | m |" in table
+
+
+class TestFromCompiled:
+    def test_matmul_report(self):
+        D = 128
+
+        def f(a, b):
+            return jnp.dot(a, b)
+
+        x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+        compiled = jax.jit(f).lower(x, x).compile()
+        r = report_from_compiled(
+            compiled, arch="mm", shape="t", mesh_name="1",
+            mesh_axes={"data": 1}, model_flops=2.0 * D**3,
+        )
+        assert r.useful_ratio == pytest.approx(1.0, rel=0.01)
+        assert r.dominant == "memory"   # tiny matmul is bandwidth-bound
+        assert r.collective_s == 0.0

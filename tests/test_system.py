@@ -1,0 +1,176 @@
+"""End-to-end behaviour tests for the framework.
+
+The headline claims, executed: (1) the full train loop learns on a
+deterministic stream; (2) checkpoint/restart reproduces the exact
+trajectory; (3) the serving engine decodes greedily and matches a direct
+decode loop; (4) the planner's placement choice responds to model size the
+way the paper's Fig. 17 measurements do.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core.planner import decode_profile, plan
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh_for
+from repro.models import get_smoke_bundle
+from repro.optim import AdamWConfig
+from repro.serve import Request, ServeConfig, Server
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh_for((1,), ("data",))
+
+
+def _train(bundle, mesh, steps, seed=0, lr=3e-3, start_state=None, data_start=0):
+    tcfg = TrainConfig(
+        remat="none",
+        optimizer=AdamWConfig(lr=lr, warmup_steps=5, weight_decay=0.0),
+    )
+    if start_state is None:
+        params, opt, ef = init_train_state(
+            bundle, mesh, jax.random.PRNGKey(seed), tcfg
+        )
+    else:
+        params, opt, ef = start_state
+    step = jax.jit(make_train_step(bundle, mesh, tcfg))
+    data = SyntheticLM(
+        DataConfig(vocab=bundle.cfg.vocab, seq_len=32, global_batch=8,
+                   structure=1.0)
+    )
+    data.restore({"step": data_start, "seed": 0})
+    losses = []
+    for _, batch in zip(range(steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, ef, m = step(params, opt, ef, batch)
+        losses.append(float(m["loss"]))
+    return (params, opt, ef), losses
+
+
+class TestTraining:
+    def test_loss_decreases(self, mesh):
+        bundle = get_smoke_bundle("granite-8b")
+        _, losses = _train(bundle, mesh, steps=40)
+        assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+    def test_checkpoint_restart_exact(self, mesh, tmp_path):
+        bundle = get_smoke_bundle("olmo-1b")
+        state, losses_a = _train(bundle, mesh, steps=6)
+        ck = Checkpointer(str(tmp_path))
+        ck.save(6, state, blocking=True)
+        # continue 4 more
+        _, cont = _train(bundle, mesh, steps=4, start_state=state, data_start=6)
+        # restart from checkpoint, continue 4
+        restored, _ = ck.restore(state)
+        restored = jax.tree.map(jnp.asarray, restored)
+        _, cont2 = _train(
+            bundle, mesh, steps=4, start_state=tuple(restored), data_start=6
+        )
+        np.testing.assert_allclose(cont, cont2, rtol=1e-5, atol=1e-6)
+
+    def test_microbatched_matches_full_batch(self, mesh):
+        bundle = get_smoke_bundle("olmo-1b")
+        tcfg1 = TrainConfig(remat="none", n_microbatches=1,
+                            optimizer=AdamWConfig(lr=1e-3, warmup_steps=1))
+        tcfg4 = TrainConfig(remat="none", n_microbatches=4,
+                            optimizer=AdamWConfig(lr=1e-3, warmup_steps=1))
+        p1, o1, e1 = init_train_state(bundle, mesh, jax.random.PRNGKey(0), tcfg1)
+        p4, o4, e4 = init_train_state(bundle, mesh, jax.random.PRNGKey(0), tcfg4)
+        s1 = jax.jit(make_train_step(bundle, mesh, tcfg1))
+        s4 = jax.jit(make_train_step(bundle, mesh, tcfg4))
+        data = SyntheticLM(DataConfig(vocab=bundle.cfg.vocab, seq_len=16,
+                                      global_batch=8))
+        batch = {k: jnp.asarray(v) for k, v in next(iter(data)).items()}
+        p1, o1, _, m1 = s1(p1, o1, e1, batch)
+        p4, o4, _, m4 = s4(p4, o4, e4, batch)
+        # Adam's step-1 update is ~sign(g)*lr, which amplifies bf16
+        # accumulation-order noise on near-zero grads into full-lr param
+        # diffs — so compare the accumulated GRADIENT statistics (the
+        # mechanism under test), not post-Adam params.
+        np.testing.assert_allclose(
+            float(m1["loss"]), float(m4["loss"]), rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            float(m1["grad_norm"]), float(m4["grad_norm"]), rtol=1e-2
+        )
+
+    def test_remat_matches_no_remat(self, mesh):
+        bundle = get_smoke_bundle("yi-6b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        data = SyntheticLM(DataConfig(vocab=bundle.cfg.vocab, seq_len=16,
+                                      global_batch=2))
+        batch = {k: jnp.asarray(v) for k, v in next(iter(data)).items()}
+        l1, _ = bundle.train_loss(params, batch, remat="none")
+        l2, _ = bundle.train_loss(params, batch, remat="full")
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+        g1 = jax.grad(lambda p: bundle.train_loss(p, batch, remat="none")[0])(params)
+        g2 = jax.grad(lambda p: bundle.train_loss(p, batch, remat="full")[0])(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-4)
+
+
+class TestServing:
+    def test_continuous_batching_drains(self):
+        bundle = get_smoke_bundle("granite-8b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        server = Server(
+            bundle, ServeConfig(batch_slots=2, max_len=64), params
+        )
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(rid=i,
+                    prompt=rng.integers(0, bundle.cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(5)  # more requests than slots -> queueing
+        ]
+        for r in reqs:
+            server.add_request(r)
+        server.run_until_done(max_steps=200)
+        assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+
+    def test_server_matches_direct_decode(self):
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        prompt = np.arange(1, 9, dtype=np.int32)
+        server = Server(bundle, ServeConfig(batch_slots=1, max_len=64), params)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=5)
+        server.add_request(req)
+        server.run_until_done(max_steps=100)
+        # direct: prefill + greedy decode loop with batch=1
+        cache = bundle.init_cache(1, 64)
+        logits, cache = bundle.prefill(
+            params, {"tokens": jnp.asarray(prompt)[None]}, cache
+        )
+        toks = []
+        lengths = jnp.asarray([len(prompt)], jnp.int32)
+        tok = jnp.argmax(logits, -1)[:, None]
+        toks.append(int(tok[0, 0]))
+        for _ in range(4):
+            logits, cache = bundle.decode_step(
+                params, {"tokens": tok, "lengths": lengths}, cache
+            )
+            lengths = lengths + 1
+            tok = jnp.argmax(logits, -1)[:, None]
+            toks.append(int(tok[0, 0]))
+        assert req.out_tokens == toks
+
+
+class TestPlannerIntegration:
+    def test_decode_placement_flips_with_model_size(self):
+        # small model: everything fits -> hbm_resident; model >> HBM: the
+        # planner must pick an offload policy (the paper's Fig. 17 regime)
+        small = decode_profile(
+            name="s", param_bytes=2e9, kv_bytes=1e9, step_flops=1e12
+        )
+        big = decode_profile(
+            name="b", param_bytes=200e9, kv_bytes=100e9, step_flops=1e12
+        )
+        best_small, _ = plan(small)
+        best_big, _ = plan(big)
+        assert best_small.policy == "hbm_resident"
+        assert best_big.policy != "hbm_resident"

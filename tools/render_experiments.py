@@ -1,0 +1,64 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the sweep
+JSON: ``PYTHONPATH=src python tools/render_experiments.py results/dryrun_final.json``."""
+
+import json
+import sys
+
+
+def main(path: str) -> None:
+    recs = json.load(open(path))
+
+    print("### Dry-run summary (per cell)\n")
+    print("| arch | shape | mesh | status | compile (s) | args/dev (GiB) "
+          "| peak/dev (GiB) | XLA flops/dev | notes |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped "
+                  f"| - | - | - | - | {r['reason']} |")
+            continue
+        ma = r["memory_analysis"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {r['compile_s']:.1f} "
+            f"| {ma['argument_bytes_per_device']/2**30:.2f} "
+            f"| {ma['peak_bytes_per_device']/2**30:.2f} "
+            f"| {r['cost_analysis']['xla_flops_per_device']:.3g} | |"
+        )
+
+    print("\n### Roofline (single-pod 16x16 baseline)\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+          "| dominant | useful | frac | bw-frac | coll ICI/DCN (GB/dev) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        ici = rl["collective_by_link"].get("ici", 0) / 1e9
+        dcn = rl["collective_by_link"].get("dcn", 0) / 1e9
+        print(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl['compute_s']*1e3:.1f} | {rl['memory_s']*1e3:.1f} "
+            f"| {rl['collective_s']*1e3:.1f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.1%} "
+            f"| {rl['bw_fraction']:.1%} | {ici:.1f}/{dcn:.1f} |"
+        )
+
+    print("\n### Multi-pod (2x16x16) deltas\n")
+    print("| arch | shape | peak/dev (GiB) | collective (ms) | DCN share |")
+    print("|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "2x16x16":
+            continue
+        rl = r["roofline"]
+        dcn = rl["collective_by_link"].get("dcn", 0)
+        tot = max(rl["collective_bytes"], 1)
+        print(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory_analysis']['peak_bytes_per_device']/2**30:.2f} "
+            f"| {rl['collective_s']*1e3:.1f} | {dcn/tot:.1%} |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final.json")

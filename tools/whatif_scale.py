@@ -1,0 +1,76 @@
+"""Scale what-if: project a cell's roofline terms to 1000+ node fleets.
+
+    PYTHONPATH=src python tools/whatif_scale.py --arch gemma3-27b
+
+Uses the datapath model to extrapolate the per-step DCN gradient traffic,
+ICI collective share, and HBM residency as pods are added (weak scaling on
+the pod axis: global batch grows with pods), and shows where the two
+framework levers — int8 gradient compression and pipeline-over-pods — pay.
+This is the design analysis behind the "1000+ nodes" requirement: all
+terms come from `core/hardware.py` + `core/datapath.py`.
+"""
+
+import argparse
+
+from repro.configs import SHAPES, get_config
+from repro.core.datapath import wire_bytes
+from repro.core.hardware import DEFAULT_SYSTEM
+from repro.models.model_zoo import ModelBundle
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--grad-bytes-per-param", type=float, default=2.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    bundle = ModelBundle(cfg)
+    shape = SHAPES["train_4k"]
+    chip = DEFAULT_SYSTEM.chip
+    pod_chips = DEFAULT_SYSTEM.pod.num_chips
+
+    params = cfg.num_params()
+    grad_bytes = params * args.grad_bytes_per_param
+
+    print(f"{cfg.name}: {params/1e9:.1f}B params, weak scaling on the pod "
+          f"axis (per-pod batch {shape.global_batch})\n")
+    print(f"{'pods':>5s} {'chips':>7s} {'DCN grad AR (s)':>16s} "
+          f"{'w/ int8 (s)':>12s} {'pipeline (s)':>13s} "
+          f"{'compute/pod (s)':>16s} {'verdict':>24s}")
+
+    # per-pod compute time for its share of the batch
+    flops_per_pod = bundle.model_flops(shape) / pod_chips
+    t_compute = flops_per_pod / chip.peak_bf16_flops
+
+    # pipeline alternative: ship microbatch boundary activations instead
+    act_bytes = (
+        2.0 * shape.global_batch * shape.seq_len * cfg.d_model
+    )  # bf16 boundary activations per pod-hop per step
+
+    for pods in (2, 4, 8, 16, 32, 64):
+        chips = pods * pod_chips
+        # cross-pod gradient all-reduce: per-chip shard of grads, ring over pods
+        payload = grad_bytes / pod_chips
+        t_dcn = wire_bytes("all-reduce", payload, pods) / chip.dcn_bandwidth
+        t_dcn_q = t_dcn / 4.0  # int8 + scales
+        t_pipe = act_bytes / pod_chips / chip.dcn_bandwidth
+        verdict = (
+            "compute-bound" if t_compute > max(t_dcn_q, t_pipe)
+            else ("compression sufficient" if t_dcn_q < t_compute
+                  else "pipeline the pod axis")
+        )
+        print(f"{pods:5d} {chips:7d} {t_dcn:16.3f} {t_dcn_q:12.3f} "
+              f"{t_pipe:13.3f} {t_compute:16.3f} {verdict:>24s}")
+
+    print(
+        "\nInterpretation: the DCN gradient all-reduce approaches "
+        "2*grad_bytes/(pod_chips*dcn_bw) as pods grow (ring factor "
+        "saturates) — the fleet-size-independent wall the paper's "
+        "datapath analysis predicts; int8 compression buys 4x, and "
+        "pipelining swaps gradient bytes for microbatch activations."
+    )
+
+
+if __name__ == "__main__":
+    main()
