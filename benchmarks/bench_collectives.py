@@ -16,8 +16,8 @@ CODE = """
 import jax, jax.numpy as jnp, time
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("pod", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("pod", "model"))
 for op in ("psum", "all_gather"):
     for axis in ("model", "pod"):
         for log2 in (16, 22):

@@ -1,5 +1,12 @@
-"""Paper Fig. 3 + Table II: theoretical bound matrices and the memory-API
-capability table, from the datapath model (pure analysis, no devices)."""
+"""Paper Fig. 3 + Table II + Figs. 15-17: theoretical bound matrices, the
+memory-API capability table, and the generated placement-policy table —
+all from the datapath model (pure analysis, no device measurement).
+
+The policy table is the planner's §IV decision surface: for a reference
+full-size architecture, the predicted step time of **every** placement
+policy in both the training and decode regimes, each time term derived
+from the datapath bounds (read/copy/collective) — the Figs. 15-17 rows,
+generated rather than hand-derived."""
 
 from __future__ import annotations
 
@@ -7,12 +14,46 @@ from benchmarks.common import emit
 from repro.core import (
     DEFAULT_SYSTEM,
     MemoryTier,
+    POLICIES,
     bound_matrix,
     copy_bound,
+    plan,
     read_bound,
 )
 
 TIERS = [t for t in MemoryTier if t != MemoryTier.VMEM]
+
+POLICY_ARCH = "gemma3-27b"
+POLICY_CHIPS = 256
+
+
+def _emit_policy_table() -> None:
+    """Figs. 15-17 analogue: predicted step time per policy per regime."""
+    from repro.configs import SHAPES, get_config
+    from repro.models.model_zoo import ModelBundle
+
+    bundle = ModelBundle(get_config(POLICY_ARCH))
+    # 256 chips as a (pod=2) x (data=16) x (model=8) mesh
+    train = bundle.train_workload(
+        SHAPES["train_4k"],
+        num_chips=POLICY_CHIPS,
+        data_axis_size=16,
+        pod_axis_size=2,
+    )
+    decode = bundle.decode_workload(
+        SHAPES["decode_32k"], num_chips=POLICY_CHIPS
+    )
+    for regime, prof in (("train", train), ("decode", decode)):
+        best, preds = plan(prof)
+        for p in preds:
+            tag = "+best" if p.policy == best.policy else (
+                "" if p.fits else "+nofit"
+            )
+            emit(
+                f"policy[{regime}|{p.policy}]",
+                p.step_s * 1e6,
+                f"limited_by={p.limiting}|hbm={p.hbm_bytes/2**30:.2f}GiB{tag}",
+            )
 
 
 def main() -> None:
@@ -33,15 +74,19 @@ def main() -> None:
                 b.latency * 1e6,
                 f"{b.bandwidth/1e9:.1f}GB/s via {b.limiting_link}",
             )
+    # Figs. 15-17: the generated per-policy step-time table
+    _emit_policy_table()
     # Table II analogue: memory kinds the runtime actually exposes
     import jax
 
     kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
     emit("memory_kinds", 0.0, "|".join(kinds))
+    emit("policies", 0.0, "|".join(POLICIES))
     # headline numbers used throughout
     c = DEFAULT_SYSTEM.chip
     emit("chip_peak_bf16", 0.0, f"{c.peak_bf16_flops/1e12:.0f}TFLOP/s")
     emit("chip_hbm_bw", 0.0, f"{c.hbm_bandwidth/1e9:.0f}GB/s")
+    emit("chip_host_dram_cap", 0.0, f"{c.host_dram_capacity/2**30:.0f}GiB")
     emit("ici_link_bw", 0.0, f"{c.ici_link_bandwidth/1e9:.0f}GB/s")
     emit("dcn_bw", 0.0, f"{c.dcn_bandwidth/1e9:.0f}GB/s")
 

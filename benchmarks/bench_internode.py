@@ -16,8 +16,8 @@ from repro.core import DEFAULT_SYSTEM, Link
 CODE = """
 import jax, jax.numpy as jnp, time
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("pod", "data"))
 for log2 in (16, 20, 24):
     n = 2 ** log2 // 4
     x = jax.device_put(jnp.ones((n,), jnp.float32),

@@ -15,7 +15,8 @@ CODE = """
 import jax, jax.numpy as jnp, time
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ("x",))
 x = jnp.arange(8.0).reshape(8, 1)
 # single permute per dispatch (the two-permute program deadlocks the CPU
 # backend's transfer manager); round trip = 2x one-way.

@@ -36,13 +36,28 @@ MODULES = [
     "bench_managed_vs_system",
 ]
 
+#: modules that evaluate the datapath model only — no device measurement.
+#: ``--analytic`` runs exactly these (the CI smoke-check mode).
+ANALYTIC_MODULES = [
+    "bench_datapath_bounds",
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single module")
+    ap.add_argument(
+        "--analytic", action="store_true",
+        help="analytic (no-measure) modules only — datapath-model smoke",
+    )
     args = ap.parse_args()
 
-    mods = [args.only] if args.only else MODULES
+    if args.only:
+        mods = [args.only]
+    elif args.analytic:
+        mods = ANALYTIC_MODULES
+    else:
+        mods = MODULES
     failures = 0
     for name in mods:
         print(f"# ==== {name} ====")

@@ -1,0 +1,68 @@
+"""Version-portability shims for jax API drift.
+
+The repo targets the current jax API; older installs (0.4.x) spell several
+things differently.  Each shim resolves the available spelling once at
+import time.  Sibling shims live next to their consumers:
+``repro.kernels.tpu_compiler_params`` (Pallas CompilerParams rename) and
+``repro.launch.mesh.make_mesh_compat`` (``axis_types`` kwarg).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NEW_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _OLD_SHARD_MAP
+else:
+    _OLD_SHARD_MAP = None
+
+#: Partial-manual shard_map (axis_names a strict subset of the mesh axes)
+#: only compiles reliably on the new API; old XLA hits a manual-subgroup
+#: check failure when the surrounding graph reshards (see optim/compression).
+shard_map_partial_ok = _NEW_SHARD_MAP is not None
+
+
+def shard_map_compat(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: set | None = None,
+    check: bool = False,
+):
+    """``jax.shard_map`` across the new/old API split.
+
+    New API: ``axis_names={...}`` marks the manual axes (others stay
+    automatic) and ``check_vma`` toggles replication checking.  Old API
+    spells those ``auto=<complement>`` and ``check_rep``.
+    """
+    if _NEW_SHARD_MAP is not None:
+        kwargs = {"check_vma": check}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _NEW_SHARD_MAP(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    auto = (
+        frozenset(mesh.axis_names) - frozenset(axis_names)
+        if axis_names is not None
+        else frozenset()
+    )
+    return _OLD_SHARD_MAP(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check,
+        auto=auto,
+    )
+
+
+def axis_size_compat(axis_name):
+    """``jax.lax.axis_size`` (newer jax) or the classic ``psum(1, axis)``."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)

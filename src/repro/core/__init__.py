@@ -34,19 +34,28 @@ from repro.core.datapath import (  # noqa: F401
 from repro.core.placement import (  # noqa: F401
     HBM_RESIDENT,
     KV_HOST,
+    KV_PEER_HBM,
+    KV_REMOTE_HBM,
     OPT_HOST,
+    OPT_PEER_HOST,
     POLICIES,
+    WEIGHTS_PEER_HBM,
     WEIGHTS_STREAM,
     Placement,
     PlacementPolicy,
     Role,
     Strategy,
+    host_available,
+    resolve_memory_kind,
 )
 from repro.core.planner import (  # noqa: F401
+    CollectiveTerm,
     PolicyPrediction,
     WorkloadProfile,
     decode_profile,
+    eligible_policies,
     plan,
+    pool_capacities,
     predict,
     train_profile,
 )

@@ -60,6 +60,10 @@ class ChipSpec:
     peak_bf16_flops: float = 197e12          # task-spec: 197 TFLOP/s bf16
     hbm_bandwidth: float = 819e9             # task-spec: 819 GB/s
     hbm_capacity: float = 16 * 2**30         # 16 GiB (v5e-class)
+    # Per-chip share of the host's DRAM (v5e-class hosts pair ~512 GiB of
+    # DDR with 8 chips) — the planner's second capacity pool, mirroring the
+    # paper's 480 GiB LPDDR per Grace (vs 96 GiB HBM per Hopper).
+    host_dram_capacity: float = 64 * 2**30
     vmem_capacity: float = 128 * 2**20       # ~128 MiB VMEM (v5e-class)
     vmem_bandwidth: float = 11.4e12          # derived: keeps 8x8x128 MXU fed
     ici_link_bandwidth: float = 50e9         # task-spec: ~50 GB/s/link ICI

@@ -168,10 +168,32 @@ class Computation:
 
 
 def _split_operands(argstr: str) -> list[str]:
-    """Operand names from the call-paren contents (constants → [])."""
+    """Operand names from the call-paren contents (constants → []).
+
+    Handles both operand spellings XLA has used: bare names (``%x, %w``)
+    and typed operands (``f32[8,8]{1,0} %x, ...``), whose shape brackets
+    contain commas — so split only at bracket-depth zero and keep each
+    token's trailing name.
+    """
     out = []
-    for tok in argstr.split(","):
+    toks, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            toks.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    toks.append("".join(cur))
+    for tok in toks:
         tok = tok.strip()
+        if not tok:
+            continue
+        # typed operand: the name is the last whitespace-separated word
+        tok = tok.split()[-1]
         if tok.startswith("%"):
             out.append(tok[1:])
         elif re.fullmatch(r"[\w.\-]+", tok) and not tok[0].isdigit():

@@ -6,13 +6,25 @@ decision is per-role: GEMM source matrices care (reads dominate), the
 destination does not; KV-type read-mostly buffers benefit from the big slow
 pool only when the fast pool is full.
 
-JAX exposes exactly the needed control: ``NamedSharding(mesh, spec,
-memory_kind=...)`` with kinds ``device`` (HBM), ``pinned_host`` and
+A :class:`PlacementPolicy` maps tensor roles to placements over the **full**
+:class:`repro.core.hardware.MemoryTier` axis — local HBM, local host DRAM,
+a peer chip's HBM / host DRAM over ICI, and a remote pod's HBM over DCN —
+mirroring the paper's {HBM, DDR, HBM-p, DDR-p} columns (Figs. 5/7/9 and the
+§IV application tables).  The planner (:mod:`repro.core.planner`) predicts
+each policy's step time from the datapath bounds and picks the best that
+fits every memory pool; the train/serve steps consume the chosen policy.
+
+Physical realization on the runtime: JAX exposes ``NamedSharding(mesh,
+spec, memory_kind=...)`` with kinds ``device`` (HBM), ``pinned_host`` and
 ``unpinned_host`` — the TPU analogue of the paper's Table II allocation
 APIs (``numa_alloc_onnode`` ≈ explicit memory_kind; first-touch ≈ default
-``device``).  A :class:`PlacementPolicy` maps tensor roles to placements;
-the train/serve steps consume it; the planner (:mod:`repro.core.planner`)
-predicts its step time from the datapath model and picks the best that fits.
+``device``).  Peer/remote tiers are realized as *device* memory on a donor
+mesh axis (the bytes live in HBM, just a hop away — exactly the paper's
+HBM-p case), so their memory kind is ``device``.  Not every backend exposes
+every kind (the CPU backend of older jax exposes only ``unpinned_host``),
+so every kind the policy requests is passed through
+:func:`resolve_memory_kind`, which degrades gracefully to what the backend
+actually has.
 """
 
 from __future__ import annotations
@@ -38,17 +50,91 @@ class Role(str, enum.Enum):
 
 
 class Strategy(str, enum.Enum):
-    RESIDENT = "resident"   # lives in its tier; computed on in place (HBM)
+    RESIDENT = "resident"   # lives in its tier; computed on in place
     STREAM = "stream"       # lives in a far tier; bulk-moved each use
                             # (paper: "managed"-like — pay the migration,
                             #  then access at HBM speed)
 
 
-#: memory_kind strings understood by jax shardings, per tier.
+#: memory_kind strings understood by jax shardings, per tier.  Peer and
+#: remote HBM are device memory reached over ICI/DCN (donor-axis sharding);
+#: peer host DRAM is pinned host memory on the donor's host.
 _TIER_TO_KIND = {
     MemoryTier.HBM: "device",
     MemoryTier.HOST: "pinned_host",
+    MemoryTier.PEER_HBM: "device",
+    MemoryTier.PEER_HOST: "pinned_host",
+    MemoryTier.REMOTE_HBM: "device",
 }
+
+#: tiers whose bytes live in a host DRAM pool (vs an HBM pool).
+HOST_TIERS = frozenset({MemoryTier.HOST, MemoryTier.PEER_HOST})
+
+
+# ---------------------------------------------------------------------------
+# Backend memory-kind capability (API-drift + hardware-capability shim)
+# ---------------------------------------------------------------------------
+
+# Successful probes are memoized; failures are NOT (a query racing backend
+# init — e.g. before jax.distributed.initialize — must not pin the
+# "no memory kinds" fallback for the process lifetime).
+_KINDS_CACHE: frozenset[str] | None = None
+_DEFAULT_KIND_CACHE: str | None = None
+
+
+def available_memory_kinds() -> frozenset[str]:
+    """Memory kinds the default backend's device 0 can address."""
+    global _KINDS_CACHE
+    if _KINDS_CACHE is None:
+        try:
+            _KINDS_CACHE = frozenset(
+                m.kind for m in jax.devices()[0].addressable_memories()
+            )
+        except Exception:
+            return frozenset()
+    return _KINDS_CACHE
+
+
+def default_memory_kind() -> str | None:
+    """The backend's default memory kind (``device`` on TPU)."""
+    global _DEFAULT_KIND_CACHE
+    if _DEFAULT_KIND_CACHE is None:
+        try:
+            _DEFAULT_KIND_CACHE = jax.devices()[0].default_memory().kind
+        except Exception:
+            return None
+    return _DEFAULT_KIND_CACHE
+
+
+def resolve_memory_kind(kind: str | None) -> str | None:
+    """Map a requested memory kind onto what the backend exposes.
+
+    ``None`` means "backend default" and always works.  Unavailable kinds
+    degrade: ``pinned_host`` falls back to ``unpinned_host`` when only that
+    is exposed, and anything else falls back to the backend default — the
+    graceful path for CPU backends where host DRAM *is* device memory.
+    """
+    if kind is None:
+        return None
+    kinds = available_memory_kinds()
+    if kind in kinds:
+        return kind
+    if kind == "pinned_host" and "unpinned_host" in kinds:
+        if default_memory_kind() != "unpinned_host":
+            return "unpinned_host"
+    return None
+
+
+def host_available() -> bool:
+    """Does this backend expose a host memory space distinct from device
+    memory?  False on CPU backends (host DRAM *is* the default memory), in
+    which case offload policies are placement no-ops and the planner should
+    not prefer them."""
+    kinds = available_memory_kinds()
+    default = default_memory_kind()
+    return any(
+        k.endswith("host") and k != default for k in kinds
+    ) and default is not None and not default.endswith("host")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,12 +143,18 @@ class Placement:
     strategy: Strategy = Strategy.RESIDENT
 
     @property
-    def memory_kind(self) -> str:
+    def raw_memory_kind(self) -> str:
+        """The memory kind this tier wants, ignoring backend capability."""
         return _TIER_TO_KIND.get(self.tier, "device")
 
     @property
+    def memory_kind(self) -> str | None:
+        """The memory kind to actually hand to jax on this backend."""
+        return resolve_memory_kind(self.raw_memory_kind)
+
+    @property
     def on_host(self) -> bool:
-        return self.tier == MemoryTier.HOST
+        return self.tier in HOST_TIERS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,8 +168,21 @@ class PlacementPolicy:
     def placement(self, role: Role) -> Placement:
         return self.placements.get(role, Placement())
 
-    def memory_kind(self, role: Role) -> str:
+    def memory_kind(self, role: Role) -> str | None:
         return self.placement(role).memory_kind
+
+    def raw_memory_kind(self, role: Role) -> str:
+        return self.placement(role).raw_memory_kind
+
+    def tiers(self) -> frozenset[MemoryTier]:
+        """Every tier this policy places at least one role in."""
+        return frozenset(
+            {MemoryTier.HBM} | {p.tier for p in self.placements.values()}
+        )
+
+    @property
+    def uses_host(self) -> bool:
+        return any(p.on_host for p in self.placements.values())
 
     def sharding(
         self, mesh: Mesh, spec: PartitionSpec, role: Role
@@ -98,9 +203,13 @@ def _policy(name: str, desc: str, **roles: Placement) -> PlacementPolicy:
     )
 
 
+HBM = Placement(MemoryTier.HBM, Strategy.RESIDENT)
 HOST = Placement(MemoryTier.HOST, Strategy.RESIDENT)
 HOST_STREAM = Placement(MemoryTier.HOST, Strategy.STREAM)
-HBM = Placement(MemoryTier.HBM, Strategy.RESIDENT)
+PEER_HBM = Placement(MemoryTier.PEER_HBM, Strategy.RESIDENT)
+PEER_HBM_STREAM = Placement(MemoryTier.PEER_HBM, Strategy.STREAM)
+PEER_HOST_STREAM = Placement(MemoryTier.PEER_HOST, Strategy.STREAM)
+REMOTE_HBM = Placement(MemoryTier.REMOTE_HBM, Strategy.RESIDENT)
 
 
 #: Paper-faithful default: everything in fast memory ("local HBM" column of
@@ -136,18 +245,54 @@ WEIGHTS_STREAM = _policy(
     params=HOST_STREAM,
 )
 
+#: KV cache in a peer chip's HBM, read in place over ICI — the paper's
+#: HBM-p column (peer HBM beats local DDR whenever the chip-to-chip link
+#: outruns the host link, which it does on both GH200 and TPU).
+KV_PEER_HBM = _policy(
+    "kv_peer_hbm",
+    "KV cache resident in a peer chip's HBM, read in place over ICI",
+    kv_cache=PEER_HBM,
+)
+
+#: Weights streamed from a peer chip's HBM (Figs. 15-16: GEMM sources in
+#: HBM-p) — the serving regime where a memory-donor chip holds the cold
+#: layers and ships them over ICI ahead of use.
+WEIGHTS_PEER_HBM = _policy(
+    "weights_peer_hbm",
+    "weights resident in peer HBM, streamed layer-by-layer over ICI",
+    params=PEER_HBM_STREAM,
+)
+
+#: Optimizer state spilled to a *peer's* host DRAM (DDR-p column): the
+#: escape hatch when local host DRAM is full — pays ICI+PCIe per step.
+OPT_PEER_HOST = _policy(
+    "opt_peer_host",
+    "Adam moments + f32 master in a peer's host DRAM (spill-to-peer-host)",
+    master=PEER_HOST_STREAM,
+    opt_state=PEER_HOST_STREAM,
+)
+
+#: KV cache in a remote pod's HBM over DCN — the inter-node tier the paper
+#: reaches once a node's four-superchip pool is exhausted.
+KV_REMOTE_HBM = _policy(
+    "kv_remote_hbm",
+    "KV cache resident in a remote pod's HBM, read in place over DCN",
+    kv_cache=REMOTE_HBM,
+)
+
 POLICIES: dict[str, PlacementPolicy] = {
-    p.name: p for p in (HBM_RESIDENT, OPT_HOST, KV_HOST, WEIGHTS_STREAM)
+    p.name: p
+    for p in (
+        HBM_RESIDENT,
+        OPT_HOST,
+        KV_HOST,
+        WEIGHTS_STREAM,
+        KV_PEER_HBM,
+        WEIGHTS_PEER_HBM,
+        OPT_PEER_HOST,
+        KV_REMOTE_HBM,
+    )
 }
-
-
-def host_available() -> bool:
-    """Does this backend expose a pinned_host memory space?"""
-    try:
-        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
-    except Exception:
-        return False
-    return "pinned_host" in kinds
 
 
 def put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy):
@@ -170,9 +315,11 @@ def to_device(tree, mesh: Mesh, specs):
     it into a host->device DMA that the latency-hiding scheduler can overlap
     with compute (the TPU analogue of managed-memory prefetch).
     """
+    kind = resolve_memory_kind("device")
+
     def _mv(x, spec):
         return jax.device_put(
-            x, NamedSharding(mesh, spec, memory_kind="device")
+            x, NamedSharding(mesh, spec, memory_kind=kind)
         )
 
     if isinstance(specs, PartitionSpec):
@@ -181,10 +328,12 @@ def to_device(tree, mesh: Mesh, specs):
 
 
 def to_host(tree, mesh: Mesh, specs):
-    """Move a pytree to pinned host memory inside a jit region."""
+    """Move a pytree to (pinned) host memory inside a jit region."""
+    kind = resolve_memory_kind("pinned_host")
+
     def _mv(x, spec):
         return jax.device_put(
-            x, NamedSharding(mesh, spec, memory_kind="pinned_host")
+            x, NamedSharding(mesh, spec, memory_kind=kind)
         )
 
     if isinstance(specs, PartitionSpec):

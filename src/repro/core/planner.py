@@ -2,9 +2,25 @@
 
 This automates the paper's §IV decision: given a workload's per-step byte
 traffic per tensor role and the capacity of each memory pool, predict the
-step time of every placement policy from the datapath bounds and choose the
-fastest one that *fits*.  (The paper does this by hand across Figs. 15-17;
-here it is a planner the launcher consults.)
+step time of every placement policy **from the datapath bounds** and choose
+the fastest one that *fits*.  (The paper does this by hand across
+Figs. 15-17; here it is a planner the launchers consult.)
+
+v2 unification: every bandwidth/latency term is derived from
+:mod:`repro.core.datapath` ``Bound`` objects — ``read_bound`` for in-place
+accesses, ``copy_bound`` for streamed migrations (inheriting the
+twice-traversed-link halving rule and per-segment latencies), and
+``collective_bound`` for collective terms — never from raw ``chip.*``
+bandwidth arithmetic.  The planner covers the full
+:class:`~repro.core.hardware.MemoryTier` axis (local HBM/DRAM, peer
+HBM/DRAM over ICI, remote HBM over DCN — the paper's HBM/DDR/HBM-p/DDR-p
+columns) and accounts capacity per *pool*: local HBM (including the
+double-buffered staging window a streamed tensor occupies), local host
+DRAM, and the peer/remote donor pools.
+
+Peer and remote pools model a *memory-donor* chip (the paper's peer-access
+experiments: the donor's memory is idle while the accessor works), so their
+capacity is one donor's full pool.
 """
 
 from __future__ import annotations
@@ -12,14 +28,66 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Mapping
 
-from repro.core.datapath import copy_bound, read_bound
-from repro.core.hardware import DEFAULT_SYSTEM, MemoryTier, SystemSpec
+from repro.core.datapath import (
+    Bound,
+    collective_bound,
+    copy_bound,
+    read_bound,
+)
+from repro.core.hardware import DEFAULT_SYSTEM, Link, MemoryTier, SystemSpec
 from repro.core.placement import (
+    HOST_TIERS,
     POLICIES,
     PlacementPolicy,
     Role,
     Strategy,
 )
+
+#: capacity pool each tier's bytes are charged to
+_TIER_POOL: dict[MemoryTier, str] = {
+    MemoryTier.HBM: "hbm",
+    MemoryTier.HOST: "host",
+    MemoryTier.PEER_HBM: "peer_hbm",
+    MemoryTier.PEER_HOST: "peer_host",
+    MemoryTier.REMOTE_HBM: "remote_hbm",
+}
+
+#: which serialized-transfer bucket a bound's limiting link belongs to.
+#: (HBM_BUS-limited transfers fold into the hbm term: they contend with
+#: the compute pass for the same bus.)
+_LINK_BUCKET: dict[Link, str] = {
+    Link.PCIE: "pcie",
+    Link.ICI: "ici",
+    Link.DCN: "dcn",
+    Link.HBM_BUS: "hbm",
+    Link.VMEM_BUS: "hbm",
+}
+
+
+def pool_capacities(system: SystemSpec = DEFAULT_SYSTEM) -> dict[str, float]:
+    """Capacity of every memory pool the planner accounts, in bytes."""
+    chip = system.chip
+    return {
+        "hbm": chip.hbm_capacity,
+        "host": chip.host_dram_capacity,
+        "peer_hbm": chip.hbm_capacity,          # one donor chip's HBM
+        "peer_host": chip.host_dram_capacity,   # one donor host's DRAM
+        "remote_hbm": chip.hbm_capacity,        # one remote chip's HBM
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveTerm:
+    """One collective the step must run, timed via ``collective_bound``."""
+
+    kind: str            # 'all_reduce' | 'all_gather' | ... (datapath kinds)
+    link: Link           # the mesh axis's physical link (ICI or DCN)
+    axis_size: int
+    payload_bytes: float  # per-chip payload as collective_bound defines it
+
+    def seconds(self, system: SystemSpec = DEFAULT_SYSTEM) -> float:
+        bw = collective_bound(self.axis_size, self.link, self.kind, system)
+        return self.payload_bytes / bw if bw != float("inf") else 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +98,11 @@ class WorkloadProfile:
     ``touches_per_role``: how many times the role's bytes move through the
     compute datapath per step (params: 1 fwd read (+1 bwd read under remat);
     opt state: 1 read + 1 write; KV: 1 read per decoded token; ...).
+    ``stream_chunks``: granularity of a streamed tensor's migration (layer
+    count for layer-wise streaming) — sets both the per-touch latency count
+    and the HBM staging-buffer footprint (double-buffered chunks).
+    ``collectives``: collective terms timed via ``collective_bound``;
+    ``collective_s`` adds pre-computed seconds (e.g. from a measured trace).
     """
 
     name: str
@@ -37,31 +110,57 @@ class WorkloadProfile:
     bytes_per_role: Mapping[Role, float]
     touches_per_role: Mapping[Role, float]
     collective_s: float = 0.0
+    collectives: tuple[CollectiveTerm, ...] = ()
     overlap_streams: bool = True   # host DMA overlaps compute (LHS scheduler)
+    stream_chunks: int = 8
 
 
 @dataclasses.dataclass
 class PolicyPrediction:
+    """Predicted step time + pool residency of one policy.
+
+    Every ``*_s`` term except ``compute_s`` is datapath-bound-derived;
+    ``limiting`` names the argmax term (the paper's bottleneck attribution).
+    """
+
     policy: str
     fits: bool
-    hbm_bytes: float
-    host_bytes: float
+    hbm_bytes: float               # local HBM pool, staging included
+    host_bytes: float              # local host-DRAM pool
+    bytes_by_pool: dict[str, float]
+    overflow_pools: tuple[str, ...]
     compute_s: float
-    hbm_s: float
-    pcie_s: float
+    hbm_s: float                   # local HBM-bus seconds
+    pcie_s: float                  # PCIe-limited transfer seconds
+    ici_s: float                   # ICI-limited transfer seconds
+    dcn_s: float                   # DCN-limited transfer seconds
     collective_s: float
     step_s: float
     limiting: str
 
     def explain(self) -> str:
+        pools = " ".join(
+            f"{k} {v/2**30:.2f}GiB"
+            for k, v in sorted(self.bytes_by_pool.items())
+            if v > 0
+        )
         return (
             f"{self.policy}: step={self.step_s*1e3:.3f} ms "
             f"[compute {self.compute_s*1e3:.3f} | hbm {self.hbm_s*1e3:.3f} "
-            f"| pcie {self.pcie_s*1e3:.3f} | coll {self.collective_s*1e3:.3f}] "
-            f"limited by {self.limiting}; "
-            f"hbm {self.hbm_bytes/2**30:.2f} GiB"
-            + ("" if self.fits else "  ** DOES NOT FIT **")
+            f"| pcie {self.pcie_s*1e3:.3f} | ici {self.ici_s*1e3:.3f} "
+            f"| dcn {self.dcn_s*1e3:.3f} | coll {self.collective_s*1e3:.3f}] "
+            f"limited by {self.limiting}; {pools}"
+            + (
+                ""
+                if self.fits
+                else f"  ** DOES NOT FIT: {', '.join(self.overflow_pools)} **"
+            )
         )
+
+
+def _touch_seconds(bound: Bound, nbytes: float, transfers: float) -> float:
+    """Seconds for one touch moving ``nbytes`` in ``transfers`` pieces."""
+    return nbytes / bound.bandwidth + transfers * bound.latency
 
 
 def predict(
@@ -69,79 +168,154 @@ def predict(
     policy: PlacementPolicy,
     system: SystemSpec = DEFAULT_SYSTEM,
 ) -> PolicyPrediction:
+    """Predict ``policy``'s step time for ``profile`` from datapath bounds.
+
+    Per role: HBM-resident bytes pay ``touches`` passes over the HBM read
+    bound; streamed bytes pay ``touches`` migrations through
+    ``copy_bound(tier, HBM)`` (halving rule + latency per chunk) *plus* the
+    HBM pass, and occupy a double-buffered staging window in local HBM;
+    far-tier-resident bytes pay ``touches`` in-place passes over the tier's
+    ``read_bound``.  Transfer seconds are bucketed by each bound's limiting
+    link; collective terms come from ``collective_bound``.
+    """
     chip = system.chip
     compute_s = profile.flops / chip.peak_bf16_flops
 
-    hbm_resident = 0.0
-    host_resident = 0.0
-    hbm_traffic = 0.0
-    pcie_traffic = 0.0
+    hbm_read = read_bound(MemoryTier.HBM, system)
+    chunks = max(int(profile.stream_chunks), 1)
+
+    pools: dict[str, float] = {k: 0.0 for k in pool_capacities(system)}
+    buckets = {"hbm": 0.0, "pcie": 0.0, "ici": 0.0, "dcn": 0.0}
 
     for role, nbytes in profile.bytes_per_role.items():
         touches = profile.touches_per_role.get(role, 1.0)
         pl = policy.placement(role)
+        pool = _TIER_POOL[pl.tier]
+
         if pl.tier == MemoryTier.HBM:
-            hbm_resident += nbytes
-            hbm_traffic += nbytes * touches
+            pools["hbm"] += nbytes
+            buckets["hbm"] += touches * _touch_seconds(hbm_read, nbytes, 1)
         elif pl.strategy == Strategy.STREAM:
-            # lives on host; each use = one PCIe bulk move + HBM pass
-            host_resident += nbytes
-            pcie_traffic += nbytes * touches
-            hbm_traffic += nbytes * touches
-            # streamed working set also occupies a small HBM staging buffer,
-            # assumed layer-granular (<= 2 layers) and ignored for capacity.
+            # lives in the far tier; each touch is one chunked bulk
+            # migration over the copy datapath plus one HBM compute pass,
+            # through a double-buffered staging window in local HBM.
+            pools[pool] += nbytes
+            pools["hbm"] += 2.0 * nbytes / chunks
+            cb = copy_bound(pl.tier, MemoryTier.HBM, system)
+            buckets[_LINK_BUCKET[cb.limiting_link]] += (
+                touches * _touch_seconds(cb, nbytes, chunks)
+            )
+            buckets["hbm"] += touches * _touch_seconds(hbm_read, nbytes, 1)
         else:
-            # resident on host, accessed in place — per-touch PCIe traffic
-            host_resident += nbytes
-            pcie_traffic += nbytes * touches
+            # resident in a far tier, accessed in place — every touch
+            # crosses the tier's full read datapath.
+            pools[pool] += nbytes
+            rb = read_bound(pl.tier, system)
+            buckets[_LINK_BUCKET[rb.limiting_link]] += (
+                touches * _touch_seconds(rb, nbytes, 1)
+            )
 
-    hbm_s = hbm_traffic / chip.hbm_bandwidth
-    pcie_s = pcie_traffic / chip.pcie_bandwidth
-    coll_s = profile.collective_s
-
-    if profile.overlap_streams:
-        step_s = max(compute_s, hbm_s, pcie_s, coll_s)
-    else:
-        step_s = max(compute_s, hbm_s) + pcie_s + coll_s
+    coll_s = profile.collective_s + sum(
+        term.seconds(system) for term in profile.collectives
+    )
 
     terms = {
         "compute": compute_s,
-        "hbm": hbm_s,
-        "pcie": pcie_s,
+        "hbm": buckets["hbm"],
+        "pcie": buckets["pcie"],
+        "ici": buckets["ici"],
+        "dcn": buckets["dcn"],
         "collective": coll_s,
     }
+    if profile.overlap_streams:
+        step_s = max(terms.values())
+    else:
+        step_s = (
+            max(compute_s, buckets["hbm"])
+            + buckets["pcie"] + buckets["ici"] + buckets["dcn"] + coll_s
+        )
     limiting = max(terms, key=terms.get)
-    fits = hbm_resident <= chip.hbm_capacity
+
+    caps = pool_capacities(system)
+    overflow = tuple(
+        k for k, v in pools.items() if v > caps[k]
+    )
 
     return PolicyPrediction(
         policy=policy.name,
-        fits=fits,
-        hbm_bytes=hbm_resident,
-        host_bytes=host_resident,
+        fits=not overflow,
+        hbm_bytes=pools["hbm"],
+        host_bytes=pools["host"],
+        bytes_by_pool=dict(pools),
+        overflow_pools=overflow,
         compute_s=compute_s,
-        hbm_s=hbm_s,
-        pcie_s=pcie_s,
+        hbm_s=buckets["hbm"],
+        pcie_s=buckets["pcie"],
+        ici_s=buckets["ici"],
+        dcn_s=buckets["dcn"],
         collective_s=coll_s,
         step_s=step_s,
         limiting=limiting,
     )
 
 
+def eligible_policies(
+    policies: Iterable[PlacementPolicy] | None = None,
+    *,
+    allow_host: bool = True,
+    allow_peer: bool = True,
+    allow_remote: bool = True,
+) -> list[PlacementPolicy]:
+    """Filter policies to tiers the runtime can actually reach.
+
+    ``allow_host=False`` when the backend exposes no host memory space
+    (:func:`repro.core.placement.host_available`), ``allow_peer=False`` on
+    single-chip meshes, ``allow_remote=False`` on single-pod meshes.
+    """
+    out = []
+    # note: an explicitly empty candidate list must stay empty (-> the
+    # 'no eligible placement policies' error), not widen to the registry
+    for p in (POLICIES.values() if policies is None else policies):
+        tiers = p.tiers()
+        if not allow_host and tiers & HOST_TIERS:
+            continue
+        if not allow_peer and tiers & {
+            MemoryTier.PEER_HBM, MemoryTier.PEER_HOST
+        }:
+            continue
+        if not allow_remote and MemoryTier.REMOTE_HBM in tiers:
+            continue
+        out.append(p)
+    return out
+
+
 def plan(
     profile: WorkloadProfile,
     policies: Iterable[PlacementPolicy] | None = None,
     system: SystemSpec = DEFAULT_SYSTEM,
+    *,
+    allow_host: bool = True,
+    allow_peer: bool = True,
+    allow_remote: bool = True,
 ) -> tuple[PolicyPrediction, list[PolicyPrediction]]:
-    """Evaluate all policies; return (best-feasible, all-predictions).
+    """Evaluate eligible policies; return (best-feasible, all-predictions).
 
-    Best = min step time among policies that fit HBM; if none fit, the one
-    with the smallest HBM residency (degraded but runnable) — mirroring the
-    paper's observation that a slower placement that *runs* beats an OOM.
+    Best = min step time among policies whose every pool fits; if none fit,
+    the one with the smallest local-HBM residency (degraded but runnable) —
+    mirroring the paper's observation that a slower placement that *runs*
+    beats an OOM.
     """
     preds = [
         predict(profile, p, system)
-        for p in (policies or POLICIES.values())
+        for p in eligible_policies(
+            policies,
+            allow_host=allow_host,
+            allow_peer=allow_peer,
+            allow_remote=allow_remote,
+        )
     ]
+    if not preds:
+        raise ValueError("no eligible placement policies")
     feasible = [p for p in preds if p.fits]
     if feasible:
         best = min(feasible, key=lambda p: p.step_s)
@@ -163,14 +337,33 @@ def train_profile(
     collective_s: float = 0.0,
     num_chips: int = 1,
     remat: bool = True,
+    n_layers: int = 8,
+    data_axis_size: int = 1,
+    pod_axis_size: int = 1,
 ) -> WorkloadProfile:
     """Per-chip training-step profile from global model numbers.
 
     Adam: master (4B/param as f32 vs 2B resident bf16 params -> x2 params
-    bytes), moments 2 x 4B/param; grads 2B/param.
+    bytes), moments 2 x 4B/param; grads 2B/param.  When the mesh has a
+    data (ICI) or pod (DCN) axis, the per-step gradient all-reduce is added
+    as a ``CollectiveTerm`` so ``collective_bound`` prices it.
     """
     p = param_bytes / num_chips
     act = activation_bytes / num_chips
+    collectives = []
+    # The gradient buffer is sharded over the model axis only and
+    # replicated over data AND pod (that replication is what the data/pod
+    # all-reduces resolve), so the per-chip payload of BOTH reductions is
+    # param_bytes / model_size = p * data_axis_size * pod_axis_size.
+    grad_payload = p * data_axis_size * pod_axis_size
+    if data_axis_size > 1:
+        collectives.append(
+            CollectiveTerm("all_reduce", Link.ICI, data_axis_size, grad_payload)
+        )
+    if pod_axis_size > 1:
+        collectives.append(
+            CollectiveTerm("all_reduce", Link.DCN, pod_axis_size, grad_payload)
+        )
     return WorkloadProfile(
         name=name,
         flops=step_flops / num_chips,
@@ -189,6 +382,8 @@ def train_profile(
             Role.ACTIVATIONS: 2.0,
         },
         collective_s=collective_s,
+        collectives=tuple(collectives),
+        stream_chunks=max(int(n_layers), 1),
     )
 
 
@@ -200,6 +395,7 @@ def decode_profile(
     step_flops: float,
     collective_s: float = 0.0,
     num_chips: int = 1,
+    n_layers: int = 8,
 ) -> WorkloadProfile:
     """Per-chip single-token decode profile (paper Fig. 17 regime):
     reads all params + all KV once per token."""
@@ -212,4 +408,5 @@ def decode_profile(
         },
         touches_per_role={Role.PARAMS: 1.0, Role.KV_CACHE: 1.0},
         collective_s=collective_s,
+        stream_chunks=max(int(n_layers), 1),
     )

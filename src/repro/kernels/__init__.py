@@ -5,5 +5,20 @@ holds the pure-jnp oracles; ``ops.py`` is the public jit-able API with
 backend dispatch.  Validated in interpret mode on CPU (tests/test_kernels).
 """
 
-from repro.kernels import ops  # noqa: F401
-from repro.kernels.ref import NEG_INF  # noqa: F401
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable ``pallas_call`` compiler params.
+
+    The class was renamed ``TPUCompilerParams`` -> ``CompilerParams`` across
+    jax releases; resolve whichever this install provides.
+    """
+    cls = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+# tpu_compiler_params must be bound before the kernel modules import it
+# back from this package (ops -> per-kernel modules -> here).
+from repro.kernels import ops  # noqa: E402,F401
+from repro.kernels.ref import NEG_INF  # noqa: E402,F401

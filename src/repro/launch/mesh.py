@@ -5,6 +5,11 @@ Axis semantics (see DESIGN.md §4): ``model`` = tensor/expert parallelism
 data/FSDP parallelism, ``pod`` = the DCN axis (gradient all-reduce once per
 step, or pipeline handoffs).  Functions, not module constants — importing
 this module never touches jax device state.
+
+All mesh construction goes through :func:`make_mesh_compat`, which papers
+over the ``jax.sharding.AxisType`` API drift: newer jax wants explicit
+``axis_types``; older installs (e.g. 0.4.x) have no such attribute and
+``jax.make_mesh`` rejects the kwarg.
 """
 
 from __future__ import annotations
@@ -12,21 +17,30 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` where supported, ``{}`` otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh_compat(devices_shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Version-portable ``jax.make_mesh`` (omits axis_types when absent)."""
+    return jax.make_mesh(
+        devices_shape, axes, **_axis_types_kwargs(len(axes))
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_for(devices_shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (tests, benchmarks, elastic rescale)."""
-    return jax.make_mesh(
-        devices_shape,
-        axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(devices_shape, axes)
 
 
 def mesh_axes_dict(mesh) -> dict[str, int]:

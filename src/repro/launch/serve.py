@@ -33,7 +33,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--mesh", default="1x1")
-    ap.add_argument("--policy", default="hbm_resident", choices=list(POLICIES))
+    ap.add_argument(
+        "--policy", default="auto", choices=["auto", *POLICIES],
+        help="'auto' consults the placement planner (datapath-bound model)",
+    )
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -50,11 +53,12 @@ def main() -> None:
         ServeConfig(
             batch_slots=args.slots,
             max_len=args.max_len,
-            policy=POLICIES[args.policy],
+            policy=None if args.policy == "auto" else POLICIES[args.policy],
         ),
         params,
         mesh=mesh,
     )
+    log.info("serving with placement policy %s", server.policy.name)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         server.add_request(
@@ -73,7 +77,8 @@ def main() -> None:
     log.info(
         "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
         "(policy %s)",
-        args.requests, total_tokens, dt, total_tokens / dt, args.policy,
+        args.requests, total_tokens, dt, total_tokens / dt,
+        server.policy.name,
     )
 
 

@@ -18,9 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.configs import get_config, smoke_config
-from repro.core.placement import POLICIES
-from repro.core.planner import plan, train_profile
+from repro.configs import ShapeSpec, get_config, smoke_config
+from repro.core.placement import POLICIES, host_available
+from repro.core.planner import plan
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.launch.mesh import make_mesh_for
 from repro.models.model_zoo import ModelBundle
@@ -31,19 +31,42 @@ from repro.train import TrainConfig, init_train_state, make_train_step
 log = logging.getLogger("repro.train")
 
 
-def pick_policy(bundle: ModelBundle, num_chips: int, name: str | None):
+def pick_policy(
+    bundle: ModelBundle,
+    mesh,
+    name: str | None,
+    *,
+    batch: int = 8,
+    seq: int = 128,
+    remat: str = "full",
+):
+    """Planner-selected policy for this training run (unless forced).
+
+    Builds the per-chip :func:`train_profile` from the real run shape —
+    including the gradient all-reduce terms for the mesh's data/pod axes —
+    and only offers the planner tiers this runtime can reach.
+    """
     if name:
         return POLICIES[name]
-    prof = train_profile(
-        name=bundle.cfg.name,
-        param_bytes=bundle.cfg.num_params() * 2,
-        step_flops=bundle.model_flops(
-            type("S", (), {"mode": "train", "global_batch": 8, "seq_len": 128})()
-        ),
-        activation_bytes=1e6,
+    axes = dict(mesh.shape)
+    num_chips = int(mesh.devices.size)
+    prof = bundle.train_workload(
+        ShapeSpec("cli", seq, batch, "train"),
         num_chips=num_chips,
+        data_axis_size=axes.get("data", 1),
+        pod_axis_size=axes.get("pod", 1),
+        remat=remat != "none",
     )
-    best, preds = plan(prof)
+    # Peer/remote tiers stay analysis-level until a donor mesh axis
+    # realizes them (their memory kinds map to local device/host memory
+    # today) — offering them here would let the planner pick a placement
+    # the train step cannot physically produce.
+    best, preds = plan(
+        prof,
+        allow_host=host_available(),
+        allow_peer=False,
+        allow_remote=False,
+    )
     for p in preds:
         log.info("planner: %s", p.explain())
     log.info("planner picked %s", best.policy)
@@ -78,7 +101,10 @@ def main() -> None:
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     bundle = ModelBundle(cfg)
-    policy = pick_policy(bundle, mesh.devices.size, args.policy)
+    policy = pick_policy(
+        bundle, mesh, args.policy,
+        batch=args.batch, seq=args.seq, remat=args.remat,
+    )
 
     tcfg = TrainConfig(
         remat=args.remat,

@@ -119,15 +119,19 @@ class ModelBundle:
         return nbytes
 
     def cache_bytes(self, shape: ShapeSpec) -> float:
+        return self.cache_bytes_for(shape.global_batch, shape.seq_len)
+
+    def cache_bytes_for(self, batch: int, max_len: int) -> float:
+        """Total decode-cache bytes for an explicit (batch, max_len)."""
         import math as _m
 
-        defs = self.cache_defs(shape.global_batch, shape.seq_len)
+        defs = self.cache_defs(batch, max_len)
         leaves = jax.tree.leaves(
             defs, is_leaf=lambda x: hasattr(x, "axes")
         )
         total = 0.0
         for p in leaves:
-            width = 4 if p.dtype == "float32" else 2
+            width = 4 if str(p.dtype) == "float32" else 2
             total += _m.prod(p.shape) * width
         return total
 
@@ -139,6 +143,51 @@ class ModelBundle:
         if shape.mode == "prefill":
             return 2.0 * n * shape.global_batch * shape.seq_len
         return 2.0 * n * shape.global_batch  # one token per row
+
+    # -- planner profiles ---------------------------------------------------
+    # The single source of the workload accounting (param/activation bytes,
+    # flops, streaming granularity) consumed by the launchers, the policy
+    # benchmarks, and the placement-sweep example.
+
+    def train_workload(
+        self,
+        shape: ShapeSpec,
+        *,
+        num_chips: int = 1,
+        data_axis_size: int = 1,
+        pod_axis_size: int = 1,
+        remat: bool = True,
+    ):
+        """Planner :func:`~repro.core.planner.train_profile` for ``shape``."""
+        from repro.core.planner import train_profile
+
+        cfg = self.cfg
+        return train_profile(
+            name=cfg.name,
+            param_bytes=cfg.num_params() * 2,
+            step_flops=self.model_flops(shape),
+            activation_bytes=2.0 * shape.global_batch * shape.seq_len
+            * cfg.d_model * cfg.n_layers,
+            num_chips=num_chips,
+            remat=remat,
+            n_layers=max(cfg.n_layers, 1),
+            data_axis_size=data_axis_size,
+            pod_axis_size=pod_axis_size,
+        )
+
+    def decode_workload(self, shape: ShapeSpec, *, num_chips: int = 1):
+        """Planner :func:`~repro.core.planner.decode_profile` for ``shape``."""
+        from repro.core.planner import decode_profile
+
+        cfg = self.cfg
+        return decode_profile(
+            name=cfg.name,
+            param_bytes=cfg.num_params() * 2,
+            kv_bytes=self.cache_bytes(shape),
+            step_flops=self.model_flops(shape),
+            num_chips=num_chips,
+            n_layers=max(cfg.n_layers, 1),
+        )
 
 
 def get_bundle(arch: str) -> ModelBundle:

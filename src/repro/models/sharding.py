@@ -301,7 +301,7 @@ def defs_to_specs(
     defs,
     mesh: Mesh,
     rules=None,
-    memory_kind: str = "device",
+    memory_kind: str | None = None,
     fsdp_axes: Sequence[str] = (),
 ):
     """Param-def pytree -> NamedSharding pytree."""

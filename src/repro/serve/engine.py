@@ -4,23 +4,37 @@ The serving loop is the paper's Fig. 17 workload industrialized: per decoded
 token, every parameter byte and every cache byte crosses the compute
 datapath once.  The engine owns (a) slot-based continuous batching — new
 requests claim free batch rows, finished rows free them — and (b) the KV
-placement policy: under ``kv_host`` the cache shardings carry
-``pinned_host`` memory kind and stream through PCIe each step (planner
-decides when that beats shrinking the batch).
+placement policy: when ``ServeConfig.policy`` is ``None`` the engine builds
+a decode :class:`~repro.core.planner.WorkloadProfile` from the model config
+and asks :func:`repro.core.planner.plan` for the fastest policy that fits
+every memory pool (logging each prediction and the pick); under ``kv_host``
+the cache shardings carry the host memory kind and stream through PCIe each
+step.  Host tiers are only offered to the planner when the backend exposes
+them (:func:`host_available`); peer/remote tiers are analysis-level until a
+donor mesh axis realizes them, so the auto pick never selects one.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.placement import HBM_RESIDENT, PlacementPolicy, Role
+from repro.core.placement import (
+    POLICIES,
+    PlacementPolicy,
+    Role,
+    host_available,
+)
+from repro.core.planner import plan
 from repro.models.model_zoo import ModelBundle
 from repro.models.sharding import defs_to_specs, use_sharding
+
+log = logging.getLogger("repro.serve.engine")
 
 
 @dataclasses.dataclass
@@ -36,8 +50,47 @@ class Request:
 class ServeConfig:
     batch_slots: int = 8
     max_len: int = 512
-    policy: PlacementPolicy = HBM_RESIDENT
+    #: None -> consult the placement planner (datapath-bound model)
+    policy: PlacementPolicy | None = None
     rules: dict | None = None
+
+
+def plan_serve_policy(
+    bundle: ModelBundle,
+    cfg: ServeConfig,
+    num_chips: int = 1,
+    *,
+    realizable: bool = True,
+) -> PlacementPolicy:
+    """Planner-selected policy for this server's decode workload.
+
+    ``realizable=False`` (no mesh: the server cannot re-place anything)
+    restricts the pick to the default placement.  Peer/remote tiers are
+    analysis-level for now: the engine has no donor mesh axis, so a
+    device_put under those policies would land in *local* HBM — never let
+    the auto pick choose a placement the runtime would silently realize as
+    hbm_resident (and then OOM where the planner predicted a fit).
+    Forcing any policy via ``ServeConfig.policy`` remains possible.
+    """
+    from repro.configs import ShapeSpec
+
+    shape = ShapeSpec("serve", cfg.max_len, cfg.batch_slots, "decode")
+    prof = bundle.decode_workload(shape, num_chips=num_chips)
+    candidates = None if realizable else [POLICIES["hbm_resident"]]
+    best, preds = plan(
+        prof,
+        candidates,
+        allow_host=host_available(),
+        allow_peer=False,
+        allow_remote=False,
+    )
+    for p in preds:
+        log.info("planner: %s", p.explain())
+    log.info(
+        "planner picked %s for %s (%d slots x %d ctx)",
+        best.policy, bundle.cfg.name, cfg.batch_slots, cfg.max_len,
+    )
+    return POLICIES[best.policy]
 
 
 class Server:
@@ -48,15 +101,26 @@ class Server:
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
+        num_chips = int(mesh.devices.size) if mesh is not None else 1
+        self.policy = cfg.policy or plan_serve_policy(
+            bundle, cfg, num_chips, realizable=mesh is not None
+        )
         self._requests: dict[int, Request] = {}
         self._slots: list[int | None] = [None] * cfg.batch_slots
         self._lengths = np.zeros(cfg.batch_slots, np.int32)
         self._caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
         if mesh is not None:
+            # realize the policy for every role the server owns: the KV
+            # cache AND the params (weights_stream keeps params host-side)
             cache_defs = bundle.cache_defs(cfg.batch_slots, cfg.max_len)
-            kind = cfg.policy.memory_kind(Role.KV_CACHE)
+            kind = self.policy.memory_kind(Role.KV_CACHE)
             specs = defs_to_specs(cache_defs, mesh, cfg.rules, memory_kind=kind)
             self._caches = jax.tree.map(jax.device_put, self._caches, specs)
+            param_specs = defs_to_specs(
+                bundle.param_defs(), mesh, cfg.rules,
+                memory_kind=self.policy.memory_kind(Role.PARAMS),
+            )
+            self.params = jax.tree.map(jax.device_put, self.params, param_specs)
         self._decode = jax.jit(
             lambda p, b, c: bundle.decode_step(p, b, c)
         )

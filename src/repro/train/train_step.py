@@ -28,6 +28,7 @@ from repro.core.placement import (
     PlacementPolicy,
     Role,
     Strategy,
+    resolve_memory_kind,
 )
 from repro.models.model_zoo import ModelBundle
 from repro.models.sharding import (
@@ -109,20 +110,6 @@ def make_train_step(
         lambda s: NamedSharding(mesh, s.spec), param_specs
     )
 
-    def move(tree, kind: str):
-        return jax.tree.map(
-            lambda x: jax.device_put(
-                x,
-                NamedSharding(
-                    mesh,
-                    spec_for(x.shape, (None,) * x.ndim, mesh, tcfg.rules),
-                    memory_kind=kind,
-                ),
-            )
-            if False else x,
-            tree,
-        )
-
     # In-jit H2D (to_compute) lowers on every backend; the in-jit D2H
     # return trip (to_storage) only lowers on TPU — elsewhere the state
     # returns in device memory and repin_opt_state moves it back outside
@@ -133,22 +120,26 @@ def make_train_step(
         if not opt_on_host:
             return tree
         # host -> HBM, preserving each leaf's sharding spec
+        kind = resolve_memory_kind("device")
+
         def mv(x):
             s = getattr(x, "sharding", None)
             spec = s.spec if isinstance(s, NamedSharding) else P()
             return jax.device_put(
-                x, NamedSharding(mesh, spec, memory_kind="device")
+                x, NamedSharding(mesh, spec, memory_kind=kind)
             )
         return jax.tree.map(mv, tree)
 
     def to_storage(tree):
         if not opt_on_host or not in_jit_storage:
             return tree
+        kind = resolve_memory_kind("pinned_host")
+
         def mv(x):
             s = getattr(x, "sharding", None)
             spec = s.spec if isinstance(s, NamedSharding) else P()
             return jax.device_put(
-                x, NamedSharding(mesh, spec, memory_kind="pinned_host")
+                x, NamedSharding(mesh, spec, memory_kind=kind)
             )
         return jax.tree.map(mv, tree)
 

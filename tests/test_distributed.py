@@ -39,7 +39,8 @@ class TestQuantizedAllReduce:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import quantized_all_reduce
-        mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         f = shard_map(lambda v: quantized_all_reduce(v[0], "pod")[None],
                       mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
@@ -84,7 +85,8 @@ class TestPipelineParallel:
         run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.train.pipeline_parallel import pipelined_forward
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ("pod",))
         n_stages, n_micro, B, D = 4, 8, 2, 16
         ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, D, D)) * 0.3
         xs = jax.random.normal(jax.random.PRNGKey(1), (n_micro, B, D))
@@ -106,7 +108,8 @@ class TestPipelineParallel:
         run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.train.pipeline_parallel import pipelined_forward
-        mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2,), ("pod",))
         ws = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8)) * 0.3
         xs = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
         def stage_fn(w, x):
@@ -139,8 +142,8 @@ class TestParallelConsistency:
         from repro.data import DataConfig, SyntheticLM
 
         def run(mesh_dims, axes):
-            mesh = jax.make_mesh(mesh_dims, axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat(mesh_dims, axes)
             b = get_smoke_bundle("granite-8b")
             tcfg = TrainConfig(remat="none",
                 optimizer=AdamWConfig(lr=1e-3, warmup_steps=1))
@@ -167,8 +170,8 @@ class TestParallelConsistency:
         from repro.train import TrainConfig, init_train_state, make_train_step
         from repro.optim import AdamWConfig
         from repro.data import DataConfig, SyntheticLM
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
         b = get_smoke_bundle("olmo-1b")
         tcfg = TrainConfig(remat="none", compress_pod_grads=True,
             optimizer=AdamWConfig(lr=3e-3, warmup_steps=5, weight_decay=0.0))
@@ -191,12 +194,13 @@ class TestPlacementPolicies:
         run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.models import get_smoke_bundle
-        from repro.core.placement import OPT_HOST, HBM_RESIDENT
+        from repro.core.placement import (
+            OPT_HOST, HBM_RESIDENT, default_memory_kind, resolve_memory_kind)
         from repro.train import TrainConfig, init_train_state, make_train_step
         from repro.optim import AdamWConfig
         from repro.data import DataConfig, SyntheticLM
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         b = get_smoke_bundle("yi-6b")
         from repro.train.train_step import make_state_specs, repin_opt_state
 
@@ -207,10 +211,13 @@ class TestPlacementPolicies:
                 b, mesh, jax.random.PRNGKey(0), tcfg, policy)
             _, opt_specs = make_state_specs(b, mesh, policy, tcfg.rules,
                                             tcfg.fsdp_axes)
+            # the host kind the backend actually exposes (pinned_host on
+            # TPU; the default kind on CPU where host DRAM == device mem)
+            host_kind = resolve_memory_kind("pinned_host") or default_memory_kind()
             if policy.name == "opt_host":
                 kinds = {x.sharding.memory_kind
                          for x in jax.tree.leaves(opt["master"])}
-                assert kinds == {"pinned_host"}, kinds
+                assert kinds == {host_kind}, (kinds, host_kind)
             step = jax.jit(make_train_step(b, mesh, tcfg, policy))
             data = SyntheticLM(DataConfig(vocab=b.cfg.vocab, seq_len=16,
                                           global_batch=4))
@@ -224,7 +231,7 @@ class TestPlacementPolicies:
             if policy.name == "opt_host":
                 kinds = {x.sharding.memory_kind
                          for x in jax.tree.leaves(opt["master"])}
-                assert kinds == {"pinned_host"}, kinds
+                assert kinds == {host_kind}, (kinds, host_kind)
             return out
         np.testing.assert_allclose(run(HBM_RESIDENT), run(OPT_HOST),
                                    rtol=1e-4, atol=1e-4)

@@ -1,0 +1,221 @@
+"""Planner v2: every predicted term must agree with the datapath bounds.
+
+These are plain-pytest invariants (no hypothesis) so they run even on the
+minimal container: the planner is the datapath model's consumer, and any
+drift between ``predict`` and ``read_bound``/``copy_bound``/
+``collective_bound`` silently invalidates every placement decision.
+"""
+
+import pytest
+
+from repro.core import (
+    DEFAULT_SYSTEM,
+    CollectiveTerm,
+    Link,
+    MemoryTier,
+    Role,
+    WorkloadProfile,
+    collective_bound,
+    copy_bound,
+    eligible_policies,
+    plan,
+    pool_capacities,
+    predict,
+    read_bound,
+)
+from repro.core.placement import (
+    HBM_RESIDENT,
+    KV_HOST,
+    KV_PEER_HBM,
+    KV_REMOTE_HBM,
+    OPT_HOST,
+    POLICIES,
+    WEIGHTS_STREAM,
+)
+
+GB = 1e9
+
+
+def _kv_profile(kv_gb=1.0, param_gb=2.0, chunks=4, **kw):
+    return WorkloadProfile(
+        name="t",
+        flops=1e12,
+        bytes_per_role={Role.PARAMS: param_gb * GB, Role.KV_CACHE: kv_gb * GB},
+        touches_per_role={Role.PARAMS: 1.0, Role.KV_CACHE: 1.0},
+        stream_chunks=chunks,
+        **kw,
+    )
+
+
+class TestPredictMatchesDatapath:
+    def test_hbm_resident_term_is_hbm_read_bound(self):
+        prof = _kv_profile()
+        p = predict(prof, HBM_RESIDENT)
+        b = read_bound(MemoryTier.HBM)
+        nbytes = 3.0 * GB
+        assert p.hbm_s == pytest.approx(nbytes / b.bandwidth + 2 * b.latency)
+        assert p.pcie_s == 0.0 and p.ici_s == 0.0 and p.dcn_s == 0.0
+
+    def test_streamed_host_term_is_copy_bound(self):
+        """A host-streamed role pays copy_bound(HOST, HBM) — the full
+        PCIe+HBM path with per-chunk latency — plus the HBM compute pass."""
+        chunks = 4
+        prof = _kv_profile(chunks=chunks)
+        p = predict(prof, KV_HOST)
+        cb = copy_bound(MemoryTier.HOST, MemoryTier.HBM)
+        assert cb.limiting_link == Link.PCIE
+        assert p.pcie_s == pytest.approx(
+            1.0 * GB / cb.bandwidth + chunks * cb.latency
+        )
+        hb = read_bound(MemoryTier.HBM)
+        # params pass + the streamed KV's HBM pass
+        assert p.hbm_s == pytest.approx(3.0 * GB / hb.bandwidth + 2 * hb.latency)
+
+    def test_shared_link_halving_inherited(self):
+        """The twice-traversed-link rule flows through predict: streaming a
+        role from HOST to HOST-backed staging... i.e. a HOST->HOST copy
+        halves PCIe; the planner's HOST->HBM path must NOT halve (each link
+        crossed once), matching copy_bound exactly."""
+        assert copy_bound(MemoryTier.HOST, MemoryTier.HOST).bandwidth == (
+            pytest.approx(read_bound(MemoryTier.HOST).bandwidth / 2)
+        )
+        cb = copy_bound(MemoryTier.HOST, MemoryTier.HBM)
+        assert cb.bandwidth == pytest.approx(
+            min(DEFAULT_SYSTEM.link_bandwidth(Link.PCIE),
+                DEFAULT_SYSTEM.link_bandwidth(Link.HBM_BUS))
+        )
+
+    def test_peer_policy_bounded_by_ici(self):
+        prof = _kv_profile()
+        p = predict(prof, KV_PEER_HBM)
+        rb = read_bound(MemoryTier.PEER_HBM)
+        assert rb.limiting_link == Link.ICI
+        assert p.ici_s == pytest.approx(1.0 * GB / rb.bandwidth + rb.latency)
+        # peer in-place reads never beat the ICI link
+        assert 1.0 * GB / p.ici_s <= DEFAULT_SYSTEM.link_bandwidth(Link.ICI)
+
+    def test_remote_policy_bounded_by_dcn(self):
+        p = predict(_kv_profile(), KV_REMOTE_HBM)
+        rb = read_bound(MemoryTier.REMOTE_HBM)
+        assert rb.limiting_link == Link.DCN
+        assert p.dcn_s == pytest.approx(1.0 * GB / rb.bandwidth + rb.latency)
+
+    def test_collective_term_is_collective_bound(self):
+        term = CollectiveTerm("all_reduce", Link.ICI, 16, 4 * GB)
+        prof = _kv_profile(collectives=(term,))
+        p = predict(prof, HBM_RESIDENT)
+        assert p.collective_s == pytest.approx(
+            4 * GB / collective_bound(16, Link.ICI, "all_reduce")
+        )
+
+
+class TestCapacityPools:
+    def test_staging_buffer_charged_to_hbm(self):
+        chunks = 4
+        p = predict(_kv_profile(chunks=chunks), KV_HOST)
+        # params resident + double-buffered staging window of the stream
+        assert p.hbm_bytes == pytest.approx(2.0 * GB + 2 * GB / chunks)
+        assert p.host_bytes == pytest.approx(1.0 * GB)
+
+    def test_dual_pool_overflow_detected(self):
+        caps = pool_capacities()
+        # KV bigger than host DRAM: kv_host must overflow the host pool
+        kv_gb = (caps["host"] + GB) / GB
+        p = predict(_kv_profile(kv_gb=kv_gb), KV_HOST)
+        assert not p.fits and "host" in p.overflow_pools
+
+    def test_peer_pool_overflow_detected(self):
+        caps = pool_capacities()
+        kv_gb = (caps["peer_hbm"] + GB) / GB
+        p = predict(_kv_profile(kv_gb=kv_gb), KV_PEER_HBM)
+        assert not p.fits and "peer_hbm" in p.overflow_pools
+
+    def test_all_tiers_have_pools(self):
+        from repro.core.planner import _TIER_POOL
+
+        for tier in MemoryTier:
+            if tier == MemoryTier.VMEM:
+                continue
+            assert tier in _TIER_POOL
+
+
+class TestPlan:
+    def test_small_model_prefers_hbm(self):
+        best, _ = plan(_kv_profile())
+        assert best.policy == "hbm_resident"
+
+    def test_oversized_kv_offloads(self):
+        caps = pool_capacities()
+        kv_gb = (caps["hbm"] + GB) / GB  # KV alone overflows local HBM
+        best, preds = plan(_kv_profile(kv_gb=kv_gb, param_gb=1.0))
+        assert best.policy != "hbm_resident"
+        assert best.fits
+        infeasible = {p.policy for p in preds if not p.fits}
+        assert "hbm_resident" in infeasible
+
+    def test_allow_flags_filter_tiers(self):
+        names = {p.name for p in eligible_policies(allow_host=False)}
+        assert "hbm_resident" in names
+        assert not names & {"opt_host", "kv_host", "weights_stream",
+                            "opt_peer_host"}
+        names = {p.name for p in eligible_policies(allow_peer=False)}
+        assert not names & {"kv_peer_hbm", "weights_peer_hbm",
+                            "opt_peer_host"}
+        names = {p.name for p in eligible_policies(allow_remote=False)}
+        assert "kv_remote_hbm" not in names
+
+    def test_plan_without_host_still_picks(self):
+        caps = pool_capacities()
+        kv_gb = (caps["hbm"] + GB) / GB
+        best, preds = plan(
+            _kv_profile(kv_gb=kv_gb, param_gb=1.0), allow_host=False
+        )
+        # host tiers unreachable: the planner must fall back to a peer tier
+        assert best.policy in {"kv_peer_hbm", "kv_remote_hbm"}
+        assert all(
+            p.policy not in {"kv_host", "weights_stream", "opt_host"}
+            for p in preds
+        )
+
+    def test_registry_covers_seed_and_peer_policies(self):
+        assert {
+            "hbm_resident", "opt_host", "kv_host", "weights_stream",
+            "kv_peer_hbm", "weights_peer_hbm", "opt_peer_host",
+            "kv_remote_hbm",
+        } <= set(POLICIES)
+
+    def test_offload_never_increases_hbm(self):
+        for gb in (0.1, 1.0, 4.0, 8.0):
+            prof = WorkloadProfile(
+                name="t",
+                flops=1e15,
+                bytes_per_role={
+                    Role.PARAMS: gb * GB,
+                    Role.MASTER: 2 * gb * GB,
+                    Role.OPT_STATE: 4 * gb * GB,
+                },
+                touches_per_role={
+                    Role.PARAMS: 3, Role.MASTER: 2, Role.OPT_STATE: 2
+                },
+            )
+            r = predict(prof, HBM_RESIDENT)
+            o = predict(prof, OPT_HOST)
+            w = predict(prof, WEIGHTS_STREAM)
+            assert o.hbm_bytes <= r.hbm_bytes
+            assert w.hbm_bytes <= r.hbm_bytes
+
+
+class TestServeIntegration:
+    def test_plan_serve_policy_logs_and_picks(self, caplog):
+        import logging
+
+        from repro.models import get_smoke_bundle
+        from repro.serve.engine import ServeConfig, plan_serve_policy
+
+        bundle = get_smoke_bundle("olmo-1b")
+        with caplog.at_level(logging.INFO, logger="repro.serve.engine"):
+            policy = plan_serve_policy(
+                bundle, ServeConfig(batch_slots=2, max_len=64)
+            )
+        assert policy.name in POLICIES
+        assert any("planner picked" in r.message for r in caplog.records)
