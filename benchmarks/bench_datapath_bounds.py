@@ -1,18 +1,29 @@
 """Paper Fig. 3 + Table II + Figs. 15-17: theoretical bound matrices, the
 memory-API capability table, and the generated placement-policy table —
-all from the datapath model (pure analysis, no device measurement).
+from the datapath model, plus a **measured peer/remote column** whenever
+this process sees >= 2 devices (CI runs one matrix leg under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the donor-axis
+datapath is exercised on every push).
 
 The policy table is the planner's §IV decision surface: for a reference
 full-size architecture, the predicted step time of **every** placement
 policy in both the training and decode regimes, each time term derived
 from the datapath bounds (read/copy/collective) — the Figs. 15-17 rows,
-generated rather than hand-derived."""
+generated rather than hand-derived.  The measured column realizes the two
+headline peer placements on a real donor mesh: an in-place reduction over
+a donor-sharded buffer (``kv_peer_hbm``'s read path) and a
+:class:`~repro.core.placement.DonorStream` double-buffered window sweep
+(``weights_peer_hbm``'s layer-streaming path), each emitted next to its
+``read_bound``/``copy_bound`` prediction."""
 
 from __future__ import annotations
+
+import time
 
 from benchmarks.common import emit
 from repro.core import (
     DEFAULT_SYSTEM,
+    DonorStream,
     MemoryTier,
     POLICIES,
     bound_matrix,
@@ -56,6 +67,79 @@ def _emit_policy_table() -> None:
             )
 
 
+def _emit_measured_donor_column() -> None:
+    """Measured peer/remote datapaths on a donor mesh (>= 2 devices).
+
+    CPU host devices share one physical memory, so the measured number
+    calibrates the *mechanism* (a forced gather across the donor axis,
+    double-buffered window streaming), not the link bandwidth; on TPU the
+    same code times the real ICI/DCN hop.  Single-device runs emit a skip
+    marker instead — the analytic rows above are then the only
+    peer/remote information.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if jax.device_count() < 2:
+        emit("peer_measured", 0.0,
+             "skipped: 1 device, no donor axis "
+             "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return
+
+    from repro.launch.mesh import make_donor_mesh
+
+    n_windows, window_elems = 8, 1 << 20          # 8 x 4 MiB f32 windows
+    nbytes = n_windows * window_elems * 4
+    for tier, remote in ((MemoryTier.PEER_HBM, False),
+                         (MemoryTier.REMOTE_HBM, True)):
+        mesh = make_donor_mesh((1,), ("data",), 2, remote=remote)
+        axis = "donor_pod" if remote else "donor"
+        stack = jax.device_put(
+            jnp.arange(n_windows * window_elems, dtype=jnp.float32)
+            .reshape(n_windows, window_elems),
+            NamedSharding(mesh, P(axis)),
+        )
+        # kv_peer_hbm's datapath: every donor-resident byte pulled to the
+        # local slice.  A plain partitioned reduction would NOT measure
+        # this (GSPMD computes on the donor shard and ships a scalar), so
+        # force the full gather across the donor axis via out_shardings —
+        # on TPU that is the ICI/DCN hop the read_bound prices.
+        gather = jax.jit(
+            lambda x: x + 0.0,
+            out_shardings=NamedSharding(mesh, P()),
+        )
+        gather(stack).block_until_ready()          # compile
+        t0 = time.perf_counter()
+        iters = 8
+        for _ in range(iters):
+            gather(stack).block_until_ready()
+        read_s = (time.perf_counter() - t0) / iters
+        rb = read_bound(tier)
+        emit(
+            f"peer_read_measured[{tier}]",
+            read_s * 1e6,
+            f"measured={nbytes/read_s/1e9:.1f}GB/s "
+            f"predicted<={rb.bandwidth/1e9:.1f}GB/s via {rb.limiting_link}",
+        )
+        # weights_peer_hbm's datapath: double-buffered window streaming.
+        # One full untimed sweep warms lazy runtime setup; the timed sweep
+        # uses a fresh stream so all n_windows fetches land in the region.
+        for w in DonorStream(stack, mesh, P(), n_windows):
+            jax.block_until_ready(w)
+        t0 = time.perf_counter()
+        for w in DonorStream(stack, mesh, P(), n_windows):
+            jax.block_until_ready(w)
+        stream_s = time.perf_counter() - t0
+        cb = copy_bound(tier, MemoryTier.HBM)
+        emit(
+            f"peer_stream_measured[{tier}]",
+            stream_s * 1e6,
+            f"measured={nbytes/stream_s/1e9:.1f}GB/s "
+            f"predicted<={cb.bandwidth/1e9:.1f}GB/s via {cb.limiting_link}",
+        )
+
+
 def main() -> None:
     # Fig. 3 (left): read/write bounds per tier
     for t in TIERS:
@@ -76,6 +160,8 @@ def main() -> None:
             )
     # Figs. 15-17: the generated per-policy step-time table
     _emit_policy_table()
+    # measured peer/remote column (donor mesh; skipped on 1 device)
+    _emit_measured_donor_column()
     # Table II analogue: memory kinds the runtime actually exposes
     import jax
 

@@ -36,8 +36,10 @@ MODULES = [
     "bench_managed_vs_system",
 ]
 
-#: modules that evaluate the datapath model only — no device measurement.
-#: ``--analytic`` runs exactly these (the CI smoke-check mode).
+#: modules centered on the datapath model — the CI smoke-check mode.
+#: ``--analytic`` runs exactly these.  bench_datapath_bounds is pure
+#: analysis on one device; when >= 2 devices are visible it additionally
+#: times the measured donor column (peer/remote gather + stream).
 ANALYTIC_MODULES = [
     "bench_datapath_bounds",
 ]
@@ -48,7 +50,8 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single module")
     ap.add_argument(
         "--analytic", action="store_true",
-        help="analytic (no-measure) modules only — datapath-model smoke",
+        help="datapath-model smoke modules only (adds the measured donor "
+             "column when >= 2 devices are visible)",
     )
     args = ap.parse_args()
 

@@ -11,23 +11,32 @@ Two parts, mirroring the paper's predicted-vs-measured method:
 
 2. **Predicted vs measured**: the same-family smoke config is actually run
    on this host — one jitted decode step per policy, with params/KV placed
-   under the policy's (backend-resolved) memory kinds — next to the
-   planner's prediction for *this* machine's workload shape.  The final
-   column is the paper's headline metric, measured/predicted.  On a CPU
-   container every tier resolves to the same physical memory, so measured
-   times coincide by construction; a TPU backend separates the *host*
-   tiers for real.  Peer/remote rows are starred: this single-device
-   harness has no donor mesh axis, so their bytes physically land in
-   local memory and the measured number is an hbm_resident run — the
-   prediction is the information in those rows.
+   under the policy's (backend-resolved) memory kinds and, for peer/remote
+   policies, sharded across a **donor mesh axis** — next to the planner's
+   prediction for *this* machine's workload shape.  The final column is
+   the paper's headline metric, measured/predicted.  On a CPU container
+   every tier resolves to the same physical memory, so measured times
+   coincide by construction; a TPU backend separates the *host* tiers for
+   real and puts peer/remote bytes an ICI/DCN hop away.  Peer/remote rows
+   need >= 2 devices (run under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU to
+   exercise them); with a single device they are starred: no donor mesh
+   axis exists, the engine would refuse to realize them, and only the
+   prediction is reported.
+
+``--analytic`` prints the predicted tables only (the CI smoke mode).
 """
 
 import argparse
 import time
 
 from repro.configs import SHAPES, ShapeSpec, get_config, list_archs, smoke_config
-from repro.core.hardware import MemoryTier
-from repro.core.placement import POLICIES, Role, host_available
+from repro.core.placement import (
+    POLICIES,
+    Role,
+    TIER_DONOR_AXIS,
+    host_available,
+)
 from repro.core.planner import plan, predict
 from repro.models.model_zoo import ModelBundle
 
@@ -69,30 +78,54 @@ def predicted_tables(arch: str, chips: int, data_axis: int,
         print("  " + p.explain() + mark)
 
 
+def _mesh_for_policy(policy):
+    """Mesh that realizes ``policy``: a plain 1-device mesh for local
+    tiers, a 2-slice donor mesh (ICI or DCN axis per the tier) for
+    peer/remote tiers — or None when this host lacks the devices."""
+    import jax
+
+    from repro.launch.mesh import make_donor_mesh, make_mesh_for
+
+    donor_axes = {
+        TIER_DONOR_AXIS[t] for t in policy.tiers() if t in TIER_DONOR_AXIS
+    }
+    if not donor_axes:
+        return make_mesh_for((1,), ("data",))
+    if jax.device_count() < 2 or len(donor_axes) > 1:
+        return None
+    return make_donor_mesh(
+        (1,), ("data",), 2, remote=donor_axes == {"donor_pod"}
+    )
+
+
 def _measure_decode_ms(bundle, policy, slots: int, max_len: int,
-                       iters: int) -> float:
-    """Wall-clock of one jitted decode step under ``policy`` placements."""
+                       iters: int) -> float | None:
+    """Wall-clock of one jitted decode step under ``policy`` placements,
+    realized on a donor mesh for peer/remote tiers (None when this host
+    cannot realize the policy)."""
     import jax
     import jax.numpy as jnp
 
-    from repro.launch.mesh import make_mesh_for
-    from repro.models.sharding import defs_to_specs
+    from repro.models.sharding import policy_specs
 
-    mesh = make_mesh_for((1,), ("data",))
+    mesh = _mesh_for_policy(policy)
+    if mesh is None:
+        return None
     params = bundle.init_params(jax.random.PRNGKey(0), "float32")
-    param_specs = defs_to_specs(
-        bundle.param_defs(), mesh,
-        memory_kind=policy.memory_kind(Role.PARAMS),
+    param_specs = policy_specs(
+        bundle.param_defs(), mesh, None, Role.PARAMS, policy
     )
     params = jax.tree.map(jax.device_put, params, param_specs)
     caches = bundle.init_cache(slots, max_len)
-    cache_specs = defs_to_specs(
-        bundle.cache_defs(slots, max_len), mesh,
-        memory_kind=policy.memory_kind(Role.KV_CACHE),
+    cache_specs = policy_specs(
+        bundle.cache_defs(slots, max_len), mesh, None, Role.KV_CACHE, policy
     )
     caches = jax.tree.map(jax.device_put, caches, cache_specs)
 
-    step = jax.jit(lambda p, b, c: bundle.decode_step(p, b, c))
+    step = jax.jit(
+        lambda p, b, c: bundle.decode_step(p, b, c),
+        out_shardings=(None, cache_specs),
+    )
     batch = {
         "tokens": jnp.ones((slots, 1), jnp.int32),
         "lengths": jnp.full((slots,), 4, jnp.int32),
@@ -108,6 +141,8 @@ def _measure_decode_ms(bundle, policy, slots: int, max_len: int,
 
 def predicted_vs_measured(arch: str, slots: int, max_len: int,
                           iters: int) -> None:
+    import jax
+
     bundle = ModelBundle(smoke_config(arch))
     cfg = bundle.cfg
 
@@ -116,20 +151,24 @@ def predicted_vs_measured(arch: str, slots: int, max_len: int,
     )
     print(f"\n=== predicted vs measured: {cfg.name} decode on this host "
           f"({slots} slots x {max_len} ctx, host_available="
-          f"{host_available()}) ===")
+          f"{host_available()}, devices={jax.device_count()}) ===")
     print(f"{'policy':<20} {'fits':<5} {'predicted ms':>12} "
           f"{'measured ms':>12} {'meas/pred':>10}")
-    local_tiers = {MemoryTier.HBM, MemoryTier.HOST}
+    starred = False
     for policy in POLICIES.values():
         pred = predict(prof, policy)
         meas = _measure_decode_ms(bundle, policy, slots, max_len, iters)
+        if meas is None:
+            starred = True
+            print(f"{policy.name + '*':<20} {str(pred.fits):<5} "
+                  f"{pred.step_s*1e3:>12.4f} {'-':>12} {'-':>10}")
+            continue
         ratio = meas / (pred.step_s * 1e3) if pred.step_s else float("inf")
-        # starred: peer/remote tiers have no donor axis on this 1-device
-        # harness; the 'measured' run physically used local memory
-        star = "" if policy.tiers() <= local_tiers else "*"
-        print(f"{policy.name + star:<20} {str(pred.fits):<5} "
+        print(f"{policy.name:<20} {str(pred.fits):<5} "
               f"{pred.step_s*1e3:>12.4f} {meas:>12.4f} {ratio:>10.1f}")
-    print("* measured with bytes in local memory (no donor mesh axis here)")
+    if starred:
+        print("* not measurable here: needs a donor mesh axis (>=2 devices; "
+              "set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
 
 
 def main() -> None:
@@ -143,8 +182,10 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--iters", type=int, default=8)
-    ap.add_argument("--no-measure", action="store_true",
-                    help="predicted tables only (pure analysis)")
+    ap.add_argument("--no-measure", "--analytic", dest="no_measure",
+                    action="store_true",
+                    help="predicted tables only (pure analysis; the CI "
+                         "smoke mode)")
     args = ap.parse_args()
 
     predicted_tables(args.arch, args.chips, args.data_axis, args.pod_axis)

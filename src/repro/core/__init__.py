@@ -32,6 +32,7 @@ from repro.core.datapath import (  # noqa: F401
     write_bound,
 )
 from repro.core.placement import (  # noqa: F401
+    DONOR_AXIS,
     HBM_RESIDENT,
     KV_HOST,
     KV_PEER_HBM,
@@ -39,17 +40,24 @@ from repro.core.placement import (  # noqa: F401
     OPT_HOST,
     OPT_PEER_HOST,
     POLICIES,
+    REMOTE_DONOR_AXIS,
     WEIGHTS_PEER_HBM,
     WEIGHTS_STREAM,
+    DonorAxisError,
+    DonorStream,
     Placement,
     PlacementPolicy,
     Role,
     Strategy,
+    donor_allow_flags,
+    donor_axes_for,
     host_available,
     resolve_memory_kind,
+    validate_policy_for_mesh,
 )
 from repro.core.planner import (  # noqa: F401
     CollectiveTerm,
+    PlacementOOMError,
     PolicyPrediction,
     WorkloadProfile,
     decode_profile,

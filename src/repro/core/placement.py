@@ -18,13 +18,30 @@ Physical realization on the runtime: JAX exposes ``NamedSharding(mesh,
 spec, memory_kind=...)`` with kinds ``device`` (HBM), ``pinned_host`` and
 ``unpinned_host`` — the TPU analogue of the paper's Table II allocation
 APIs (``numa_alloc_onnode`` ≈ explicit memory_kind; first-touch ≈ default
-``device``).  Peer/remote tiers are realized as *device* memory on a donor
-mesh axis (the bytes live in HBM, just a hop away — exactly the paper's
-HBM-p case), so their memory kind is ``device``.  Not every backend exposes
-every kind (the CPU backend of older jax exposes only ``unpinned_host``),
-so every kind the policy requests is passed through
-:func:`resolve_memory_kind`, which degrades gracefully to what the backend
-actually has.
+``device``).  Not every backend exposes every kind (the CPU backend of
+older jax exposes only ``unpinned_host``), so every kind the policy
+requests is passed through :func:`resolve_memory_kind`, which degrades
+gracefully to what the backend actually has.
+
+Peer and remote tiers are **executable**, not analysis-only: they are
+realized on a *donor mesh axis* (see :mod:`repro.launch.mesh`).  A mesh
+axis named :data:`DONOR_AXIS` (``"donor"``, an ICI axis) marks a group of
+chips whose memory is donated to the computation — far-tier tensors are
+sharded across that axis (each donor slice holds ``1/axis_size`` of the
+bytes in its own pool, a hop away over the link, exactly the paper's HBM-p
+placement), while every local-tier tensor ignores the axis and is
+replicated over it.  :data:`REMOTE_DONOR_AXIS` (``"donor_pod"``) is the
+same convention one interconnect further out: a donor group reached over
+DCN, realizing :attr:`MemoryTier.REMOTE_HBM`.  ``PEER_HBM``/``REMOTE_HBM``
+keep memory kind ``device`` (the bytes live in a peer's HBM);
+``PEER_HOST`` pins to the donor's host DRAM.  :func:`put_like` and
+:func:`repro.models.sharding.policy_specs` emit donor-extended specs;
+:func:`validate_policy_for_mesh` refuses to realize a peer/remote policy
+on a mesh without the required axis — a placement must never silently
+degrade to ``hbm_resident`` (and then OOM where the planner predicted a
+fit).  :class:`DonorStream` is the ``Strategy.STREAM`` datapath: per-layer
+windows fetched from the donor slices into a double-buffered local staging
+slot, overlapping the fetch of window ``i+1`` with the use of ``i``.
 """
 
 from __future__ import annotations
@@ -69,6 +86,75 @@ _TIER_TO_KIND = {
 
 #: tiers whose bytes live in a host DRAM pool (vs an HBM pool).
 HOST_TIERS = frozenset({MemoryTier.HOST, MemoryTier.PEER_HOST})
+
+#: tiers that live on another chip/host and need a donor mesh axis.
+PEER_TIERS = frozenset({MemoryTier.PEER_HBM, MemoryTier.PEER_HOST})
+REMOTE_TIERS = frozenset({MemoryTier.REMOTE_HBM})
+
+#: donor mesh-axis convention (see module docstring + repro.launch.mesh):
+#: an axis with this name groups the local slice with the memory-donor
+#: slices; peer/remote-tier tensors are sharded across it.
+DONOR_AXIS = "donor"
+REMOTE_DONOR_AXIS = "donor_pod"
+
+#: which donor axis realizes each far tier (ICI donors vs DCN donors).
+TIER_DONOR_AXIS: dict[MemoryTier, str] = {
+    MemoryTier.PEER_HBM: DONOR_AXIS,
+    MemoryTier.PEER_HOST: DONOR_AXIS,
+    MemoryTier.REMOTE_HBM: REMOTE_DONOR_AXIS,
+}
+
+
+class DonorAxisError(ValueError):
+    """A placement needs a donor mesh axis the active mesh does not have."""
+
+
+def _mesh_axes(mesh) -> dict[str, int]:
+    return dict(mesh.shape) if mesh is not None else {}
+
+
+def donor_axes_for(mesh, tier: MemoryTier) -> tuple[str, ...]:
+    """Mesh axes that realize ``tier``'s donor placement (empty for local
+    tiers).  Raises :class:`DonorAxisError` when ``tier`` needs a donor
+    axis and ``mesh`` has none of (usable) size >= 2."""
+    axis = TIER_DONOR_AXIS.get(tier)
+    if axis is None:
+        return ()
+    if _mesh_axes(mesh).get(axis, 1) < 2:
+        raise DonorAxisError(
+            f"tier {tier} needs a {axis!r} mesh axis of size >= 2 to be "
+            f"realized; mesh axes are {_mesh_axes(mesh) or None} (see "
+            "repro.launch.mesh.make_donor_mesh)"
+        )
+    return (axis,)
+
+
+def donor_allow_flags(mesh) -> dict[str, bool]:
+    """``allow_*`` kwargs for :func:`repro.core.planner.plan`, derived
+    from what this runtime can realize: host tiers need a distinct host
+    memory space, peer tiers a :data:`DONOR_AXIS`, remote tiers a
+    :data:`REMOTE_DONOR_AXIS`.  With ``mesh=None`` nothing non-local is
+    realizable."""
+    axes = _mesh_axes(mesh)
+    return {
+        "allow_host": host_available(),
+        "allow_peer": axes.get(DONOR_AXIS, 1) > 1,
+        "allow_remote": axes.get(REMOTE_DONOR_AXIS, 1) > 1,
+    }
+
+
+def validate_policy_for_mesh(policy: "PlacementPolicy", mesh) -> None:
+    """Raise :class:`DonorAxisError` if ``policy`` places any role in a
+    peer/remote tier the mesh cannot realize.  Realizers call this before
+    ``device_put`` so a donor placement never silently lands in local
+    memory."""
+    for role, pl in policy.placements.items():
+        try:
+            donor_axes_for(mesh, pl.tier)
+        except DonorAxisError as e:
+            raise DonorAxisError(
+                f"policy {policy.name!r} places {role.value} in {pl.tier}: {e}"
+            ) from None
 
 
 # ---------------------------------------------------------------------------
@@ -299,9 +385,30 @@ def put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy):
     """device_put a pytree under the policy's placement for ``role``.
 
     ``specs`` is a matching pytree of PartitionSpecs (or a single spec).
+    For peer/remote placements the spec of every leaf is extended over the
+    tier's donor axis (validated first — a missing donor axis raises
+    :class:`DonorAxisError` rather than silently landing locally).
+
+    This is the array-level twin of
+    :func:`repro.models.sharding.policy_specs` for trees without Param
+    defs.  Lacking logical axis names, a STREAM placement targets the
+    first divisible free dim — dim 0 of a stacked tree, i.e. the stack
+    dim — where ``policy_specs`` targets the dim *labelled* ``layers``.
     """
+    pl = policy.placement(role)
+    donor = donor_axes_for(mesh, pl.tier)
+
     def _put(x, spec):
-        return jax.device_put(x, policy.sharding(mesh, spec, role))
+        if donor:
+            from repro.models.sharding import donor_extend
+
+            spec = donor_extend(
+                spec, x.shape, mesh, donor,
+                prefer_stack=pl.strategy is Strategy.STREAM,
+            )
+        return jax.device_put(
+            x, NamedSharding(mesh, spec, memory_kind=policy.memory_kind(role))
+        )
 
     if isinstance(specs, PartitionSpec):
         return jax.tree.map(lambda x: _put(x, specs), tree)
@@ -339,3 +446,57 @@ def to_host(tree, mesh: Mesh, specs):
     if isinstance(specs, PartitionSpec):
         return jax.tree.map(lambda x: _mv(x, specs), tree)
     return jax.tree.map(_mv, tree, specs)
+
+
+class DonorStream:
+    """Double-buffered per-window streaming from a donor-resident stack.
+
+    The executable form of ``Strategy.STREAM`` over a donor axis (the
+    planner's ``copy_bound(PEER_*/REMOTE_*, HBM)`` datapath): ``tree``'s
+    leaves are stacked along dim 0 into ``n_windows`` windows (layer-wise
+    weight streaming stacks per-layer params) and live sharded across the
+    donor slices; :meth:`window` returns window ``i`` device_put into the
+    **local** sharding and immediately issues the (asynchronous) fetch of
+    window ``i+1`` into the second staging slot, so the next fetch crosses
+    the ICI/DCN path while the caller computes on window ``i``.  At most
+    ``depth`` windows are held locally — the double-buffered staging
+    footprint the planner charges against local HBM (``2 * bytes /
+    stream_chunks``).
+    """
+
+    def __init__(self, tree, mesh: Mesh, specs, n_windows: int,
+                 depth: int = 2):
+        self._tree = tree
+        self._mesh = mesh
+        self._specs = specs
+        self.n_windows = int(n_windows)
+        self.depth = max(int(depth), 2)
+        self._buf: dict[int, object] = {}
+        self._kind = resolve_memory_kind("device")
+
+    def _fetch(self, i: int):
+        def mv(x, spec):
+            return jax.device_put(
+                x[i], NamedSharding(self._mesh, spec, memory_kind=self._kind)
+            )
+
+        if isinstance(self._specs, PartitionSpec):
+            return jax.tree.map(lambda x: mv(x, self._specs), self._tree)
+        return jax.tree.map(mv, self._tree, self._specs)
+
+    def window(self, i: int):
+        """Window ``i`` in local memory; prefetches the next ``depth - 1``
+        windows behind it (``depth=2`` = classic double buffering)."""
+        if not 0 <= i < self.n_windows:
+            raise IndexError(f"window {i} of {self.n_windows}")
+        keep = range(i, min(i + self.depth, self.n_windows))
+        for j in keep:           # j == i first: the caller's window, then
+            if j not in self._buf:     # the async prefetches behind it
+                self._buf[j] = self._fetch(j)
+        for k in [k for k in self._buf if k not in keep]:
+            del self._buf[k]  # bound staging residency to `depth` windows
+        return self._buf[i]
+
+    def __iter__(self):
+        for i in range(self.n_windows):
+            yield self.window(i)

@@ -21,6 +21,18 @@ DRAM, and the peer/remote donor pools.
 Peer and remote pools model a *memory-donor* chip (the paper's peer-access
 experiments: the donor's memory is idle while the accessor works), so their
 capacity is one donor's full pool.
+
+Peer/remote policies are executable, not analysis-only: the runtime
+realizes them by sharding the role's tensors across a donor mesh axis
+(:data:`repro.core.placement.DONOR_AXIS` over ICI,
+:data:`~repro.core.placement.REMOTE_DONOR_AXIS` over DCN).  Callers derive
+the ``allow_peer``/``allow_remote`` gates from the active mesh via
+:func:`repro.core.placement.donor_allow_flags` — the auto-pick may select
+a peer/remote tier exactly when the mesh has the donor axis that realizes
+it.  When nothing fits, :func:`plan` either degrades to the smallest-HBM
+policy (default) or, with ``require_fit=True``, raises
+:class:`PlacementOOMError` reporting the overflow of every memory pool
+per policy.
 """
 
 from __future__ import annotations
@@ -269,8 +281,11 @@ def eligible_policies(
     """Filter policies to tiers the runtime can actually reach.
 
     ``allow_host=False`` when the backend exposes no host memory space
-    (:func:`repro.core.placement.host_available`), ``allow_peer=False`` on
-    single-chip meshes, ``allow_remote=False`` on single-pod meshes.
+    (:func:`repro.core.placement.host_available`); ``allow_peer``/
+    ``allow_remote`` track whether the mesh has the donor axis that
+    realizes those tiers (``donor`` on ICI / ``donor_pod`` on DCN) —
+    :func:`repro.core.placement.donor_allow_flags` derives all three from
+    the active mesh.
     """
     out = []
     # note: an explicitly empty candidate list must stay empty (-> the
@@ -289,6 +304,26 @@ def eligible_policies(
     return out
 
 
+class PlacementOOMError(RuntimeError):
+    """No eligible policy fits; carries the per-pool overflow report."""
+
+    def __init__(self, preds: list[PolicyPrediction],
+                 system: SystemSpec = DEFAULT_SYSTEM):
+        self.predictions = preds
+        caps = pool_capacities(system)
+        lines = []
+        for p in preds:
+            over = ", ".join(
+                f"{pool} {p.bytes_by_pool[pool]/2**30:.2f}GiB "
+                f"> cap {caps[pool]/2**30:.2f}GiB"
+                for pool in p.overflow_pools
+            )
+            lines.append(f"  {p.policy}: {over}")
+        super().__init__(
+            "no placement policy fits every memory pool:\n" + "\n".join(lines)
+        )
+
+
 def plan(
     profile: WorkloadProfile,
     policies: Iterable[PlacementPolicy] | None = None,
@@ -297,13 +332,16 @@ def plan(
     allow_host: bool = True,
     allow_peer: bool = True,
     allow_remote: bool = True,
+    require_fit: bool = False,
 ) -> tuple[PolicyPrediction, list[PolicyPrediction]]:
     """Evaluate eligible policies; return (best-feasible, all-predictions).
 
     Best = min step time among policies whose every pool fits; if none fit,
     the one with the smallest local-HBM residency (degraded but runnable) —
     mirroring the paper's observation that a slower placement that *runs*
-    beats an OOM.
+    beats an OOM.  ``require_fit=True`` turns that fallback into a
+    :class:`PlacementOOMError` whose message reports, per policy, every
+    pool that overflows and by how much.
     """
     preds = [
         predict(profile, p, system)
@@ -319,6 +357,8 @@ def plan(
     feasible = [p for p in preds if p.fits]
     if feasible:
         best = min(feasible, key=lambda p: p.step_s)
+    elif require_fit:
+        raise PlacementOOMError(preds, system)
     else:
         best = min(preds, key=lambda p: p.hbm_bytes)
     return best, preds

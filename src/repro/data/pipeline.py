@@ -11,11 +11,15 @@ paper's overlap argument).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
+import time
 from typing import Iterator
 
 import numpy as np
+
+log = logging.getLogger("repro.data.pipeline")
 
 
 @dataclasses.dataclass
@@ -87,7 +91,16 @@ class SyntheticLM:
 
 
 class Prefetcher:
-    """Background-thread prefetch with bounded queue (overlap host prep)."""
+    """Background-thread prefetch with bounded queue (overlap host prep).
+
+    Shutdown contract: the worker never blocks indefinitely in ``q.put``
+    (it re-checks the stop event on a timeout), ``close()`` drains the
+    queue *while joining* the worker — a one-shot drain would let a
+    producer blocked under backpressure repopulate the queue and leak the
+    thread — and a producer exception is re-raised by ``close()`` (as
+    well as by ``__next__``) instead of being swallowed with the drained
+    sentinel.
+    """
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._it = it
@@ -97,32 +110,88 @@ class Prefetcher:
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
+    def _put(self, item) -> bool:
+        """Bounded put that gives up when the stop event is set."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _run(self):
         try:
             for item in self._it:
-                if self._stop.is_set():
+                if not self._put(item):
                     return
-                self._q.put(item)
-        except Exception as e:                      # pragma: no cover
+        except Exception as e:
             self._err = e
         finally:
-            self._q.put(None)
+            # end-of-stream sentinel: wakes a consumer blocked in q.get
+            # (carrying _err if set).  _put keeps retrying a full queue
+            # until it lands or close() takes over the shutdown.
+            self._put(None)
 
     def __iter__(self):
         return self
 
+    def _end_of_stream(self):
+        """Raise the producer's error (delivered once) or StopIteration."""
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+        raise StopIteration
+
     def __next__(self):
-        item = self._q.get()
+        # Never block on a queue no one will refill: once the worker is
+        # gone (close() drained its sentinel, or it died) an empty queue
+        # is end-of-stream, not "wait for more".
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if self._stop.is_set() or not self._thread.is_alive():
+                    # the worker may have published its final item(s) and
+                    # exited between our Empty and the liveness check —
+                    # drain before declaring end-of-stream
+                    try:
+                        item = self._q.get_nowait()
+                        break
+                    except queue.Empty:
+                        self._end_of_stream()
         if item is None:
-            if self._err:
-                raise self._err
-            raise StopIteration
+            self._end_of_stream()
         return item
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
+        """Stop and join the worker; re-raise a pending producer error.
+
+        Drains the queue in lockstep with the join so a worker blocked in
+        ``q.put`` under backpressure gets unblocked, observes the stop
+        event, and exits — then drains whatever it published last (incl.
+        the ``None`` sentinel) so nothing keeps the thread referenced.
+        """
         self._stop.set()
+        deadline = time.monotonic() + timeout
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+        if self._thread.is_alive():                  # pragma: no cover
+            log.warning("Prefetcher worker did not exit within %.1fs "
+                        "(producer stuck outside q.put?)", timeout)
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        if self._err is not None:
+            # deliver once: a repeated close() (e.g. in a finally block)
+            # must be a no-op, not re-raise and mask a primary exception
+            err, self._err = self._err, None
+            raise err

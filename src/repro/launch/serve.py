@@ -33,6 +33,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--donor", type=int, default=1,
+                    help="prepend an ICI donor axis of this size (>=2 "
+                         "unlocks kv_peer_hbm / weights_peer_hbm)")
+    ap.add_argument("--remote-donor", type=int, default=1,
+                    help="prepend a DCN donor axis of this size (>=2 "
+                         "unlocks kv_remote_hbm)")
     ap.add_argument(
         "--policy", default="auto", choices=["auto", *POLICIES],
         help="'auto' consults the placement planner (datapath-bound model)",
@@ -42,6 +48,10 @@ def main() -> None:
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     dims = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(dims):]
+    if args.remote_donor > 1:
+        dims, axes = (args.remote_donor, *dims), ("donor_pod", *axes)
+    if args.donor > 1:
+        dims, axes = (args.donor, *dims), ("donor", *axes)
     mesh = make_mesh_for(dims, axes) if np.prod(dims) > 1 else None
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)

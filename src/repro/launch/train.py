@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import ShapeSpec, get_config, smoke_config
-from repro.core.placement import POLICIES, host_available
+from repro.core.placement import POLICIES, donor_allow_flags
 from repro.core.planner import plan
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.launch.mesh import make_mesh_for
@@ -57,18 +57,17 @@ def pick_policy(
         pod_axis_size=axes.get("pod", 1),
         remat=remat != "none",
     )
-    # Peer/remote tiers stay analysis-level until a donor mesh axis
-    # realizes them (their memory kinds map to local device/host memory
-    # today) — offering them here would let the planner pick a placement
-    # the train step cannot physically produce.
-    best, preds = plan(
-        prof,
-        allow_host=host_available(),
-        allow_peer=False,
-        allow_remote=False,
-    )
+    # Offer exactly the tiers this mesh realizes: host tiers when the
+    # backend has a host memory space, peer tiers when the mesh has a
+    # 'donor' axis, remote tiers when it has a 'donor_pod' axis (the
+    # donor-axis sharding in make_state_specs physically produces them).
+    best, preds = plan(prof, **donor_allow_flags(mesh))
     for p in preds:
         log.info("planner: %s", p.explain())
+    if not best.fits:
+        for p in preds:
+            log.warning("planner OOM: %s overflows pools %s",
+                        p.policy, ", ".join(p.overflow_pools) or "none")
     log.info("planner picked %s", best.policy)
     return POLICIES[best.policy]
 
@@ -84,6 +83,12 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--mesh", default="1x1",
                     help="e.g. 2x2x2 -> (pod,data,model); 4x2 -> (data,model)")
+    ap.add_argument("--donor", type=int, default=1,
+                    help="prepend an ICI donor axis of this size (>=2 "
+                         "unlocks the peer placement tiers)")
+    ap.add_argument("--remote-donor", type=int, default=1,
+                    help="prepend a DCN donor axis of this size (>=2 "
+                         "unlocks kv_remote_hbm)")
     ap.add_argument("--policy", default=None, choices=[None, *POLICIES])
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
@@ -97,6 +102,10 @@ def main() -> None:
 
     dims = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("pod", "data", "model")[-len(dims):] if len(dims) > 1 else ("data",)
+    if args.remote_donor > 1:
+        dims, axes = (args.remote_donor, *dims), ("donor_pod", *axes)
+    if args.donor > 1:
+        dims, axes = (args.donor, *dims), ("donor", *axes)
     mesh = make_mesh_for(dims, axes)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)

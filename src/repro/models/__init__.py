@@ -6,7 +6,9 @@ from repro.models.sharding import (  # noqa: F401
     Param,
     defs_to_shapes,
     defs_to_specs,
+    donor_extend,
     materialize,
+    policy_specs,
     shard,
     spec_for,
     use_sharding,

@@ -16,11 +16,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import threading
 from typing import Mapping, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_log = logging.getLogger("repro.models.sharding")
 
 
 #: default rules — the paper-faithful baseline: TP over the fast 'model'
@@ -222,6 +225,7 @@ def fsdp_extend(
     mesh: Mesh,
     fsdp_axes: Sequence[str],
     logical_axes: Sequence[str | None] | None = None,
+    prefer_stack: bool = False,
 ) -> P:
     """ZeRO-style extra sharding: place ``fsdp_axes`` on the first dim the
     base spec leaves unsharded and that they divide.  Used for parameters
@@ -232,6 +236,9 @@ def fsdp_extend(
     sharding the scan dim makes every layer-slice a cross-data reshard and
     the AD transpose then emits full replicated f32 grad stacks (observed
     5.4 GiB/device); sharding a within-layer dim keeps slices sharded.
+    ``prefer_stack=True`` flips that preference — donor-axis *streaming*
+    placements want whole layers resident on the donor slices so each
+    fetched window is one contiguous layer.
     """
     mesh_axes = dict(mesh.shape)
     fsdp_axes = [a for a in fsdp_axes if a in mesh_axes]
@@ -263,15 +270,15 @@ def fsdp_extend(
         i for i, dim in enumerate(shape)
         if entries[i] is None and dim % size == 0 and dim >= size
     ]
-    non_layer = [
+    layer = [
         i for i in candidates
-        if not (logical_axes and i < len(logical_axes)
-                and logical_axes[i] == "layers")
+        if logical_axes and i < len(logical_axes)
+        and logical_axes[i] == "layers"
     ]
-    if non_layer:
-        return assign(non_layer[0])
-    if candidates:
-        return assign(candidates[0])
+    non_layer = [i for i in candidates if i not in layer]
+    ordered = layer + non_layer if prefer_stack else non_layer + layer
+    if ordered:
+        return assign(ordered[0])
     return spec
 
 
@@ -303,15 +310,105 @@ def defs_to_specs(
     rules=None,
     memory_kind: str | None = None,
     fsdp_axes: Sequence[str] = (),
+    donor_axes: Sequence[str] = (),
+    donor_prefer_stack: bool = False,
 ):
-    """Param-def pytree -> NamedSharding pytree."""
+    """Param-def pytree -> NamedSharding pytree.
+
+    ``donor_axes`` extends every spec over a donor mesh axis (peer/remote
+    tier realization — see :mod:`repro.core.placement`); it is applied
+    after ``fsdp_axes`` so the two compose onto different dims.
+    """
     def one(p: Param):
         spec = spec_for(p.shape, p.axes, mesh, rules)
         if fsdp_axes:
             spec = fsdp_extend(spec, p.shape, mesh, fsdp_axes, p.axes)
+        if donor_axes:
+            spec = donor_extend(
+                spec, p.shape, mesh, donor_axes, p.axes,
+                prefer_stack=donor_prefer_stack,
+            )
         return NamedSharding(mesh, spec, memory_kind=memory_kind)
 
     return jax.tree.map(one, defs, is_leaf=is_param)
+
+
+def spec_axes(spec: P) -> set[str]:
+    """Every mesh-axis name a PartitionSpec references (tuples flattened)."""
+    out: set[str] = set()
+    for e in spec:
+        out.update(e if isinstance(e, tuple) else [e])
+    out.discard(None)
+    return out
+
+
+def donor_extend(
+    spec: P,
+    shape: Sequence[int],
+    mesh: Mesh,
+    donor_axes: Sequence[str],
+    logical_axes: Sequence[str | None] | None = None,
+    prefer_stack: bool = False,
+) -> P:
+    """Extend ``spec`` over the donor axes (peer/remote realization).
+
+    Same mechanics as :func:`fsdp_extend`; ``prefer_stack=True`` targets
+    the stacked ``layers`` dim first, so a ``Strategy.STREAM`` placement
+    keeps whole layers on the donor slices and each streamed window is one
+    contiguous layer (the planner's per-chunk ``copy_bound`` granularity).
+    """
+    return fsdp_extend(
+        spec, shape, mesh, donor_axes, logical_axes, prefer_stack
+    )
+
+
+def policy_specs(
+    defs,
+    mesh: Mesh,
+    rules,
+    role,
+    policy,
+    fsdp_axes: Sequence[str] = (),
+):
+    """NamedShardings realizing ``policy``'s placement of ``role``.
+
+    The one entry point every realizer (serve engine, train state, sweep,
+    benchmarks) uses: resolves the role's memory kind on this backend and,
+    for peer/remote tiers, the donor mesh axes that physically hold the
+    bytes.  Raises :class:`repro.core.placement.DonorAxisError` if the
+    mesh cannot realize the tier — the placement never silently degrades
+    to local memory.
+    """
+    from repro.core.placement import Strategy, donor_axes_for
+
+    pl = policy.placement(role)
+    donor = donor_axes_for(mesh, pl.tier)
+    specs = defs_to_specs(
+        defs, mesh, rules,
+        memory_kind=policy.memory_kind(role),
+        fsdp_axes=fsdp_axes,
+        donor_axes=donor,
+        donor_prefer_stack=pl.strategy is Strategy.STREAM,
+    )
+    if donor:
+        # Per-leaf divisibility can defeat the donor extension (no free
+        # dim divisible by the axis size) — those leaves stay in LOCAL
+        # memory while the planner charged them to the donor pool, so
+        # make the degradation loud.
+        local = sum(
+            1 for s in jax.tree.leaves(specs)
+            if not (spec_axes(s.spec) & set(donor))
+        )
+        if local:
+            _log.warning(
+                "policy %s/%s: %d of %d tensors could not be donor-"
+                "sharded over %s (no divisible free dim) and stay in "
+                "local memory — donor-pool capacity accounting is "
+                "optimistic for them",
+                policy.name, role.value, local,
+                len(jax.tree.leaves(specs)), donor,
+            )
+    return specs
 
 
 def stack_defs(defs, count: int, axis_name: str | None = "layers"):

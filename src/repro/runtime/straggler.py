@@ -51,7 +51,14 @@ class StepTimeMonitor:
         return False
 
     def record(self, dt: float) -> bool:
-        """Record one step; returns True if flagged as a straggler step."""
+        """Record one step; returns True if flagged as a straggler step.
+
+        Flagged samples are kept OUT of the rolling window: appending them
+        would inflate the median baseline, so a persistent straggler would
+        stop exceeding ``threshold x median`` after a few flags and go
+        undetected — the window holds only healthy steps, the flags list
+        holds the stragglers, and ``summary()`` reports both.
+        """
         self.steps += 1
         if self.steps <= self.cfg.warmup_steps:
             return False
@@ -77,12 +84,16 @@ class StepTimeMonitor:
                     self._consecutive = 0
             else:
                 self._consecutive = 0
-        self.times.append(dt)
+        if not flagged:
+            self.times.append(dt)
         return flagged
 
     def summary(self) -> dict:
+        """Healthy-window stats + straggler count.  ``median_s``/``p99_s``
+        describe the clean baseline (flagged steps excluded, consistent
+        with ``record``); ``flags`` counts the excluded stragglers."""
         if not self.times:
-            return {"steps": self.steps}
+            return {"steps": self.steps, "flags": len(self.flags)}
         ts = sorted(self.times)
         return {
             "steps": self.steps,

@@ -9,17 +9,24 @@ a decode :class:`~repro.core.planner.WorkloadProfile` from the model config
 and asks :func:`repro.core.planner.plan` for the fastest policy that fits
 every memory pool (logging each prediction and the pick); under ``kv_host``
 the cache shardings carry the host memory kind and stream through PCIe each
-step.  Host tiers are only offered to the planner when the backend exposes
-them (:func:`host_available`); peer/remote tiers are analysis-level until a
-donor mesh axis realizes them, so the auto pick never selects one.
+step.  Tiers are offered to the planner exactly when this runtime realizes
+them: host tiers when the backend exposes a distinct host memory space
+(:func:`host_available`), peer tiers (``kv_peer_hbm``,
+``weights_peer_hbm``, ``opt_peer_host``) when the mesh has a ``donor``
+axis, and ``kv_remote_hbm`` when it has a ``donor_pod`` axis — under a
+donor mesh the auto pick may (and with the cache out of local headroom,
+will) choose a peer tier, and the engine realizes it by sharding the
+role's tensors across the donor slices
+(:func:`repro.models.sharding.policy_specs`).  A forced
+``ServeConfig.policy`` that names a peer/remote tier on a donor-less mesh
+raises :class:`repro.core.placement.DonorAxisError` instead of silently
+serving from local HBM.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,11 +35,12 @@ from repro.core.placement import (
     POLICIES,
     PlacementPolicy,
     Role,
-    host_available,
+    donor_allow_flags,
+    validate_policy_for_mesh,
 )
 from repro.core.planner import plan
 from repro.models.model_zoo import ModelBundle
-from repro.models.sharding import defs_to_specs, use_sharding
+from repro.models.sharding import policy_specs
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -60,32 +68,36 @@ def plan_serve_policy(
     cfg: ServeConfig,
     num_chips: int = 1,
     *,
-    realizable: bool = True,
+    mesh=None,
 ) -> PlacementPolicy:
     """Planner-selected policy for this server's decode workload.
 
-    ``realizable=False`` (no mesh: the server cannot re-place anything)
-    restricts the pick to the default placement.  Peer/remote tiers are
-    analysis-level for now: the engine has no donor mesh axis, so a
-    device_put under those policies would land in *local* HBM — never let
-    the auto pick choose a placement the runtime would silently realize as
-    hbm_resident (and then OOM where the planner predicted a fit).
-    Forcing any policy via ``ServeConfig.policy`` remains possible.
+    With ``mesh=None`` the server cannot re-place anything, so the pick is
+    restricted to the default placement.  With a mesh, the candidate tiers
+    are exactly the ones this runtime realizes
+    (:func:`repro.core.placement.donor_allow_flags`): host tiers when the
+    backend has a host memory space, peer/remote tiers when the mesh has
+    the ``donor``/``donor_pod`` axis that physically holds their bytes —
+    so the auto pick never chooses a placement the engine would have to
+    silently realize as ``hbm_resident``.  When nothing fits, the
+    least-HBM policy is returned and the per-pool overflow is logged (the
+    OOM report the operator acts on).  Forcing any policy via
+    ``ServeConfig.policy`` remains possible.
     """
     from repro.configs import ShapeSpec
 
     shape = ShapeSpec("serve", cfg.max_len, cfg.batch_slots, "decode")
     prof = bundle.decode_workload(shape, num_chips=num_chips)
-    candidates = None if realizable else [POLICIES["hbm_resident"]]
-    best, preds = plan(
-        prof,
-        candidates,
-        allow_host=host_available(),
-        allow_peer=False,
-        allow_remote=False,
-    )
+    candidates = None if mesh is not None else [POLICIES["hbm_resident"]]
+    best, preds = plan(prof, candidates, **donor_allow_flags(mesh))
     for p in preds:
         log.info("planner: %s", p.explain())
+    if not best.fits:
+        for p in preds:
+            log.warning(
+                "planner OOM: %s overflows pools %s",
+                p.policy, ", ".join(p.overflow_pools) or "none",
+            )
     log.info(
         "planner picked %s for %s (%d slots x %d ctx)",
         best.policy, bundle.cfg.name, cfg.batch_slots, cfg.max_len,
@@ -103,31 +115,64 @@ class Server:
         self.mesh = mesh
         num_chips = int(mesh.devices.size) if mesh is not None else 1
         self.policy = cfg.policy or plan_serve_policy(
-            bundle, cfg, num_chips, realizable=mesh is not None
+            bundle, cfg, num_chips, mesh=mesh
         )
+        # A forced peer/remote policy needs the donor axis that realizes
+        # it — refuse up front rather than serving from local HBM.
+        validate_policy_for_mesh(self.policy, mesh)
         self._requests: dict[int, Request] = {}
         self._slots: list[int | None] = [None] * cfg.batch_slots
         self._lengths = np.zeros(cfg.batch_slots, np.int32)
         self._caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
+        cache_specs = None
         if mesh is not None:
             # realize the policy for every role the server owns: the KV
-            # cache AND the params (weights_stream keeps params host-side)
+            # cache AND the params (weights_stream keeps params host-side;
+            # kv_peer_hbm/weights_peer_hbm shard across the donor slices)
             cache_defs = bundle.cache_defs(cfg.batch_slots, cfg.max_len)
-            kind = self.policy.memory_kind(Role.KV_CACHE)
-            specs = defs_to_specs(cache_defs, mesh, cfg.rules, memory_kind=kind)
-            self._caches = jax.tree.map(jax.device_put, self._caches, specs)
-            param_specs = defs_to_specs(
-                bundle.param_defs(), mesh, cfg.rules,
-                memory_kind=self.policy.memory_kind(Role.PARAMS),
+            cache_specs = policy_specs(
+                cache_defs, mesh, cfg.rules, Role.KV_CACHE, self.policy
+            )
+            self._caches = jax.tree.map(
+                jax.device_put, self._caches, cache_specs
+            )
+            param_specs = policy_specs(
+                bundle.param_defs(), mesh, cfg.rules, Role.PARAMS, self.policy
             )
             self.params = jax.tree.map(jax.device_put, self.params, param_specs)
         self._decode = jax.jit(
-            lambda p, b, c: bundle.decode_step(p, b, c)
+            lambda p, b, c: bundle.decode_step(p, b, c),
+            # pin the returned cache to its realized placement so a donor
+            # or host placement survives across steps instead of drifting
+            # to whatever layout XLA prefers for the first output
+            **({} if cache_specs is None
+               else {"out_shardings": (None, cache_specs)}),
         )
         self._pending: list[Request] = []
 
     # -- request lifecycle -------------------------------------------------
     def add_request(self, req: Request) -> None:
+        """Queue a request, validating it against the cache extent.
+
+        Prefill writes ``len(prompt) - 1`` cache positions and the decode
+        loop at least one more, so a prompt only fits when ``len(prompt) <
+        max_len``.  Admitting a longer one would advance ``_lengths`` past
+        the cache and silently clamp/corrupt KV writes — reject it here,
+        logged, before it ever claims a slot.
+        """
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) >= self.cfg.max_len:
+            log.warning(
+                "rejecting request %d: prompt of %d tokens needs "
+                "len(prompt)+1 cache positions but max_len=%d",
+                req.rid, len(req.prompt), self.cfg.max_len,
+            )
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"does not fit max_len={self.cfg.max_len} "
+                "(need len(prompt) < max_len)"
+            )
         self._requests[req.rid] = req
         self._pending.append(req)
 
@@ -150,14 +195,30 @@ class Server:
                 row_tok = jnp.zeros(
                     (self.cfg.batch_slots, 1), jnp.int32
                 ).at[i, 0].set(toks[0, t])
-                lens = jnp.asarray(self._lengths, jnp.int32)
                 _, self._caches = self._decode(
                     self.params,
-                    {"tokens": row_tok, "lengths": lens},
+                    {"tokens": row_tok, "lengths": self._lengths_dev()},
                     self._caches,
                 )
                 self._lengths[i] += 1
             self._slots[i] = req.rid
+
+    def _lengths_dev(self) -> jnp.ndarray:
+        """Device copy of the per-slot lengths.
+
+        Must COPY: ``jnp.asarray`` of a numpy array can be zero-copy (CPU
+        backend), aliasing ``_lengths``'s buffer into the asynchronously
+        dispatched decode — a subsequent ``_lengths[i] += 1`` then races
+        the device read and corrupts the step's masking/cache writes.
+        """
+        return jnp.array(self._lengths, jnp.int32)
+
+    def _free_slot(self, i: int) -> None:
+        """The single place a slot returns to the pool: clears the slot
+        assignment and its cache length together (stale cache rows beyond
+        the zeroed length are masked out and overwritten by next prefill)."""
+        self._slots[i] = None
+        self._lengths[i] = 0
 
     # -- one decode tick -----------------------------------------------------
     def step(self) -> int:
@@ -175,7 +236,7 @@ class Server:
             self.params,
             {
                 "tokens": jnp.asarray(last_tokens),
-                "lengths": jnp.asarray(self._lengths),
+                "lengths": self._lengths_dev(),
             },
             self._caches,
         )
@@ -189,8 +250,7 @@ class Server:
                 or self._lengths[i] >= self.cfg.max_len - 1
             ):
                 req.done = True
-                self._slots[i] = None
-                self._lengths[i] = 0
+                self._free_slot(i)
         return len(active)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:

@@ -32,7 +32,7 @@ from repro.core.placement import (
 )
 from repro.models.model_zoo import ModelBundle
 from repro.models.sharding import (
-    defs_to_specs,
+    policy_specs,
     spec_for,
     use_sharding,
 )
@@ -62,15 +62,20 @@ def make_state_specs(
     fsdp_axes: tuple = ("data",),
     zero_stage: int = 3,
 ):
-    """NamedShardings for (params, opt_state) under the placement policy."""
+    """NamedShardings for (params, opt_state) under the placement policy.
+
+    Realized via :func:`policy_specs`, so a peer/remote placement (e.g.
+    ``opt_peer_host``'s spill of master+moments to a donor's host DRAM)
+    lands on the mesh's donor axis — and raises ``DonorAxisError`` when
+    the mesh has none, instead of silently staying local.
+    """
     defs = bundle.param_defs()
-    param_specs = defs_to_specs(
-        defs, mesh, rules, memory_kind=policy.memory_kind(Role.PARAMS),
+    param_specs = policy_specs(
+        defs, mesh, rules, Role.PARAMS, policy,
         fsdp_axes=fsdp_axes if zero_stage >= 3 else (),
     )
-    opt_kind = policy.memory_kind(Role.OPT_STATE)
-    opt_member = defs_to_specs(
-        defs, mesh, rules, memory_kind=opt_kind, fsdp_axes=fsdp_axes
+    opt_member = policy_specs(
+        defs, mesh, rules, Role.OPT_STATE, policy, fsdp_axes=fsdp_axes
     )
     opt_specs = {
         "master": opt_member,

@@ -2,6 +2,7 @@
 restart-on-failure, straggler detection, elastic reshard, data pipeline."""
 
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +118,30 @@ class TestStraggler:
         mon = StepTimeMonitor(StragglerConfig(warmup_steps=3))
         assert mon.record(100.0) is False  # compile step ignored
 
+    def test_flagged_steps_stay_out_of_the_median_window(self):
+        """Regression: flagged step times used to be appended to the
+        rolling window, inflating the median until a persistent straggler
+        stopped exceeding threshold*median and went unflagged."""
+        import statistics
+
+        mon = StepTimeMonitor(
+            StragglerConfig(window=20, threshold=2.0, patience=100,
+                            warmup_steps=0)
+        )
+        for _ in range(10):
+            mon.record(0.1)
+        # a long run of stragglers: every one must keep being flagged
+        # against the *clean* 0.1 median
+        for _ in range(15):
+            assert mon.record(0.5) is True
+        assert len(mon.flags) == 15
+        assert all(f["median"] == pytest.approx(0.1) for f in mon.flags)
+        assert 0.5 not in mon.times
+        assert statistics.median(mon.times) == pytest.approx(0.1)
+        s = mon.summary()
+        assert s["flags"] == 15
+        assert s["median_s"] == pytest.approx(0.1)
+
 
 class TestDataPipeline:
     def test_deterministic(self):
@@ -164,3 +189,44 @@ class TestDataPipeline:
                 next(pre)["tokens"], next(direct)["tokens"]
             )
         pre.close()
+        assert not pre._thread.is_alive()
+
+    def test_prefetcher_close_under_backpressure_joins_worker(self):
+        """Regression: close() drained the queue once but never joined, so
+        a producer blocked in q.put repopulated the queue and leaked the
+        thread."""
+        def endless():
+            i = 0
+            while True:
+                yield i
+                i += 1
+
+        pre = Prefetcher(endless(), depth=1)
+        assert next(pre) == 0
+        time.sleep(0.1)   # let the producer block on the full queue
+        pre.close()
+        assert not pre._thread.is_alive()
+        # idempotent: a second close on a dead worker is a no-op
+        pre.close()
+
+    def test_prefetcher_close_reraises_producer_error(self):
+        """Regression: the error sentinel could be swallowed by close()'s
+        drain; the producer's exception must surface."""
+        def broken():
+            yield {"x": 1}
+            raise RuntimeError("producer exploded")
+
+        pre = Prefetcher(broken(), depth=1)
+        assert next(pre) == {"x": 1}
+        time.sleep(0.1)   # let the producer hit the exception
+        with pytest.raises(RuntimeError, match="producer exploded"):
+            pre.close()
+
+    def test_prefetcher_error_surfaces_on_next_too(self):
+        def broken():
+            raise RuntimeError("early boom")
+            yield  # pragma: no cover
+
+        pre = Prefetcher(broken(), depth=1)
+        with pytest.raises(RuntimeError, match="early boom"):
+            next(pre)

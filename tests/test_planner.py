@@ -205,6 +205,93 @@ class TestPlan:
             assert w.hbm_bytes <= r.hbm_bytes
 
 
+class _FakeMesh:
+    """Duck-typed mesh: donor_allow_flags only reads ``.shape``."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+class TestDonorMeshGating:
+    """The auto-pick may select peer/remote tiers exactly when the mesh
+    has the donor axis that realizes them (acceptance: ISSUE 2)."""
+
+    def test_flags_follow_mesh_axes(self):
+        from repro.core.placement import donor_allow_flags
+
+        assert donor_allow_flags(None)["allow_peer"] is False
+        assert donor_allow_flags(None)["allow_remote"] is False
+        flags = donor_allow_flags(_FakeMesh(data=4, model=2))
+        assert not flags["allow_peer"] and not flags["allow_remote"]
+        flags = donor_allow_flags(_FakeMesh(donor=2, data=2))
+        assert flags["allow_peer"] and not flags["allow_remote"]
+        flags = donor_allow_flags(_FakeMesh(donor_pod=2, donor=2, data=2))
+        assert flags["allow_peer"] and flags["allow_remote"]
+
+    def test_plan_picks_peer_tier_under_donor_mesh(self):
+        from repro.core.placement import donor_allow_flags
+
+        caps = pool_capacities()
+        # KV alone fits a donor's pool, but params+KV overflow local HBM
+        # and host tiers are unreachable: only a peer tier can serve this.
+        kv_gb = (caps["hbm"] - GB) / GB
+        prof = _kv_profile(kv_gb=kv_gb, param_gb=2.0)
+        flags = donor_allow_flags(_FakeMesh(donor=2, data=2))
+        flags["allow_host"] = False
+        best, preds = plan(prof, **flags)
+        assert best.fits
+        assert best.policy in {"kv_peer_hbm", "weights_peer_hbm"}
+        # with no donor axis the prior restriction still holds
+        flags = donor_allow_flags(_FakeMesh(data=4))
+        flags["allow_host"] = False
+        best, preds = plan(prof, **flags)
+        assert {p.policy for p in preds} == {"hbm_resident"}
+        assert not best.fits
+
+    def test_validate_policy_for_mesh(self):
+        from repro.core.placement import (
+            DonorAxisError,
+            validate_policy_for_mesh,
+        )
+
+        validate_policy_for_mesh(HBM_RESIDENT, None)
+        validate_policy_for_mesh(KV_PEER_HBM, _FakeMesh(donor=2))
+        validate_policy_for_mesh(KV_REMOTE_HBM, _FakeMesh(donor_pod=2))
+        with pytest.raises(DonorAxisError, match="donor"):
+            validate_policy_for_mesh(KV_PEER_HBM, None)
+        with pytest.raises(DonorAxisError, match="kv_cache"):
+            validate_policy_for_mesh(KV_PEER_HBM, _FakeMesh(data=4))
+        with pytest.raises(DonorAxisError, match="donor_pod"):
+            validate_policy_for_mesh(KV_REMOTE_HBM, _FakeMesh(donor=2))
+
+
+class TestPerPoolOOMReport:
+    def test_overflow_lists_every_pool(self):
+        caps = pool_capacities()
+        prof = _kv_profile(
+            kv_gb=(caps["peer_hbm"] + GB) / GB,
+            param_gb=(caps["hbm"] + GB) / GB,
+        )
+        p = predict(prof, KV_PEER_HBM)
+        assert set(p.overflow_pools) == {"hbm", "peer_hbm"}
+
+    def test_require_fit_raises_with_per_pool_report(self):
+        from repro.core.planner import PlacementOOMError
+
+        caps = pool_capacities()
+        kv_gb = (caps["hbm"] + caps["host"] + GB) / GB  # fits nowhere
+        with pytest.raises(PlacementOOMError) as exc:
+            plan(
+                _kv_profile(kv_gb=kv_gb, param_gb=1.0),
+                require_fit=True,
+            )
+        msg = str(exc.value)
+        # the report names the overflowing pool and capacity per policy
+        assert "hbm_resident" in msg and "hbm " in msg and "cap" in msg
+        assert "kv_host" in msg and "host" in msg
+        assert exc.value.predictions
+
+
 class TestServeIntegration:
     def test_plan_serve_policy_logs_and_picks(self, caplog):
         import logging

@@ -160,6 +160,54 @@ class TestServing:
         assert req.out_tokens == toks
 
 
+class TestServeAdmission:
+    """Regression: _admit used to accept prompts with len(prompt)-1 >=
+    max_len, advancing _lengths past the cache extent and silently
+    clamping/corrupting KV writes — validation now happens on
+    add_request, and freed slots clear their bookkeeping in one place."""
+
+    def _server(self, max_len=16, slots=2):
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        return bundle, Server(
+            bundle, ServeConfig(batch_slots=slots, max_len=max_len), params
+        )
+
+    def test_overlong_prompt_rejected(self):
+        bundle, server = self._server(max_len=16)
+        for bad_len in (16, 17, 40):
+            with pytest.raises(ValueError, match="does not fit"):
+                server.add_request(Request(
+                    rid=bad_len,
+                    prompt=np.arange(bad_len, dtype=np.int32) % bundle.cfg.vocab,
+                    max_new_tokens=4,
+                ))
+        assert not server._pending and not server._requests
+
+    def test_empty_prompt_rejected(self):
+        _, server = self._server()
+        with pytest.raises(ValueError, match="empty prompt"):
+            server.add_request(Request(
+                rid=0, prompt=np.zeros(0, np.int32), max_new_tokens=4
+            ))
+
+    def test_longest_admissible_prompt_serves_and_frees_slot(self):
+        bundle, server = self._server(max_len=16, slots=1)
+        prompt = (np.arange(15, dtype=np.int32) + 1) % bundle.cfg.vocab
+        req = Request(rid=0, prompt=prompt, max_new_tokens=8)
+        server.add_request(req)          # len(prompt) == max_len - 1: fits
+        server.run_until_done(max_steps=100)
+        assert req.done and len(req.out_tokens) >= 1
+        # lengths never ran past the cache extent
+        assert server._lengths.max() == 0   # slot freed -> bookkeeping clear
+        assert server._slots == [None]
+        # the freed slot is reusable for a fresh request
+        req2 = Request(rid=1, prompt=prompt[:4], max_new_tokens=2)
+        server.add_request(req2)
+        server.run_until_done(max_steps=100)
+        assert req2.done and len(req2.out_tokens) == 2
+
+
 class TestPlannerIntegration:
     def test_decode_placement_flips_with_model_size(self):
         # small model: everything fits -> hbm_resident; model >> HBM: the
