@@ -4,14 +4,23 @@ Measured: the smoke-scale LM decoding N tokens with the KV cache and/or
 weights placed in ``device`` vs ``pinned_host`` memory kinds (the CPU
 runtime exposes both, so the *relative* placement effect is real).
 Analytic: the planner's per-policy step-time prediction for the full
-yi-6b / gemma3-27b configs — the paper's figure as a table."""
+yi-6b / gemma3-27b configs — the paper's figure as a table.
+
+Serve: the continuous-batching engine end-to-end with its zero-copy hot
+path (donated caches, chunked batched prefill, on-device state), reporting
+prefill and decode tokens/s *separately* and writing them to
+``BENCH_serve.json`` so CI records the serving-perf trajectory per commit.
+``--smoke`` runs only this leg at smoke scale."""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import SHAPES, get_config
@@ -112,9 +121,79 @@ def analytic() -> None:
             )
 
 
+def serve(out_path: str = "BENCH_serve.json", *, requests: int = 8,
+          prompt_len: int = 24, max_new: int = 12) -> dict:
+    """Serve-loop throughput with the prefill/decode phases split out.
+
+    One row (and one JSON entry) per measured configuration: the engine's
+    own phase counters give prefill tokens/s (chunked batched admission)
+    and decode tokens/s (donated-cache, on-device-state steps) — the two
+    rates the datapath model prices separately.
+    """
+    from repro.serve import Request, ServeConfig, Server
+
+    arch = "yi-6b"
+    bundle = get_smoke_bundle(arch)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    results = {}
+    for chunk in (8, 32):
+        server = Server(
+            bundle,
+            ServeConfig(batch_slots=4, max_len=96, prefill_chunk=chunk),
+            params,
+        )
+        server.add_requests(
+            Request(
+                rid=i,
+                prompt=rng.integers(
+                    1, bundle.cfg.vocab, prompt_len
+                ).astype(np.int32),
+                max_new_tokens=max_new,
+            )
+            for i in range(requests)
+        )
+        server.run_until_done()
+        tp = server.throughput()
+        key = f"{arch},chunk{chunk}"
+        results[key] = {
+            "arch": arch,
+            "prefill_chunk": chunk,
+            "batch_slots": 4,
+            "requests": requests,
+            "prompt_len": prompt_len,
+            "max_new": max_new,
+            **tp,
+        }
+        emit(
+            f"serve_prefill[{key}]",
+            1e6 / max(tp["prefill_tps"], 1e-9),
+            f"{tp['prefill_tps']:.1f}tok/s",
+        )
+        emit(
+            f"serve_decode[{key}]",
+            1e6 / max(tp["decode_tps"], 1e-9),
+            f"{tp['decode_tps']:.1f}tok/s",
+        )
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    return results
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="serve-throughput smoke only (writes BENCH_serve.json)",
+    )
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args, _ = ap.parse_known_args()
+    if args.smoke:
+        serve(args.out, requests=4, prompt_len=16, max_new=6)
+        return
     measured()
     analytic()
+    serve(args.out)
 
 
 if __name__ == "__main__":

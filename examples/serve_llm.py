@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/serve_llm.py [--policy kv_host]
 
 Serves a stream of synthetic requests through the continuous-batching
-engine and reports throughput per placement policy — the paper's Fig. 17
-experiment as a runnable service loop.
+engine — batched admission into the chunked prefill path, donated-cache
+decode steps — and reports prefill vs decode tokens/s per placement
+policy: the paper's Fig. 17 experiment as a runnable service loop.
 """
 
 import argparse
@@ -24,6 +25,7 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--policy", default=None, choices=[None, *POLICIES])
     args = ap.parse_args()
 
@@ -35,7 +37,12 @@ def main() -> None:
     for pname in policies:
         server = Server(
             bundle,
-            ServeConfig(batch_slots=3, max_len=128, policy=POLICIES[pname]),
+            ServeConfig(
+                batch_slots=3,
+                max_len=128,
+                prefill_chunk=args.prefill_chunk,
+                policy=POLICIES[pname],
+            ),
             params,
         )
         reqs = [
@@ -48,14 +55,18 @@ def main() -> None:
             )
             for i in range(args.requests)
         ]
-        for r in reqs:
-            server.add_request(r)
+        server.add_requests(reqs)          # batched admission
         t0 = time.perf_counter()
         server.run_until_done()
         dt = time.perf_counter() - t0
         total = sum(len(r.out_tokens) for r in reqs)
-        print(f"[{pname}] {args.requests} requests, {total} tokens "
-              f"in {dt:.2f}s -> {total/dt:.1f} tok/s")
+        tp = server.throughput()
+        print(
+            f"[{pname}] {args.requests} requests, {total} tokens in "
+            f"{dt:.2f}s -> {total/dt:.1f} tok/s overall | prefill "
+            f"{tp['prefill_tps']:.1f} tok/s ({tp['prefill_tokens']} tok) | "
+            f"decode {tp['decode_tps']:.1f} tok/s ({tp['decode_tokens']} tok)"
+        )
         for r in reqs[:2]:
             print(f"  req {r.rid}: prompt {r.prompt[:6]}... -> {r.out_tokens}")
 

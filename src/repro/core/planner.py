@@ -450,3 +450,45 @@ def decode_profile(
         collective_s=collective_s,
         stream_chunks=max(int(n_layers), 1),
     )
+
+
+def prefill_profile(
+    *,
+    name: str,
+    param_bytes: float,
+    kv_bytes: float,
+    chunk_flops: float,
+    activation_bytes: float = 0.0,
+    collective_s: float = 0.0,
+    num_chips: int = 1,
+    n_layers: int = 8,
+) -> WorkloadProfile:
+    """Per-chip chunked-prefill profile (one batched admission dispatch).
+
+    The serve engine writes whole prompt chunks per dispatch instead of
+    replaying tokens through decode steps, so per chunk the params move
+    through the datapath once, and the KV role is touched ~once: the chunk
+    appends its keys (a write of ``chunk/max_len`` of the cache) and reads
+    the prior cache, which over a full prompt averages half the final
+    cache per chunk — together one cache-sized pass through whatever
+    datapath (HBM bus, PCIe stream, donor link) the policy places the
+    cache behind.  Capacity-wise prefill peaks *above* decode by the
+    chunk's activations, so a policy must fit this profile too before the
+    engine adopts it.
+    """
+    return WorkloadProfile(
+        name=name,
+        flops=chunk_flops / num_chips,
+        bytes_per_role={
+            Role.PARAMS: param_bytes / num_chips,
+            Role.KV_CACHE: kv_bytes / num_chips,
+            Role.ACTIVATIONS: activation_bytes / num_chips,
+        },
+        touches_per_role={
+            Role.PARAMS: 1.0,
+            Role.KV_CACHE: 1.0,
+            Role.ACTIVATIONS: 2.0,   # written by the chunk, read back
+        },
+        collective_s=collective_s,
+        stream_chunks=max(int(n_layers), 1),
+    )

@@ -178,6 +178,144 @@ def flash_attention(
     return out.reshape(B, Hq, Sq, D)
 
 
+def _prefill_kernel(
+    q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bq, bk, scale, kind, window, chunk,
+):
+    """Chunked-prefill attention: causal within chunk, full vs prior cache.
+
+    Same online-softmax loop as ``_fa_kernel``, but positions come from the
+    prefetched ``qpos``/``kpos`` tensors instead of iota — the KV axis is
+    the concatenation [prior cache slots ++ chunk keys], where cache slots
+    carry a recovered absolute position (ring caches wrap, every batch row
+    sits at its own offset) and ``kpos < 0`` marks holes (unwritten tail,
+    padding past this row's ``new_lens``).
+    """
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qp = qpos_ref[0]                                 # (bq,) int32
+    kp = kpos_ref[0]                                 # (bk,) int32
+    mask = (qp[:, None] >= kp[None, :]) & (kp[None, :] >= 0)
+    if kind == "sliding":
+        mask &= (qp[:, None] - kp[None, :]) < window
+    elif kind == "chunked":
+        mask &= (qp[:, None] // chunk) == (kp[None, :] // chunk)
+
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kv_idx == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill(
+    q: jax.Array,       # (B, Hq, Sq, D) chunk queries
+    k: jax.Array,       # (B, Hkv, Sk, D) prior cache ++ chunk keys
+    v: jax.Array,       # (B, Hkv, Sk, D)
+    q_pos: jax.Array,   # (B, Sq) int32 absolute query positions
+    k_pos: jax.Array,   # (B, Sk) int32 absolute key positions; < 0 = hole
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas chunked-prefill attention (ref: ``ref.prefill_attention``).
+
+    One HBM pass over the prior cache per chunk instead of one per token —
+    the kernel-level half of the serve engine's batched prefill.  The KV
+    axis is padded up to a block multiple with ``k_pos = -1`` holes, which
+    the mask (and the fully-masked-block compute skip) eliminates.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    bq = min(block_q, Sq)
+    if Sq % bq:
+        bq = Sq
+    bk = min(block_k, Sk)
+    pad = (-Sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+    grid = (B * Hq, Sq // bq, Sk // bk)
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        return ((bh // Hq) * Hkv + (bh % Hq) // G, j, 0)
+
+    def qpos_map(bh, i, j):
+        return (bh // Hq, i)
+
+    def kpos_map(bh, i, j):
+        return (bh // Hq, j)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _prefill_kernel,
+            bq=bq, bk=bk, scale=scale, kind=kind, window=window, chunk=chunk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bq), qpos_map),
+            pl.BlockSpec((1, bk), kpos_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, kf, vf, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32))
+    return out.reshape(B, Hq, Sq, D)
+
+
 def vmem_footprint_bytes(bq: int, bk: int, d: int, itemsize: int = 2) -> int:
     """Predicted VMEM working set of one grid step (for tiling choices)."""
     tiles = (bq * d + 2 * bk * d) * itemsize      # q, k, v tiles

@@ -114,6 +114,32 @@ def decode_attention(
     return _ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
 
 
+def prefill_attention(
+    q, k, v, q_pos, k_pos, *,
+    kind: str = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+    backend: Backend | None = None,
+):
+    """(B, Hq, Sq, D) chunk queries vs (B, Hkv, Sk, D) [cache ++ chunk] keys.
+
+    Position-tensor masked attention for the serving engine's chunked
+    batched prefill: causal within the chunk, full (windowed / chunk-local)
+    against the prior cache, ``k_pos < 0`` slots masked out.  Inference
+    only — no VJP is registered for the Pallas path.
+    """
+    if _resolve(backend) == "pallas":
+        return _fa.flash_prefill(
+            q, k, v, q_pos, k_pos,
+            kind=kind, window=window, chunk=chunk, scale=scale,
+        )
+    return _ref.prefill_attention(
+        q, k, v, q_pos, k_pos,
+        kind=kind, window=window, chunk=chunk, scale=scale,
+    )
+
+
 # ---------------------------------------------------------------------------
 # SSD scan
 # ---------------------------------------------------------------------------

@@ -158,6 +158,53 @@ def attention_chunked(
     return out.reshape(B, Hq, Sq, v.shape[-1])
 
 
+def prefill_attention(
+    q: jax.Array,          # (B, Hq, Sq, D) — one prefill chunk of queries
+    k: jax.Array,          # (B, Hkv, Sk, D) — prior cache ++ chunk keys
+    v: jax.Array,          # (B, Hkv, Sk, Dv)
+    q_pos: jax.Array,      # (B, Sq) absolute position of each query
+    k_pos: jax.Array,      # (B, Sk) absolute position of each key; < 0 = hole
+    *,
+    kind: MaskKind = "causal",
+    window: int = 0,
+    chunk: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill oracle: per-tensor positions instead of iota.
+
+    The serving engine's batched prefill attends one chunk of new queries
+    against the concatenation of the existing KV cache and the chunk's own
+    keys.  Cache slots don't carry their position implicitly (ring caches
+    wrap; every batch row sits at a different fill offset), so positions
+    arrive as explicit ``q_pos``/``k_pos`` tensors and masking happens on
+    *absolute* positions: causal within the chunk, full (or windowed /
+    chunk-local) against the prior cache.  ``k_pos < 0`` marks invalid
+    slots (unwritten cache tail, per-row padding past ``new_lens``).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+
+    qp = q_pos[:, :, None]                       # (B, Sq, 1)
+    kp = k_pos[:, None, :]                       # (B, 1, Sk)
+    m = (qp >= kp) & (kp >= 0)
+    if kind == "sliding":
+        m &= (qp - kp) < window
+    elif kind == "chunked":
+        m &= (qp // chunk) == (kp // chunk)
+    elif kind not in ("causal",):
+        raise ValueError(f"prefill mask kind {kind!r}")
+    s = jnp.where(m[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
 def decode_attention(
     q: jax.Array,          # (B, Hq, D) — one new token
     k_cache: jax.Array,    # (B, Hkv, Smax, D)

@@ -84,11 +84,12 @@ def main() -> None:
     server.run_until_done()
     dt = time.perf_counter() - t0
     total_tokens = args.requests * args.max_new
+    tp = server.throughput()
     log.info(
         "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
-        "(policy %s)",
+        "(policy %s) | prefill %.1f tok/s | decode %.1f tok/s",
         args.requests, total_tokens, dt, total_tokens / dt,
-        server.policy.name,
+        server.policy.name, tp["prefill_tps"], tp["decode_tps"],
     )
 
 

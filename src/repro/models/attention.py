@@ -181,6 +181,45 @@ def gqa_train(params, x, spec: AttentionSpec, code: str):
     return shard(out, "batch", "seq", "embed")
 
 
+def _ring_positions(offsets: jax.Array, size: int) -> jax.Array:
+    """Absolute position held by each ring slot *before* a chunk append.
+
+    ``offsets`` (B,) is each row's cache fill.  Slot ``r`` holds the
+    largest position ``p ≡ r (mod size)`` with ``p < offsets``; a negative
+    result marks a hole (never-written slot).  For non-ring caches
+    (``size >= max_len``) this degenerates to ``p = r`` for ``r < offsets``.
+    """
+    r = jnp.arange(size, dtype=jnp.int32)[None, :]
+    return r + size * jnp.floor_divide(offsets[:, None] - 1 - r, size)
+
+
+def _append_kv(cache, k_new, v_new, offsets, new_lens):
+    """Offset-aware KV append: scatter chunk keys into each row's ring.
+
+    Row ``b`` writes positions ``[offsets[b], offsets[b] + new_lens[b])``
+    at ring slots ``pos % size``.  Chunk entries past ``new_lens`` — and,
+    when the chunk is longer than the ring, entries the chunk itself would
+    immediately overwrite — are routed to an out-of-bounds slot and
+    dropped, so rows with ``new_lens == 0`` keep their cache bit-for-bit.
+    """
+    size = cache["k"].shape[2]
+    B, _, S, _ = k_new.shape
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    keep = (j < new_lens[:, None]) & (j >= new_lens[:, None] - size)
+    slot = jnp.where(keep, (offsets[:, None] + j) % size, size)
+    bidx = jnp.arange(B)[:, None]
+    return {
+        "k": cache["k"].at[bidx, :, slot].set(
+            k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+            mode="drop",
+        ),
+        "v": cache["v"].at[bidx, :, slot].set(
+            v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+            mode="drop",
+        ),
+    }
+
+
 def gqa_prefill(params, x, cache, spec: AttentionSpec, code: str):
     """Train-path attention + cache fill. Returns (out, cache)."""
     B, S, _ = x.shape
@@ -190,18 +229,47 @@ def gqa_prefill(params, x, cache, spec: AttentionSpec, code: str):
         q, k, v,
         kind=_mask_kind(code), window=spec.window, chunk=spec.chunk,
     )
+    zeros = jnp.zeros((B,), jnp.int32)
+    cache = _append_kv(cache, k, v, zeros, zeros + S)
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
+    return shard(out, "batch", "seq", "embed"), cache
+
+
+def gqa_prefill_at(
+    params, x, cache, offsets, new_lens, spec: AttentionSpec, code: str
+):
+    """Offset-aware chunk prefill: continue each row's cache in one pass.
+
+    ``x`` (B, S, D) holds one prefill chunk; row ``b`` appends
+    ``new_lens[b] <= S`` tokens at positions ``offsets[b]..``.  Queries
+    attend causally within the chunk and fully (windowed / chunk-locally,
+    by absolute position) against the prior cache — token-by-token decode
+    replay semantics in a single dispatch, reading the prior cache once
+    per chunk instead of once per token.  Rows with ``new_lens == 0`` are
+    untouched.  Keys are compared in the cache's storage dtype so logits
+    and cache match the decode replay exactly.
+    """
+    B, S, _ = x.shape
+    offsets = offsets.astype(jnp.int32)
+    new_lens = new_lens.astype(jnp.int32)
+    positions = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _gqa_project(params, x, spec, positions[:, None, :], code)
+
     size = cache["k"].shape[2]
-    if size >= S:
-        kpad = jnp.zeros_like(cache["k"]).at[:, :, :S].set(
-            k.astype(cache["k"].dtype))
-        vpad = jnp.zeros_like(cache["v"]).at[:, :, :S].set(
-            v.astype(cache["v"].dtype))
-    else:
-        # ring cache keeps the last `size` positions; ring index = pos % size
-        # S % size == 0 for our window/chunk sizes, so the tail maps cleanly.
-        kpad = k[:, :, -size:].astype(cache["k"].dtype)
-        vpad = v[:, :, -size:].astype(cache["v"].dtype)
-    cache = {"k": kpad, "v": vpad}
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    kpos_new = jnp.where(j < new_lens[:, None], positions, -1)
+    kpos = jnp.concatenate([_ring_positions(offsets, size), kpos_new], axis=1)
+    kcat = jnp.concatenate(
+        [cache["k"], k.astype(cache["k"].dtype)], axis=2
+    )
+    vcat = jnp.concatenate(
+        [cache["v"], v.astype(cache["v"].dtype)], axis=2
+    )
+    o = ops.prefill_attention(
+        q, kcat, vcat, positions, kpos,
+        kind=_mask_kind(code), window=spec.window, chunk=spec.chunk,
+    )
+    cache = _append_kv(cache, k, v, offsets, new_lens)
     out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
     return shard(out, "batch", "seq", "embed"), cache
 
@@ -279,6 +347,29 @@ def mla_train(params, x, spec: AttentionSpec, code: str = "F"):
     return shard(out, "batch", "seq", "embed")
 
 
+def _append_latent(cache, ckv_new, kr_new, offsets, new_lens):
+    """Offset-aware MLA latent append (non-ring: slot == position).
+
+    Row ``b`` writes ``new_lens[b]`` latents at slots ``offsets[b]..``;
+    entries past ``new_lens`` go to an out-of-bounds slot and are dropped.
+    """
+    Smax = cache["ckv"].shape[1]
+    B, S, _ = ckv_new.shape
+    j = jnp.arange(S, dtype=jnp.int32)[None, :]
+    idx = jnp.where(
+        j < new_lens[:, None],
+        jnp.minimum(offsets[:, None] + j, Smax - 1),
+        Smax,
+    )
+    bidx = jnp.arange(B)[:, None]
+    return {
+        "ckv": cache["ckv"].at[bidx, idx].set(
+            ckv_new.astype(cache["ckv"].dtype), mode="drop"),
+        "krope": cache["krope"].at[bidx, idx].set(
+            kr_new.astype(cache["krope"].dtype), mode="drop"),
+    }
+
+
 def mla_prefill(params, x, cache, spec: AttentionSpec, code: str = "F"):
     B, S, _ = x.shape
     out = mla_train(params, x, spec, code)
@@ -288,14 +379,54 @@ def mla_prefill(params, x, cache, spec: AttentionSpec, code: str = "F"):
         jnp.einsum("bsd,dk->bsk", x, params["w_k_rope"]),
         positions, spec.rope_theta,
     )
-    Smax = cache["ckv"].shape[1]
-    cache = {
-        "ckv": jnp.zeros_like(cache["ckv"]).at[:, :S].set(
-            ckv.astype(cache["ckv"].dtype)),
-        "krope": jnp.zeros_like(cache["krope"]).at[:, :S].set(
-            kr.astype(cache["krope"].dtype)),
-    }
+    zeros = jnp.zeros((B,), jnp.int32)
+    cache = _append_latent(cache, ckv, kr, zeros, zeros + S)
     return out, cache
+
+
+def mla_prefill_at(
+    params, x, cache, offsets, new_lens, spec: AttentionSpec, code: str = "F"
+):
+    """Offset-aware absorbed-MLA chunk prefill (decode-replay semantics).
+
+    Latents are scattered first (the cache is non-ring, slot == position),
+    then the chunk's queries run the absorbed decode formulation against
+    the updated cache with a causal mask on absolute positions — the same
+    score layout, dtype path, and summation order as ``mla_decode``, so a
+    chunked prefill reproduces the token-by-token replay exactly.
+    """
+    B, S, _ = x.shape
+    offsets = offsets.astype(jnp.int32)
+    new_lens = new_lens.astype(jnp.int32)
+    positions = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    qn, qr = _mla_q(params, x, spec, positions[:, None, :])   # (B,H,S,*)
+
+    ckv_new = jnp.einsum("bsd,dr->bsr", x, params["w_kv_a"])
+    kr_new = rope(
+        jnp.einsum("bsd,dk->bsk", x, params["w_k_rope"]),
+        positions, spec.rope_theta,
+    )
+    cache = _append_latent(cache, ckv_new, kr_new, offsets, new_lens)
+    ckv, kr = cache["ckv"], cache["krope"]
+    Smax = ckv.shape[1]
+
+    # absorbed scores, storage dtype through the einsums (see mla_decode)
+    q_abs = jnp.einsum("bhsk,rhk->bhsr", qn, params["w_k_b"]).astype(ckv.dtype)
+    scores = (
+        jnp.einsum("bhsr,btr->bhst", q_abs, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhsk,btk->bhst", qr.astype(kr.dtype), kr,
+                     preferred_element_type=jnp.float32)
+    ) * ((spec.nope_head_dim + spec.rope_head_dim) ** -0.5)
+    kpos = jnp.arange(Smax, dtype=jnp.int32)[None, None, :]
+    valid = kpos < jnp.minimum(positions + 1, Smax)[:, :, None]  # (B,S,Smax)
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    ctx = jnp.einsum("bhst,btr->bhsr", p, ckv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bhsr,rhk->bhsk", ctx, params["w_v_b"])
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["w_o"])
+    return shard(out, "batch", "seq", "embed"), cache
 
 
 def mla_decode(params, x, cache, lengths, spec: AttentionSpec, code: str = "F"):
@@ -354,6 +485,12 @@ def attn_prefill(params, x, cache, spec, code):
     if spec.kind == "mla":
         return mla_prefill(params, x, cache, spec, code)
     return gqa_prefill(params, x, cache, spec, code)
+
+
+def attn_prefill_at(params, x, cache, offsets, new_lens, spec, code):
+    if spec.kind == "mla":
+        return mla_prefill_at(params, x, cache, offsets, new_lens, spec, code)
+    return gqa_prefill_at(params, x, cache, offsets, new_lens, spec, code)
 
 
 def attn_decode(params, x, cache, lengths, spec, code):

@@ -98,6 +98,27 @@ class ModelBundle:
             extra_embeds=frontend_embeds(batch),
         )
 
+    def prefill_at(self, params, batch: dict, caches, offsets):
+        """Chunked batched prefill at per-row cache offsets.
+
+        ``batch`` holds ``tokens`` (B, S) — one prompt chunk per row — and
+        ``new_lens`` (B,) — how many of the chunk's positions are real for
+        each row (0 = leave the row untouched).  ``offsets`` (B,) is each
+        row's current cache fill.  Returns (last-valid-position logits,
+        updated caches).  Not implemented for encoder-decoder (audio)
+        bundles: their prefill also projects the cross-attention memory,
+        which a chunk-at-offset call cannot re-derive — the serve engine
+        falls back to decode-step replay there.
+        """
+        cfg = self.cfg
+        if cfg.family == "audio" and cfg.n_encoder_layers:
+            raise NotImplementedError(
+                "prefill_at: encoder-decoder bundles prefill whole prompts"
+            )
+        return tf_mod.lm_prefill_at(
+            params, batch["tokens"], caches, offsets, batch["new_lens"], cfg
+        )
+
     def decode_step(self, params, batch: dict, caches):
         cfg = self.cfg
         if cfg.family == "audio" and cfg.n_encoder_layers:
@@ -185,6 +206,29 @@ class ModelBundle:
             param_bytes=cfg.num_params() * 2,
             kv_bytes=self.cache_bytes(shape),
             step_flops=self.model_flops(shape),
+            num_chips=num_chips,
+            n_layers=max(cfg.n_layers, 1),
+        )
+
+    def prefill_workload(
+        self, shape: ShapeSpec, *, chunk_tokens: int, num_chips: int = 1
+    ):
+        """Planner :func:`~repro.core.planner.prefill_profile` for one
+        chunked-prefill dispatch of ``chunk_tokens`` per row of ``shape``'s
+        batch (the serve engine's admission phase)."""
+        from repro.core.planner import prefill_profile
+
+        cfg = self.cfg
+        chunk_shape = ShapeSpec(
+            shape.name, chunk_tokens, shape.global_batch, "prefill"
+        )
+        return prefill_profile(
+            name=cfg.name,
+            param_bytes=cfg.num_params() * 2,
+            kv_bytes=self.cache_bytes(shape),
+            chunk_flops=self.model_flops(chunk_shape),
+            activation_bytes=2.0 * shape.global_batch * chunk_tokens
+            * cfg.d_model * cfg.n_layers,
             num_chips=num_chips,
             n_layers=max(cfg.n_layers, 1),
         )

@@ -411,6 +411,36 @@ def policy_specs(
     return specs
 
 
+def donation_compatible(policy, role) -> bool:
+    """May a jitted step donate ``role``'s buffers under ``policy``?
+
+    Donation is the zero-copy half of the decode hot path: XLA aliases the
+    output cache onto the input cache's buffer, so the per-token update is
+    in place instead of allocate+copy.  It is safe exactly for RESIDENT
+    placements (local HBM, host-pinned, or donor-slice resident — the
+    pinned ``out_shardings`` keep the aliased buffer in its tier).  A
+    ``Strategy.STREAM`` placement must NOT donate: the jitted step computes
+    on a staged copy while the far-tier resident buffer remains the source
+    of truth for the next touch's migration, and donating it hands XLA the
+    resident bytes as scratch mid-stream.
+    """
+    from repro.core.placement import Strategy
+
+    return policy.placement(role).strategy is not Strategy.STREAM
+
+
+def assert_donation_compatible(policy, role) -> None:
+    """Raise if a realizer is about to donate a STREAM-placed role."""
+    if not donation_compatible(policy, role):
+        pl = policy.placement(role)
+        raise ValueError(
+            f"policy {policy.name!r} places {role.value} as "
+            f"{pl.strategy.value} in {pl.tier}: streamed placements must "
+            "keep their resident buffer undonated (the staging window is "
+            "re-fetched from it every touch)"
+        )
+
+
 def stack_defs(defs, count: int, axis_name: str | None = "layers"):
     """Stack a layer's param defs ``count`` times (scan-over-layers)."""
     return jax.tree.map(

@@ -149,6 +149,81 @@ def ssm_prefill(params, x, cache, d_model: int, spec: SSMSpec):
     return shard(out, "batch", "seq", "embed"), cache
 
 
+def ssm_prefill_at(
+    params, x, cache, offsets, new_lens, d_model: int, spec: SSMSpec
+):
+    """Chunk prefill continuing from the cached (conv, ssm) state.
+
+    Row ``b`` consumes ``new_lens[b] <= S`` tokens; positions past
+    ``new_lens`` get ``dt = 0`` (decay ``exp(0) = 1``, zero input add), so
+    the recurrent state after the scan equals the state after exactly
+    ``new_lens`` real steps — rows with ``new_lens == 0`` keep both state
+    tensors bit-for-bit.  The causal conv window is seeded from the cached
+    pre-activation tail instead of zero padding, and the new conv state is
+    the last ``d_conv - 1`` *valid* entries of the [cached ++ chunk]
+    stream, gathered per row.
+
+    A row whose ``offsets == 0`` starts from ZERO state, whatever the
+    cache holds: the recurrent state is cumulative (unlike a KV slot, it
+    cannot be overwritten by position), and a freed slot's state keeps
+    integrating garbage from the full-batch decode dispatches it idles
+    through — re-admission must not inherit that.
+    """
+    B, S, _ = x.shape
+    di = spec.d_inner(d_model)
+    h = spec.n_heads(d_model)
+    n = spec.d_state
+    p = spec.head_dim
+    new_lens = new_lens.astype(jnp.int32)
+    fresh = offsets.astype(jnp.int32) == 0                     # (B,)
+    conv_in = jnp.where(
+        fresh[:, None, None], jnp.zeros_like(cache["conv"]), cache["conv"]
+    )
+    ssm_in = jnp.where(
+        fresh[:, None, None, None],
+        jnp.zeros_like(cache["ssm"]), cache["ssm"],
+    )
+
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xs, bmat, cmat, dt = _split(proj, di, n, h)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    full = jnp.concatenate(
+        [conv_in.astype(xbc.dtype), xbc], axis=1
+    )                                              # (B, d_conv-1+S, conv_dim)
+    idx = new_lens[:, None] + jnp.arange(spec.d_conv - 1)[None, :]
+    conv_state = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+    kern = params["conv_w"]
+    conv = sum(
+        full[:, i : i + S] * kern[i][None, None, :]
+        for i in range(spec.d_conv)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = conv[..., :di], conv[..., di : di + n], conv[..., di + n :]
+
+    dtf = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    live = jnp.arange(S, dtype=jnp.int32)[None, :] < new_lens[:, None]
+    dtf = jnp.where(live[:, :, None], dtf, 0.0)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, h, p)
+    chunk = min(SSD_CHUNK, S)
+    if S % chunk:
+        chunk = S
+    y, state = ops.ssd_scan(
+        xh, dtf, A, bmat, cmat, chunk=chunk,
+        init_state=ssm_in, return_state=True,
+    )
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = _gated_rmsnorm(y.reshape(B, S, di), z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    cache = {
+        "conv": conv_state.astype(cache["conv"].dtype),
+        "ssm": state.astype(jnp.float32),
+    }
+    return shard(out, "batch", "seq", "embed"), cache
+
+
 def ssm_decode(params, x, cache, d_model: int, spec: SSMSpec):
     """One-token step; x (B,1,d). Returns (out, cache)."""
     B = x.shape[0]

@@ -160,12 +160,23 @@ def _apply_layer_train(cfg, code, lp, x, emb0, shared):
     return x + apply_mlp(lp["mlp"], h, cfg.act), 0.0
 
 
-def _apply_layer_step(cfg, code, lp, cache, x, emb0, lengths, shared, mode):
-    """prefill/decode step for one layer; returns (x, new_cache)."""
+def _apply_layer_step(
+    cfg, code, lp, cache, x, emb0, lengths, shared, mode, new_lens=None
+):
+    """prefill/prefill_at/decode step for one layer; returns (x, new_cache).
+
+    ``prefill_at`` is the serving engine's chunked batched prefill:
+    ``lengths`` carries each row's cache fill *offset* and ``new_lens`` how
+    many of the chunk's positions are real for that row (0 = untouched).
+    """
     if code == "M":
         h = apply_norm(lp["norm"], x, cfg.norm)
         if mode == "prefill":
             out, c = ssm_mod.ssm_prefill(lp["ssm"], h, cache, cfg.d_model, cfg.ssm)
+        elif mode == "prefill_at":
+            out, c = ssm_mod.ssm_prefill_at(
+                lp["ssm"], h, cache, lengths, new_lens, cfg.d_model, cfg.ssm
+            )
         else:
             out, c = ssm_mod.ssm_decode(lp["ssm"], h, cache, cfg.d_model, cfg.ssm)
         return x + out, c
@@ -174,6 +185,10 @@ def _apply_layer_step(cfg, code, lp, cache, x, emb0, lengths, shared, mode):
         xin = apply_norm(shared["norm"], xin, cfg.norm)
         if mode == "prefill":
             out, c = attn.gqa_prefill(shared, xin, cache, cfg.attention, "F")
+        elif mode == "prefill_at":
+            out, c = attn.gqa_prefill_at(
+                shared, xin, cache, lengths, new_lens, cfg.attention, "F"
+            )
         else:
             out, c = attn.gqa_decode(
                 shared, xin, cache, lengths, cfg.attention, "F"
@@ -182,6 +197,10 @@ def _apply_layer_step(cfg, code, lp, cache, x, emb0, lengths, shared, mode):
     h = apply_norm(lp["attn_norm"], x, cfg.norm)
     if mode == "prefill":
         out, c = attn.attn_prefill(lp["attn"], h, cache, cfg.attention, code)
+    elif mode == "prefill_at":
+        out, c = attn.attn_prefill_at(
+            lp["attn"], h, cache, lengths, new_lens, cfg.attention, code
+        )
     else:
         out, c = attn.attn_decode(
             lp["attn"], h, cache, lengths, cfg.attention, code
@@ -241,7 +260,7 @@ def _run_stages_train(cfg, params, x, remat: str):
     return x, aux_total
 
 
-def _run_stages_step(cfg, params, caches, x, lengths, mode):
+def _run_stages_step(cfg, params, caches, x, lengths, mode, new_lens=None):
     shared = params.get("shared_attn")
     emb0 = x if "S" in cfg.layer_pattern else jnp.zeros((1,), x.dtype)
     new_caches = []
@@ -256,7 +275,7 @@ def _run_stages_step(cfg, params, caches, x, lengths, mode):
                 key = f"{j}{code}"
                 x, c = _apply_layer_step(
                     cfg, code, lp[key], cache[key], x, emb0, lengths,
-                    shared, mode,
+                    shared, mode, new_lens,
                 )
                 new_cache[key] = c
             x = shard(x, "batch", "seq", "embed")
@@ -320,6 +339,30 @@ def lm_prefill(params, tokens, caches, cfg: ArchConfig, *, extra_embeds=None):
     lengths = jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)
     x, caches = _run_stages_step(cfg, params, caches, x, lengths, "prefill")
     x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = apply_head(params["head"], params["embed"], x)
+    return logits[:, 0], caches
+
+
+def lm_prefill_at(params, tokens, caches, offsets, new_lens, cfg: ArchConfig):
+    """Chunked batched prefill: write one prompt chunk per row at an offset.
+
+    ``tokens`` (B, S) holds one chunk of each row's prompt; row ``b``
+    appends ``new_lens[b] <= S`` tokens at cache positions ``offsets[b]..``
+    (``new_lens == 0`` leaves the row's cache untouched — rows mid-decode
+    ride through the dispatch unharmed).  Returns the logits of each row's
+    last *valid* chunk position (garbage for ``new_lens == 0`` rows) and
+    the updated caches.  This is the serving engine's replacement for
+    replaying prompts token-by-token through full-batch decode steps:
+    admitting a batch of length-L prompts costs O(L / chunk) dispatches
+    instead of O(B·L), and the prior cache is read once per chunk.
+    """
+    x = apply_embed(params["embed"], tokens)
+    x, caches = _run_stages_step(
+        cfg, params, caches, x, offsets, "prefill_at", new_lens
+    )
+    last = jnp.clip(new_lens - 1, 0, tokens.shape[1] - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B,1,d)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = apply_head(params["head"], params["embed"], x)
     return logits[:, 0], caches
 

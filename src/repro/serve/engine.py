@@ -2,31 +2,47 @@
 
 The serving loop is the paper's Fig. 17 workload industrialized: per decoded
 token, every parameter byte and every cache byte crosses the compute
-datapath once.  The engine owns (a) slot-based continuous batching — new
-requests claim free batch rows, finished rows free them — and (b) the KV
-placement policy: when ``ServeConfig.policy`` is ``None`` the engine builds
-a decode :class:`~repro.core.planner.WorkloadProfile` from the model config
-and asks :func:`repro.core.planner.plan` for the fastest policy that fits
-every memory pool (logging each prediction and the pick); under ``kv_host``
-the cache shardings carry the host memory kind and stream through PCIe each
-step.  Tiers are offered to the planner exactly when this runtime realizes
-them: host tiers when the backend exposes a distinct host memory space
-(:func:`host_available`), peer tiers (``kv_peer_hbm``,
-``weights_peer_hbm``, ``opt_peer_host``) when the mesh has a ``donor``
-axis, and ``kv_remote_hbm`` when it has a ``donor_pod`` axis — under a
-donor mesh the auto pick may (and with the cache out of local headroom,
-will) choose a peer tier, and the engine realizes it by sharding the
-role's tensors across the donor slices
-(:func:`repro.models.sharding.policy_specs`).  A forced
+datapath once — and, as of the zero-copy rework, *exactly* once:
+
+* **Donated caches** — the jitted decode step (and the chunked-prefill jit)
+  donates the KV cache pytree, so XLA updates KV in place instead of
+  allocating and copying a cache-sized buffer per token.  The
+  ``policy_specs``-pinned ``out_shardings`` keep donor/host placements on
+  the aliased buffer across steps.  Donation is gated per policy by
+  :func:`repro.models.sharding.donation_compatible`: ``Strategy.STREAM``
+  placements keep their far-tier resident buffer undonated.
+* **Chunked batched prefill** — admission writes whole prompt chunks for
+  every newly claimed slot in one :meth:`ModelBundle.prefill_at` dispatch
+  per chunk (row-sliced cache scatter at per-slot offsets), so admitting a
+  batch of length-L prompts costs O(L / prefill_chunk) dispatches instead
+  of replaying O(B·L) full-batch decode steps.
+* **On-device serve state** — per-slot lengths and last tokens live in a
+  device-side state dict carried through the jitted step; the greedy
+  argmax happens in-jit and the only per-step host↔device traffic is the
+  (B,) next-token vector fetched back.  Host mirrors are updated from that
+  returned vector, never re-uploaded per step (uploads happen only on slot
+  lifecycle events: admission and free).
+
+The engine also owns the KV placement policy: when ``ServeConfig.policy``
+is ``None`` it builds decode *and* chunked-prefill
+:class:`~repro.core.planner.WorkloadProfile`\\ s from the model config and
+asks the planner for the fastest policy that fits every memory pool in
+both phases.  Tiers are offered exactly when this runtime realizes them:
+host tiers when the backend exposes a distinct host memory space
+(:func:`host_available`), peer tiers when the mesh has a ``donor`` axis,
+and ``kv_remote_hbm`` when it has a ``donor_pod`` axis.  A forced
 ``ServeConfig.policy`` that names a peer/remote tier on a donor-less mesh
 raises :class:`repro.core.placement.DonorAxisError` instead of silently
-serving from local HBM.
+serving from local HBM.  See ``docs/serving.md`` for the slot lifecycle,
+chunking, and donation rules in full.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import logging
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,9 +54,9 @@ from repro.core.placement import (
     donor_allow_flags,
     validate_policy_for_mesh,
 )
-from repro.core.planner import plan
+from repro.core.planner import plan, predict
 from repro.models.model_zoo import ModelBundle
-from repro.models.sharding import policy_specs
+from repro.models.sharding import donation_compatible, policy_specs
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -58,6 +74,8 @@ class Request:
 class ServeConfig:
     batch_slots: int = 8
     max_len: int = 512
+    #: tokens per chunked-prefill dispatch during admission
+    prefill_chunk: int = 32
     #: None -> consult the placement planner (datapath-bound model)
     policy: PlacementPolicy | None = None
     rules: dict | None = None
@@ -70,37 +88,62 @@ def plan_serve_policy(
     *,
     mesh=None,
 ) -> PlacementPolicy:
-    """Planner-selected policy for this server's decode workload.
+    """Planner-selected policy for this server's decode + prefill phases.
 
     With ``mesh=None`` the server cannot re-place anything, so the pick is
     restricted to the default placement.  With a mesh, the candidate tiers
     are exactly the ones this runtime realizes
-    (:func:`repro.core.placement.donor_allow_flags`): host tiers when the
-    backend has a host memory space, peer/remote tiers when the mesh has
-    the ``donor``/``donor_pod`` axis that physically holds their bytes —
-    so the auto pick never chooses a placement the engine would have to
-    silently realize as ``hbm_resident``.  When nothing fits, the
-    least-HBM policy is returned and the per-pool overflow is logged (the
-    OOM report the operator acts on).  Forcing any policy via
-    ``ServeConfig.policy`` remains possible.
+    (:func:`repro.core.placement.donor_allow_flags`), so the auto pick
+    never chooses a placement the engine would have to silently realize as
+    ``hbm_resident``.  Both serve phases are priced: the decode profile
+    (per generated token) and the chunked-prefill profile (per admission
+    dispatch, amortized over ``prefill_chunk`` prompt tokens) — a policy
+    must *fit* both, and the pick minimizes the combined per-token time.
+    When nothing fits, the least-HBM policy is returned and the per-pool
+    overflow is logged (the OOM report the operator acts on).  Forcing any
+    policy via ``ServeConfig.policy`` remains possible.
     """
     from repro.configs import ShapeSpec
 
     shape = ShapeSpec("serve", cfg.max_len, cfg.batch_slots, "decode")
-    prof = bundle.decode_workload(shape, num_chips=num_chips)
+    dec_prof = bundle.decode_workload(shape, num_chips=num_chips)
+    pre_prof = bundle.prefill_workload(
+        shape, chunk_tokens=cfg.prefill_chunk, num_chips=num_chips
+    )
     candidates = None if mesh is not None else [POLICIES["hbm_resident"]]
-    best, preds = plan(prof, candidates, **donor_allow_flags(mesh))
-    for p in preds:
-        log.info("planner: %s", p.explain())
-    if not best.fits:
-        for p in preds:
+    _, dec_preds = plan(dec_prof, candidates, **donor_allow_flags(mesh))
+    pre_preds = {
+        d.policy: predict(pre_prof, POLICIES[d.policy]) for d in dec_preds
+    }
+    for d in dec_preds:
+        log.info("planner[decode]: %s", d.explain())
+        log.info("planner[prefill]: %s", pre_preds[d.policy].explain())
+
+    def per_token(d):
+        # one decode step yields B tokens; one prefill dispatch ingests
+        # B * prefill_chunk prompt tokens — amortize to a 1:1 token mix.
+        return d.step_s + pre_preds[d.policy].step_s / max(
+            cfg.prefill_chunk, 1
+        )
+
+    feasible = [
+        d for d in dec_preds if d.fits and pre_preds[d.policy].fits
+    ]
+    if feasible:
+        best = min(feasible, key=per_token)
+    else:
+        best = min(dec_preds, key=lambda d: d.hbm_bytes)
+        for d in dec_preds:
             log.warning(
-                "planner OOM: %s overflows pools %s",
-                p.policy, ", ".join(p.overflow_pools) or "none",
+                "planner OOM: %s overflows pools %s (decode) / %s (prefill)",
+                d.policy,
+                ", ".join(d.overflow_pools) or "none",
+                ", ".join(pre_preds[d.policy].overflow_pools) or "none",
             )
     log.info(
-        "planner picked %s for %s (%d slots x %d ctx)",
+        "planner picked %s for %s (%d slots x %d ctx, prefill chunk %d)",
         best.policy, bundle.cfg.name, cfg.batch_slots, cfg.max_len,
+        cfg.prefill_chunk,
     )
     return POLICIES[best.policy]
 
@@ -122,7 +165,10 @@ class Server:
         validate_policy_for_mesh(self.policy, mesh)
         self._requests: dict[int, Request] = {}
         self._slots: list[int | None] = [None] * cfg.batch_slots
+        # host mirrors of the device-side serve state (see _sync_state)
         self._lengths = np.zeros(cfg.batch_slots, np.int32)
+        self._last_tokens = np.zeros((cfg.batch_slots, 1), np.int32)
+        self._active = np.zeros(cfg.batch_slots, bool)
         self._caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
         cache_specs = None
         if mesh is not None:
@@ -140,15 +186,100 @@ class Server:
                 bundle.param_defs(), mesh, cfg.rules, Role.PARAMS, self.policy
             )
             self.params = jax.tree.map(jax.device_put, self.params, param_specs)
-        self._decode = jax.jit(
-            lambda p, b, c: bundle.decode_step(p, b, c),
-            # pin the returned cache to its realized placement so a donor
-            # or host placement survives across steps instead of drifting
-            # to whatever layout XLA prefers for the first output
-            **({} if cache_specs is None
-               else {"out_shardings": (None, cache_specs)}),
+
+        # STREAM placements (kv_host & co.) keep the resident cache buffer
+        # undonated — it is the source of truth the next step's staged
+        # migration reads.  Everything RESIDENT donates: the decode step
+        # then updates KV in place, no per-token cache-sized allocation.
+        self._donate_cache = donation_compatible(self.policy, Role.KV_CACHE)
+        log.info(
+            "decode step %s the KV cache under policy %s",
+            "donates" if self._donate_cache else "does NOT donate",
+            self.policy.name,
         )
+
+        def _step_fn(p, state, caches):
+            logits, new_caches = bundle.decode_step(
+                p,
+                {"tokens": state["tokens"], "lengths": state["lengths"]},
+                caches,
+            )
+            next_tok = jnp.argmax(logits, -1).astype(jnp.int32)     # (B,)
+            active = state["active"]
+            new_state = {
+                # inactive rows keep their token/length so idle slots and
+                # freshly prefilled slots ride through untouched
+                "tokens": jnp.where(
+                    active[:, None], next_tok[:, None], state["tokens"]
+                ),
+                "lengths": state["lengths"] + active.astype(jnp.int32),
+                "active": active,
+            }
+            return next_tok, new_state, new_caches
+
+        donate = (1, 2) if self._donate_cache else (1,)
+        self._decode = jax.jit(
+            _step_fn,
+            donate_argnums=donate,
+            # pin the returned cache to its realized placement so a donor
+            # or host placement survives across steps (and donation keeps
+            # aliasing the same tier) instead of drifting to whatever
+            # layout XLA prefers for the first output
+            **({} if cache_specs is None
+               else {"out_shardings": (None, None, cache_specs)}),
+        )
+
+        # encoder-decoder bundles have no offset-chunk prefill (their
+        # prefill also projects the cross-attention memory) — they fall
+        # back to the decode-step replay admission.
+        if bundle.cfg.family == "audio" and bundle.cfg.n_encoder_layers:
+            self._prefill = None
+        else:
+            self._prefill = jax.jit(
+                lambda p, batch, caches, offsets: bundle.prefill_at(
+                    p, batch, caches, offsets
+                ),
+                donate_argnums=(2,) if self._donate_cache else (),
+                **({} if cache_specs is None
+                   else {"out_shardings": (None, cache_specs)}),
+            )
+        self._state = self._make_state()
         self._pending: list[Request] = []
+        #: serve-phase throughput counters (tokens and wall seconds)
+        self.stats = {
+            "prefill_tokens": 0, "prefill_s": 0.0,
+            "decode_tokens": 0, "decode_s": 0.0,
+        }
+
+    # -- device-side serve state ------------------------------------------
+    @staticmethod
+    def _upload(arr: np.ndarray, dtype) -> jnp.ndarray:
+        """Device copy of a host mirror that can NEVER see later writes.
+
+        The PR 2 lesson, sharpened: ``jnp.asarray`` can zero-copy alias
+        the mirror, and even ``jnp.array`` — which copies eagerly on an
+        idle runtime — may *defer* reading the numpy buffer behind queued
+        async dispatches on the CPU backend, so a subsequent
+        ``mirror[i] += 1`` still races the device read.  Handing over a
+        fresh ``.copy()`` that nothing ever mutates is the only upload
+        that is safe under queue pressure.
+        """
+        return jnp.asarray(np.array(arr, dtype=dtype, copy=True))
+
+    def _make_state(self) -> dict:
+        """Fresh device state from the host mirrors."""
+        return {
+            "tokens": self._upload(self._last_tokens, np.int32),
+            "lengths": self._upload(self._lengths, np.int32),
+            "active": self._upload(self._active, bool),
+        }
+
+    def _sync_state(self) -> None:
+        """Re-upload the small state arrays after a slot lifecycle event
+        (admission / free).  Steady-state decode never calls this: the
+        state lives on device and the host mirror advances from the
+        *returned* token vector."""
+        self._state = self._make_state()
 
     # -- request lifecycle -------------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -156,10 +287,26 @@ class Server:
 
         Prefill writes ``len(prompt) - 1`` cache positions and the decode
         loop at least one more, so a prompt only fits when ``len(prompt) <
-        max_len``.  Admitting a longer one would advance ``_lengths`` past
-        the cache and silently clamp/corrupt KV writes — reject it here,
-        logged, before it ever claims a slot.
+        max_len``.  Admitting a longer one would advance lengths past the
+        cache and silently clamp/corrupt KV writes — reject it here,
+        logged, before it ever claims a slot.  Duplicate (or negative)
+        rids are rejected too: the rid is the slot-bookkeeping key, and a
+        silent overwrite would orphan the live request's slot.
         """
+        if req.rid < 0:
+            raise ValueError(f"request rid must be >= 0, got {req.rid}")
+        if req.rid in self._requests:
+            raise ValueError(
+                f"request {req.rid}: rid already queued or being served "
+                "(rids must be unique among live requests; a duplicate "
+                "would orphan the live request's slot bookkeeping — "
+                "finished rids are evicted and may be reused)"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}"
+            )
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) >= self.cfg.max_len:
@@ -176,81 +323,151 @@ class Server:
         self._requests[req.rid] = req
         self._pending.append(req)
 
+    def add_requests(self, reqs) -> None:
+        """Batched admission entry point: queue several requests at once
+        (they prefill together in the next tick's chunked dispatches)."""
+        for req in reqs:
+            self.add_request(req)
+
     def _admit(self) -> None:
-        """Prefill pending requests into free slots (one at a time here;
-        a production build would batch same-length prefills)."""
-        for i, slot in enumerate(self._slots):
-            if slot is not None or not self._pending:
+        """Claim free slots for pending requests and prefill them batched.
+
+        Every newly claimed row's prompt is written through
+        ``bundle.prefill_at``: one dispatch per ``prefill_chunk`` tokens
+        covers *all* admitted rows (row-sliced cache scatter at per-slot
+        offsets), so admission costs O(max_prompt_len / prefill_chunk)
+        dispatches.  The last prompt token is withheld: the first decode
+        step feeds it so its logits produce the first generated token
+        (the prefill-then-decode contract).  See ``docs/serving.md``.
+        """
+        new: list[tuple[int, Request]] = []
+        for i in range(self.cfg.batch_slots):
+            if self._slots[i] is not None or not self._pending:
                 continue
             req = self._pending.pop(0)
-            # feed prompt[:-1]; the LAST prompt token is fed by the first
-            # step() so its logits produce the first generated token
-            # (matching the prefill-then-decode contract).
-            L = len(req.prompt) - 1
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            # single-row prefill via decode steps over the prompt
-            # (keeps cache row-isolated; row-sliced prefill is an
-            #  optimization lever documented in EXPERIMENTS.md)
-            for t in range(L):
-                row_tok = jnp.zeros(
-                    (self.cfg.batch_slots, 1), jnp.int32
-                ).at[i, 0].set(toks[0, t])
-                _, self._caches = self._decode(
-                    self.params,
-                    {"tokens": row_tok, "lengths": self._lengths_dev()},
-                    self._caches,
+            self._slots[i] = req.rid
+            new.append((i, req))
+        if not new:
+            return
+        t0 = time.perf_counter()
+        if self._prefill is None:
+            self._admit_replay(new)
+        else:
+            self._admit_chunked(new)
+        n_prefill = sum(len(req.prompt) - 1 for _, req in new)
+        for i, req in new:
+            self._last_tokens[i, 0] = req.prompt[-1]
+            self._active[i] = True
+        self._sync_state()
+        # drain the prefill dispatches themselves (the state upload has no
+        # data dependency on them) so the prefill/decode split in stats is
+        # honest — otherwise queued prefill compute would be absorbed into
+        # the next step()'s decode timing.
+        jax.block_until_ready((self._caches, self._state["tokens"]))
+        self.stats["prefill_tokens"] += n_prefill
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+    def _admit_chunked(self, new: list[tuple[int, Request]]) -> None:
+        chunk = max(int(self.cfg.prefill_chunk), 1)
+        lens = {i: len(req.prompt) - 1 for i, req in new}
+        # at least one dispatch even when every prompt has length 1
+        # (lens all 0): recurrent (SSM) state is cumulative and a freed
+        # slot keeps integrating garbage while idle, so admission must
+        # run prefill_at once for its offsets==0 zero-state reset even
+        # with nothing to write.
+        max_len = max(max(lens.values()), 1)
+        for lo in range(0, max_len, chunk):
+            toks = np.zeros((self.cfg.batch_slots, chunk), np.int32)
+            new_lens = np.zeros(self.cfg.batch_slots, np.int32)
+            for i, req in new:
+                n = int(np.clip(lens[i] - lo, 0, chunk))
+                if n > 0:
+                    toks[i, :n] = req.prompt[lo : lo + n]
+                    new_lens[i] = n
+            _, self._caches = self._prefill(
+                self.params,
+                {
+                    # toks/new_lens are freshly built per chunk and never
+                    # mutated after the handoff; _lengths is a live mirror
+                    # and goes through the race-safe _upload copy.
+                    "tokens": jnp.asarray(toks),
+                    "new_lens": jnp.asarray(new_lens),
+                },
+                self._caches,
+                self._upload(self._lengths, np.int32),
+            )
+            for i, _ in new:
+                self._lengths[i] += int(new_lens[i])
+
+    def _admit_replay(self, new: list[tuple[int, Request]]) -> None:
+        """Fallback admission for bundles without ``prefill_at``
+        (encoder-decoder): replay each prompt token-by-token through the
+        full-batch decode step — O(B·L) dispatches, correctness-only."""
+        idle = np.zeros(self.cfg.batch_slots, bool)
+        for i, req in new:
+            for t in range(len(req.prompt) - 1):
+                toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
+                toks[i, 0] = req.prompt[t]
+                state = {
+                    "tokens": jnp.asarray(toks),
+                    "lengths": self._upload(self._lengths, np.int32),
+                    "active": jnp.asarray(idle),
+                }
+                _, _, self._caches = self._decode(
+                    self.params, state, self._caches
                 )
                 self._lengths[i] += 1
-            self._slots[i] = req.rid
-
-    def _lengths_dev(self) -> jnp.ndarray:
-        """Device copy of the per-slot lengths.
-
-        Must COPY: ``jnp.asarray`` of a numpy array can be zero-copy (CPU
-        backend), aliasing ``_lengths``'s buffer into the asynchronously
-        dispatched decode — a subsequent ``_lengths[i] += 1`` then races
-        the device read and corrupts the step's masking/cache writes.
-        """
-        return jnp.array(self._lengths, jnp.int32)
 
     def _free_slot(self, i: int) -> None:
         """The single place a slot returns to the pool: clears the slot
-        assignment and its cache length together (stale cache rows beyond
-        the zeroed length are masked out and overwritten by next prefill)."""
+        assignment, its state mirrors, and the request-table entry
+        together (stale cache rows beyond the zeroed length are masked
+        out and overwritten by next prefill; evicting the finished rid
+        lets callers reuse it and bounds the table to live requests).
+        The caller re-syncs device state after the batch of frees."""
+        self._requests.pop(self._slots[i], None)
         self._slots[i] = None
         self._lengths[i] = 0
+        self._last_tokens[i, 0] = 0
+        self._active[i] = False
 
     # -- one decode tick -----------------------------------------------------
     def step(self) -> int:
-        """Admit + decode one token for every active slot. Returns #active."""
+        """Admit + decode one token for every active slot. Returns #active.
+
+        The decode step consumes and returns the on-device state; the only
+        per-step host↔device traffic is the (B,) next-token vector coming
+        back (fetched via one async transfer, then blocked on).
+        """
         self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return 0
-        last_tokens = np.zeros((self.cfg.batch_slots, 1), np.int32)
-        for i in active:
-            req = self._requests[self._slots[i]]
-            seq = list(req.prompt) + req.out_tokens
-            last_tokens[i, 0] = seq[-1]
-        logits, self._caches = self._decode(
-            self.params,
-            {
-                "tokens": jnp.asarray(last_tokens),
-                "lengths": self._lengths_dev(),
-            },
-            self._caches,
+        t0 = time.perf_counter()
+        next_tok, self._state, self._caches = self._decode(
+            self.params, self._state, self._caches
         )
-        next_tokens = np.asarray(jnp.argmax(logits, -1))
+        copy_async = getattr(next_tok, "copy_to_host_async", None)
+        if copy_async is not None:
+            copy_async()
+        next_host = np.asarray(next_tok)
+        self.stats["decode_tokens"] += len(active)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        freed = False
         for i in active:
             req = self._requests[self._slots[i]]
-            req.out_tokens.append(int(next_tokens[i]))
+            req.out_tokens.append(int(next_host[i]))
             self._lengths[i] += 1
+            self._last_tokens[i, 0] = next_host[i]
             if (
                 len(req.out_tokens) >= req.max_new_tokens
                 or self._lengths[i] >= self.cfg.max_len - 1
             ):
                 req.done = True
                 self._free_slot(i)
+                freed = True
+        if freed:
+            self._sync_state()
         return len(active)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
@@ -259,3 +476,17 @@ class Server:
                 return
             self.step()
         raise RuntimeError("serve loop did not drain")
+
+    def throughput(self) -> dict:
+        """Prefill/decode split tokens-per-second from the stats counters."""
+        s = self.stats
+        return {
+            "prefill_tokens": s["prefill_tokens"],
+            "decode_tokens": s["decode_tokens"],
+            "prefill_tps": (
+                s["prefill_tokens"] / s["prefill_s"] if s["prefill_s"] else 0.0
+            ),
+            "decode_tps": (
+                s["decode_tokens"] / s["decode_s"] if s["decode_s"] else 0.0
+            ),
+        }

@@ -226,10 +226,11 @@ class TestDonorMeshRealization:
         for leaf in jax.tree.leaves(srv.params):
             assert "donor" not in spec_axes(leaf.sharding.spec)
         # serving works and the placement survives the decode steps
-        srv.add_request(Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
-                                max_new_tokens=3))
+        req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=3)
+        srv.add_request(req)
         srv.run_until_done(200)
-        assert srv._requests[0].done
+        assert req.done
         for leaf in jax.tree.leaves(srv._caches):
             assert "donor" in spec_axes(leaf.sharding.spec), leaf.sharding
         print("OK")
@@ -261,10 +262,11 @@ class TestDonorMeshRealization:
                 sharded += 1
                 assert {s.device for s in leaf.addressable_shards} & donor_devs
         assert sharded > 0, "no param leaf landed on the donor axis"
-        srv.add_request(Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
-                                max_new_tokens=2))
+        req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=2)
+        srv.add_request(req)
         srv.run_until_done(200)
-        assert srv._requests[0].done
+        assert req.done
 
         # put_like (the array-level realizer): a stacked tree under a
         # STREAM peer placement lands donor-sharded on its stack dim
