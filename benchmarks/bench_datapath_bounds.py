@@ -25,11 +25,11 @@ from repro.core import (
     DEFAULT_SYSTEM,
     DonorStream,
     MemoryTier,
-    POLICIES,
     bound_matrix,
     copy_bound,
     plan,
     read_bound,
+    registered_policies,
 )
 
 TIERS = [t for t in MemoryTier if t != MemoryTier.VMEM]
@@ -167,7 +167,9 @@ def main() -> None:
 
     kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
     emit("memory_kinds", 0.0, "|".join(kinds))
-    emit("policies", 0.0, "|".join(POLICIES))
+    # the live registry, not a hand-written list: policies registered by
+    # configs/plugins appear in the emitted table automatically
+    emit("policies", 0.0, "|".join(registered_policies()))
     # headline numbers used throughout
     c = DEFAULT_SYSTEM.chip
     emit("chip_peak_bf16", 0.0, f"{c.peak_bf16_flops/1e12:.0f}TFLOP/s")

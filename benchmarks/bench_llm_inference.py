@@ -24,7 +24,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import SHAPES, get_config
-from repro.core.placement import POLICIES, Role
+from repro.core.placement import Role, get_policy, registered_policies
 from repro.core.planner import decode_profile, predict
 from repro.models import get_smoke_bundle
 from repro.models.model_zoo import ModelBundle
@@ -39,7 +39,7 @@ def measured() -> None:
     mesh = make_mesh_for((1,), ("data",))
 
     for policy_name in ("hbm_resident", "kv_host", "weights_stream"):
-        policy = POLICIES[policy_name]
+        policy = get_policy(policy_name)
         cache_kind = policy.memory_kind(Role.KV_CACHE)
         param_kind = policy.memory_kind(Role.PARAMS)
         cache_specs = defs_to_specs(
@@ -111,7 +111,7 @@ def analytic() -> None:
             step_flops=bundle.model_flops(shape),
             num_chips=256,
         )
-        for policy in POLICIES.values():
+        for policy in registered_policies().values():
             pred = predict(prof, policy)
             emit(
                 f"analytic_decode[{arch},{policy.name}]",
@@ -122,13 +122,17 @@ def analytic() -> None:
 
 
 def serve(out_path: str = "BENCH_serve.json", *, requests: int = 8,
-          prompt_len: int = 24, max_new: int = 12) -> dict:
+          prompt_len: int = 24, max_new: int = 12,
+          policy: str | None = None) -> dict:
     """Serve-loop throughput with the prefill/decode phases split out.
 
     One row (and one JSON entry) per measured configuration: the engine's
     own phase counters give prefill tokens/s (chunked batched admission)
     and decode tokens/s (donated-cache, on-device-state steps) — the two
-    rates the datapath model prices separately.
+    rates the datapath model prices separately.  Every entry embeds the
+    serving policy's JSON (and, for planner-picked policies, the
+    top-candidate explain table), so the artifact records *which
+    placement* produced the numbers.
     """
     from repro.serve import Request, ServeConfig, Server
 
@@ -137,11 +141,17 @@ def serve(out_path: str = "BENCH_serve.json", *, requests: int = 8,
     params = bundle.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     results = {}
+    # a real (1-device) mesh so the policy is physically realized — the
+    # recorded policy JSON must describe the placement that actually
+    # held, not just the one configured
+    mesh = make_mesh_for((1,), ("data",))
     for chunk in (8, 32):
         server = Server(
             bundle,
-            ServeConfig(batch_slots=4, max_len=96, prefill_chunk=chunk),
+            ServeConfig(batch_slots=4, max_len=96, prefill_chunk=chunk,
+                        policy=policy),
             params,
+            mesh=mesh,
         )
         server.add_requests(
             Request(
@@ -163,6 +173,9 @@ def serve(out_path: str = "BENCH_serve.json", *, requests: int = 8,
             "requests": requests,
             "prompt_len": prompt_len,
             "max_new": max_new,
+            # policy JSON + mesh axes + per-phase explain tables: the
+            # artifact records which placement produced the numbers
+            **server.rt.describe(),
             **tp,
         }
         emit(
@@ -187,13 +200,19 @@ def main() -> None:
         help="serve-throughput smoke only (writes BENCH_serve.json)",
     )
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument(
+        "--policy", default=None,
+        help="force the serve leg's placement policy (registered name, "
+             "role=tier[:strategy] grammar, or JSON); default: planner",
+    )
     args, _ = ap.parse_known_args()
     if args.smoke:
-        serve(args.out, requests=4, prompt_len=16, max_new=6)
+        serve(args.out, requests=4, prompt_len=16, max_new=6,
+              policy=args.policy)
         return
     measured()
     analytic()
-    serve(args.out)
+    serve(args.out, policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -32,10 +32,10 @@ import time
 
 from repro.configs import SHAPES, ShapeSpec, get_config, list_archs, smoke_config
 from repro.core.placement import (
-    POLICIES,
     Role,
     TIER_DONOR_AXIS,
     host_available,
+    registered_policies,
 )
 from repro.core.planner import plan, predict
 from repro.models.model_zoo import ModelBundle
@@ -106,21 +106,18 @@ def _measure_decode_ms(bundle, policy, slots: int, max_len: int,
     import jax
     import jax.numpy as jnp
 
-    from repro.models.sharding import policy_specs
+    from repro.api import Runtime
 
     mesh = _mesh_for_policy(policy)
     if mesh is None:
         return None
+    rt = Runtime(bundle, mesh, policy)
     params = bundle.init_params(jax.random.PRNGKey(0), "float32")
-    param_specs = policy_specs(
-        bundle.param_defs(), mesh, None, Role.PARAMS, policy
-    )
-    params = jax.tree.map(jax.device_put, params, param_specs)
-    caches = bundle.init_cache(slots, max_len)
-    cache_specs = policy_specs(
-        bundle.cache_defs(slots, max_len), mesh, None, Role.KV_CACHE, policy
-    )
-    caches = jax.tree.map(jax.device_put, caches, cache_specs)
+    params = rt.realize(params, Role.PARAMS)
+    cache_defs = bundle.cache_defs(slots, max_len)
+    caches = rt.realize(bundle.init_cache(slots, max_len),
+                        Role.KV_CACHE, cache_defs)
+    cache_specs = rt.specs(Role.KV_CACHE, cache_defs)
 
     step = jax.jit(
         lambda p, b, c: bundle.decode_step(p, b, c),
@@ -155,7 +152,9 @@ def predicted_vs_measured(arch: str, slots: int, max_len: int,
     print(f"{'policy':<20} {'fits':<5} {'predicted ms':>12} "
           f"{'measured ms':>12} {'meas/pred':>10}")
     starred = False
-    for policy in POLICIES.values():
+    # the registry, not a hand-written list: custom register_policy()'d
+    # policies show up in the sweep automatically
+    for policy in registered_policies().values():
         pred = predict(prof, policy)
         meas = _measure_decode_ms(bundle, policy, slots, max_len, iters)
         if meas is None:

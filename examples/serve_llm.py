@@ -14,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.placement import POLICIES
+from repro.core.placement import registered_policies
 from repro.models import get_smoke_bundle
 from repro.serve import Request, ServeConfig, Server
 
@@ -26,7 +26,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--prefill-chunk", type=int, default=8)
-    ap.add_argument("--policy", default=None, choices=[None, *POLICIES])
+    ap.add_argument(
+        "--policy", default=None,
+        help="a registered policy name "
+             f"({', '.join(registered_policies())}), the "
+             "role=tier[:strategy][,...] grammar, or policy JSON",
+    )
     args = ap.parse_args()
 
     bundle = get_smoke_bundle(args.arch)
@@ -41,7 +46,7 @@ def main() -> None:
                 batch_slots=3,
                 max_len=128,
                 prefill_chunk=args.prefill_chunk,
-                policy=POLICIES[pname],
+                policy=pname,   # ServeConfig accepts any policy spelling
             ),
             params,
         )

@@ -39,7 +39,6 @@ from repro.core.placement import (  # noqa: F401
     KV_REMOTE_HBM,
     OPT_HOST,
     OPT_PEER_HOST,
-    POLICIES,
     REMOTE_DONOR_AXIS,
     WEIGHTS_PEER_HBM,
     WEIGHTS_STREAM,
@@ -47,11 +46,17 @@ from repro.core.placement import (  # noqa: F401
     DonorStream,
     Placement,
     PlacementPolicy,
+    PolicyBuilder,
     Role,
     Strategy,
     donor_allow_flags,
     donor_axes_for,
+    get_policy,
     host_available,
+    parse_policy,
+    policy,
+    register_policy,
+    registered_policies,
     resolve_memory_kind,
     validate_policy_for_mesh,
 )
@@ -81,3 +86,15 @@ from repro.core.hlo_analysis import (  # noqa: F401
     HloCost,
     analyze_hlo_text,
 )
+
+
+def __getattr__(name: str):
+    # deprecated names (POLICIES, put_like) forward to placement's PEP 562
+    # shim so `from repro.core import POLICIES` keeps resolving — with the
+    # same one-shot DeprecationWarning — without this package importing
+    # them eagerly.
+    if name in ("POLICIES", "put_like"):
+        from repro.core import placement
+
+        return getattr(placement, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import json
+import warnings
 from typing import Mapping
 
 import jax
@@ -83,6 +85,60 @@ _TIER_TO_KIND = {
     MemoryTier.PEER_HOST: "pinned_host",
     MemoryTier.REMOTE_HBM: "device",
 }
+
+#: canonical tier spellings for the placement string grammar (the names
+#: configs/CLI use: ``--policy kv=host:stream,params=peer_hbm``), plus the
+#: aliases accepted on input (the MemoryTier enum values and a few
+#: paper-flavored spellings).
+TIER_NAMES: dict[MemoryTier, str] = {
+    MemoryTier.HBM: "hbm",
+    MemoryTier.HOST: "host",
+    MemoryTier.PEER_HBM: "peer_hbm",
+    MemoryTier.PEER_HOST: "peer_host",
+    MemoryTier.REMOTE_HBM: "remote_hbm",
+}
+_TIER_ALIASES: dict[str, MemoryTier] = {
+    **{v: k for k, v in TIER_NAMES.items()},
+    **{t.value: t for t in TIER_NAMES},   # enum values: hbm_p, host_p, ...
+    "device": MemoryTier.HBM,
+    "ddr": MemoryTier.HOST,
+    "ddr_p": MemoryTier.PEER_HOST,
+}
+
+#: role spellings for the grammar: enum values plus short aliases.
+_ROLE_ALIASES: dict[str, Role] = {
+    **{r.value: r for r in Role},
+    "kv": Role.KV_CACHE,
+    "weights": Role.PARAMS,
+    "opt": Role.OPT_STATE,
+    "act": Role.ACTIVATIONS,
+}
+
+
+def parse_role(name: str | Role) -> Role:
+    """Role from a grammar spelling (``kv``/``kv_cache``/``params``/...)."""
+    if isinstance(name, Role):
+        return name
+    try:
+        return _ROLE_ALIASES[name.strip().lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown tensor role {name!r}; one of "
+            f"{sorted(_ROLE_ALIASES)}"
+        ) from None
+
+
+def parse_tier(name: str | MemoryTier) -> MemoryTier:
+    """MemoryTier from a grammar spelling (``hbm``/``peer_hbm``/...)."""
+    if isinstance(name, MemoryTier):
+        return name
+    try:
+        return _TIER_ALIASES[name.strip().lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown memory tier {name!r}; one of "
+            f"{sorted(set(_TIER_ALIASES))}"
+        ) from None
 
 #: tiers whose bytes live in a host DRAM pool (vs an HBM pool).
 HOST_TIERS = frozenset({MemoryTier.HOST, MemoryTier.PEER_HOST})
@@ -242,6 +298,31 @@ class Placement:
     def on_host(self) -> bool:
         return self.tier in HOST_TIERS
 
+    def to_str(self) -> str:
+        """Grammar form: ``tier[:strategy]`` (``:resident`` is implied)."""
+        tier = TIER_NAMES[self.tier]
+        if self.strategy is Strategy.RESIDENT:
+            return tier
+        return f"{tier}:{self.strategy.value}"
+
+    @classmethod
+    def parse(cls, text: "str | Placement") -> "Placement":
+        """Placement from ``tier[:strategy]`` (``host:stream``, ``peer_hbm``)."""
+        if isinstance(text, Placement):
+            return text
+        tier_s, _, strat_s = text.partition(":")
+        tier = parse_tier(tier_s)
+        if not strat_s:
+            return cls(tier, Strategy.RESIDENT)
+        try:
+            strategy = Strategy(strat_s.strip().lower())
+        except ValueError:
+            raise ValueError(
+                f"unknown placement strategy {strat_s!r} in {text!r}; one "
+                f"of {[s.value for s in Strategy]}"
+            ) from None
+        return cls(tier, strategy)
+
 
 @dataclasses.dataclass(frozen=True)
 class PlacementPolicy:
@@ -280,13 +361,218 @@ class PlacementPolicy:
         p[role] = placement
         return PlacementPolicy(self.name, p, self.description)
 
+    def renamed(self, name: str, description: str | None = None) -> "PlacementPolicy":
+        return PlacementPolicy(
+            name, dict(self.placements),
+            self.description if description is None else description,
+        )
+
+    # -- serialization ----------------------------------------------------
+    def to_spec(self) -> str:
+        """Compact grammar form: ``role=tier[:strategy],...`` (sorted,
+        ``hbm``-resident roles omitted — they are the default)."""
+        return ",".join(
+            f"{role.value}={pl.to_str()}"
+            for role, pl in sorted(
+                self.placements.items(), key=lambda kv: kv[0].value
+            )
+            if pl != Placement()
+        )
+
+    def to_json(self, *, indent: int | None = None) -> str:
+        """JSON form; :meth:`from_json` round-trips it exactly."""
+        return json.dumps(
+            {
+                "name": self.name,
+                "description": self.description,
+                "placements": {
+                    role.value: pl.to_str()
+                    for role, pl in sorted(
+                        self.placements.items(), key=lambda kv: kv[0].value
+                    )
+                },
+            },
+            indent=indent,
+        )
+
+    @classmethod
+    def from_json(cls, data: "str | Mapping") -> "PlacementPolicy":
+        """Inverse of :meth:`to_json`; also accepts the already-parsed
+        dict form (configs embed it without re-stringifying)."""
+        if isinstance(data, (str, bytes)):
+            data = json.loads(data)
+        if not isinstance(data, Mapping):
+            raise ValueError(
+                f"policy JSON must decode to an object, got {type(data)}"
+            )
+        placements = {
+            parse_role(role): Placement.parse(pl)
+            for role, pl in dict(data.get("placements", {})).items()
+        }
+        name = data.get("name") or _spec_name(placements)
+        return cls(name, placements, data.get("description", ""))
+
+
+def _spec_name(placements: Mapping[Role, Placement]) -> str:
+    """Canonical derived name for an anonymous policy (stable across
+    round-trips: sorted compact-grammar body)."""
+    body = ",".join(
+        f"{role.value}={pl.to_str()}"
+        for role, pl in sorted(placements.items(), key=lambda kv: kv[0].value)
+    )
+    return f"custom({body or 'hbm_resident'})"
+
+
+def policy(
+    name: str | None = None,
+    description: str = "",
+    **role_placements: "str | Placement",
+) -> PlacementPolicy:
+    """Compositional policy constructor: placements as values, not names.
+
+    Keyword names are role spellings (``kv``/``kv_cache``, ``params``,
+    ``opt``/``opt_state``, ...), values are :class:`Placement` objects or
+    grammar strings (``"host:stream"``, ``"peer_hbm"``)::
+
+        policy(kv="host:stream", params="peer_hbm")
+
+    Unnamed policies get a stable derived name so they serialize, log and
+    register cleanly.
+    """
+    placements = {
+        parse_role(role): Placement.parse(pl)
+        for role, pl in role_placements.items()
+    }
+    return PlacementPolicy(name or _spec_name(placements), placements,
+                           description)
+
+
+class PolicyBuilder:
+    """Incremental form of :func:`policy` for programmatic construction::
+
+        p = (PolicyBuilder("serve_spill")
+             .place("kv_cache", "host:stream")
+             .place(Role.PARAMS, Placement(MemoryTier.PEER_HBM))
+             .describe("KV spilled to host, params on the donor")
+             .build())
+
+    ``build(register=True)`` also publishes it to the registry.
+    """
+
+    def __init__(self, name: str | None = None):
+        self._name = name
+        self._description = ""
+        self._placements: dict[Role, Placement] = {}
+
+    def place(self, role: "str | Role", placement: "str | Placement") -> "PolicyBuilder":
+        self._placements[parse_role(role)] = Placement.parse(placement)
+        return self
+
+    def describe(self, description: str) -> "PolicyBuilder":
+        self._description = description
+        return self
+
+    def build(self, *, register: bool = False) -> PlacementPolicy:
+        out = PlacementPolicy(
+            self._name or _spec_name(self._placements),
+            dict(self._placements),
+            self._description,
+        )
+        if register:
+            register_policy(out)
+        return out
+
+
+def parse_policy(text: "str | Mapping | PlacementPolicy") -> PlacementPolicy:
+    """One entry point for every external policy spelling.
+
+    Accepts, in order: a :class:`PlacementPolicy` (pass-through), a
+    registered policy name (``"kv_host"``), a JSON object/string
+    (:meth:`PlacementPolicy.from_json`), or the compact grammar
+    (``"kv=host:stream,params=peer_hbm"``).  This is what ``--policy``
+    flags and config files feed.
+    """
+    if isinstance(text, PlacementPolicy):
+        return text
+    if isinstance(text, Mapping):
+        return PlacementPolicy.from_json(text)
+    text = text.strip()
+    if text in _REGISTRY:
+        return _REGISTRY[text]
+    if text.startswith("{"):
+        return PlacementPolicy.from_json(text)
+    if "=" not in text:
+        raise ValueError(
+            f"unknown policy {text!r}: not a registered name "
+            f"({sorted(_REGISTRY)}), not JSON, and not the "
+            "role=tier[:strategy][,...] grammar"
+        )
+    placements: dict[Role, Placement] = {}
+    for part in text.split(","):
+        if not part.strip():
+            continue
+        role_s, eq, pl_s = part.partition("=")
+        if not eq:
+            raise ValueError(
+                f"bad policy fragment {part!r} in {text!r} "
+                "(expected role=tier[:strategy])"
+            )
+        placements[parse_role(role_s)] = Placement.parse(pl_s)
+    return PlacementPolicy(_spec_name(placements), placements,
+                           "parsed from policy spec string")
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, PlacementPolicy] = {}
+
+
+def register_policy(
+    policy: PlacementPolicy, *, overwrite: bool = False
+) -> PlacementPolicy:
+    """Publish ``policy`` under its name.
+
+    Registered policies show up everywhere the registry is enumerated:
+    planner candidate sets, the placement sweep, the benchmark policy
+    table, and every ``--policy <name>`` flag.  Re-registering a name is
+    an error unless ``overwrite=True`` (a silent replacement would change
+    what existing configs mean).
+    """
+    if not policy.name:
+        raise ValueError("cannot register an unnamed policy")
+    if policy.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"policy {policy.name!r} is already registered; pass "
+            "overwrite=True to replace it"
+        )
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(name: str) -> PlacementPolicy:
+    """Registered policy by exact name (KeyError lists what exists)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no registered placement policy {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_policies() -> dict[str, PlacementPolicy]:
+    """Snapshot of the registry (insertion-ordered name -> policy)."""
+    return dict(_REGISTRY)
+
 
 def _policy(name: str, desc: str, **roles: Placement) -> PlacementPolicy:
-    return PlacementPolicy(
+    return register_policy(PlacementPolicy(
         name,
         {Role[k.upper()]: v for k, v in roles.items()},
         desc,
-    )
+    ))
 
 
 HBM = Placement(MemoryTier.HBM, Strategy.RESIDENT)
@@ -366,34 +652,87 @@ KV_REMOTE_HBM = _policy(
     kv_cache=REMOTE_HBM,
 )
 
-POLICIES: dict[str, PlacementPolicy] = {
-    p.name: p
-    for p in (
-        HBM_RESIDENT,
-        OPT_HOST,
-        KV_HOST,
-        WEIGHTS_STREAM,
-        KV_PEER_HBM,
-        WEIGHTS_PEER_HBM,
-        OPT_PEER_HOST,
-        KV_REMOTE_HBM,
-    )
-}
+class _PoliciesView(Mapping):
+    """Deprecated read-only live view of the policy registry.
+
+    The old closed ``POLICIES`` dict, kept importable: reads forward to
+    the registry (so policies registered later appear), writes raise.
+    Every access path warns once per process, pointing at the
+    replacement surface.
+    """
+
+    def _reg(self):
+        _warn_deprecated(
+            "POLICIES",
+            "repro.core.placement.POLICIES is a deprecated read-only "
+            "view; use registered_policies()/get_policy()/parse_policy() "
+            "or the repro.api.Runtime facade",
+        )
+        return _REGISTRY
+
+    def __getitem__(self, name):
+        return self._reg()[name]
+
+    def __iter__(self):
+        return iter(self._reg())
+
+    def __len__(self):
+        return len(self._reg())
+
+    def __contains__(self, name):
+        return name in self._reg()
+
+    def __setitem__(self, name, value):  # pragma: no cover - guard rail
+        raise TypeError(
+            "POLICIES is a read-only view; use register_policy() instead"
+        )
+
+    def __repr__(self):
+        return f"POLICIES(deprecated view of {sorted(_REGISTRY)})"
 
 
-def put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy):
+_POLICIES_VIEW = _PoliciesView()
+_WARNED: set[str] = set()
+
+
+def _warn_deprecated(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def __getattr__(name: str):
+    # PEP 562 deprecation shims: the names still resolve (external code
+    # keeps working) but emit a single DeprecationWarning per process.
+    if name == "POLICIES":
+        return _POLICIES_VIEW  # the view warns on first *use*
+    if name == "put_like":
+        _warn_deprecated(
+            "put_like",
+            "repro.core.placement.put_like is deprecated; use "
+            "repro.api.Runtime.realize (or Runtime.specs) instead",
+        )
+        return _put_like
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy,
+              *, donate: bool = False):
     """device_put a pytree under the policy's placement for ``role``.
 
     ``specs`` is a matching pytree of PartitionSpecs (or a single spec).
     For peer/remote placements the spec of every leaf is extended over the
     tier's donor axis (validated first — a missing donor axis raises
     :class:`DonorAxisError` rather than silently landing locally).
+    ``donate=True`` hands each source leaf to the transfer (the
+    migration path: the old tier's buffer is freed as the copy lands).
 
-    This is the array-level twin of
-    :func:`repro.models.sharding.policy_specs` for trees without Param
-    defs.  Lacking logical axis names, a STREAM placement targets the
-    first divisible free dim — dim 0 of a stacked tree, i.e. the stack
-    dim — where ``policy_specs`` targets the dim *labelled* ``layers``.
+    This is the array-level twin of the def-based realizer
+    (``repro.models.sharding``) for trees without Param defs.  Lacking
+    logical axis names, a STREAM placement targets the first divisible
+    free dim — dim 0 of a stacked tree, i.e. the stack dim — where the
+    def-based form targets the dim *labelled* ``layers``.
     """
     pl = policy.placement(role)
     donor = donor_axes_for(mesh, pl.tier)
@@ -407,7 +746,9 @@ def put_like(tree, mesh: Mesh, specs, role: Role, policy: PlacementPolicy):
                 prefer_stack=pl.strategy is Strategy.STREAM,
             )
         return jax.device_put(
-            x, NamedSharding(mesh, spec, memory_kind=policy.memory_kind(role))
+            x,
+            NamedSharding(mesh, spec, memory_kind=policy.memory_kind(role)),
+            donate=donate,
         )
 
     if isinstance(specs, PartitionSpec):

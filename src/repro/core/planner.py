@@ -49,10 +49,10 @@ from repro.core.datapath import (
 from repro.core.hardware import DEFAULT_SYSTEM, Link, MemoryTier, SystemSpec
 from repro.core.placement import (
     HOST_TIERS,
-    POLICIES,
     PlacementPolicy,
     Role,
     Strategy,
+    registered_policies,
 )
 
 #: capacity pool each tier's bytes are charged to
@@ -290,7 +290,10 @@ def eligible_policies(
     out = []
     # note: an explicitly empty candidate list must stay empty (-> the
     # 'no eligible placement policies' error), not widen to the registry
-    for p in (POLICIES.values() if policies is None else policies):
+    candidates = (
+        registered_policies().values() if policies is None else policies
+    )
+    for p in candidates:
         tiers = p.tiers()
         if not allow_host and tiers & HOST_TIERS:
             continue

@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core.placement import POLICIES
+from repro.core.placement import registered_policies
 from repro.launch.mesh import make_mesh_for
 from repro.models.model_zoo import ModelBundle
 from repro.serve import Request, ServeConfig, Server
@@ -40,8 +40,18 @@ def main() -> None:
                     help="prepend a DCN donor axis of this size (>=2 "
                          "unlocks kv_remote_hbm)")
     ap.add_argument(
-        "--policy", default="auto", choices=["auto", *POLICIES],
-        help="'auto' consults the placement planner (datapath-bound model)",
+        "--policy", default="auto",
+        help="'auto' consults the placement planner (datapath-bound "
+             "model); otherwise a registered name "
+             f"({', '.join(registered_policies())}), the compact "
+             "role=tier[:strategy][,...] grammar (e.g. "
+             "'kv=host:stream,params=peer_hbm'), or policy JSON",
+    )
+    ap.add_argument(
+        "--auto-replan", action="store_true",
+        help="re-run the planner as cache occupancy crosses band "
+             "boundaries and migrate the live KV cache/params when the "
+             "pick changes (planner-owned policies only)",
     )
     args = ap.parse_args()
 
@@ -63,7 +73,8 @@ def main() -> None:
         ServeConfig(
             batch_slots=args.slots,
             max_len=args.max_len,
-            policy=None if args.policy == "auto" else POLICIES[args.policy],
+            policy=None if args.policy == "auto" else args.policy,
+            auto_replan=args.auto_replan,
         ),
         params,
         mesh=mesh,
@@ -87,9 +98,11 @@ def main() -> None:
     tp = server.throughput()
     log.info(
         "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
-        "(policy %s) | prefill %.1f tok/s | decode %.1f tok/s",
+        "(policy %s, %d replans / %d migrations) | prefill %.1f tok/s "
+        "| decode %.1f tok/s",
         args.requests, total_tokens, dt, total_tokens / dt,
-        server.policy.name, tp["prefill_tps"], tp["decode_tps"],
+        server.policy.name, server.stats["replans"],
+        server.stats["migrations"], tp["prefill_tps"], tp["decode_tps"],
     )
 
 

@@ -17,10 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Runtime
 from repro.checkpoint import Checkpointer
-from repro.configs import ShapeSpec, get_config, smoke_config
-from repro.core.placement import POLICIES, donor_allow_flags
-from repro.core.planner import plan
+from repro.configs import get_config, smoke_config
+from repro.core.placement import registered_policies
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.launch.mesh import make_mesh_for
 from repro.models.model_zoo import ModelBundle
@@ -31,45 +31,40 @@ from repro.train import TrainConfig, init_train_state, make_train_step
 log = logging.getLogger("repro.train")
 
 
-def pick_policy(
+def make_runtime(
     bundle: ModelBundle,
     mesh,
-    name: str | None,
+    policy_arg: str | None,
     *,
     batch: int = 8,
     seq: int = 128,
     remat: str = "full",
-):
-    """Planner-selected policy for this training run (unless forced).
+) -> Runtime:
+    """The run's placement runtime: forced policy or planner-selected.
 
-    Builds the per-chip :func:`train_profile` from the real run shape —
-    including the gradient all-reduce terms for the mesh's data/pod axes —
-    and only offers the planner tiers this runtime can reach.
+    A forced ``--policy`` accepts any :func:`repro.core.placement.
+    parse_policy` spelling (registered name, ``role=tier:strategy``
+    grammar, JSON) and is validated against the mesh up front.  The auto
+    path runs the planner on the real run shape — including the gradient
+    all-reduce terms for the mesh's data/pod axes — restricted to the
+    tiers this runtime realizes, and logs the top-candidate table
+    (:meth:`Runtime.explain`).
     """
-    if name:
-        return POLICIES[name]
-    axes = dict(mesh.shape)
-    num_chips = int(mesh.devices.size)
-    prof = bundle.train_workload(
-        ShapeSpec("cli", seq, batch, "train"),
-        num_chips=num_chips,
-        data_axis_size=axes.get("data", 1),
-        pod_axis_size=axes.get("pod", 1),
-        remat=remat != "none",
+    if policy_arg:
+        rt = Runtime(bundle, mesh, policy_arg)
+        log.info("placement policy forced: %s", rt.policy.name)
+        return rt
+    rt = Runtime.auto(
+        bundle, mesh, phase="train",
+        batch=batch, seq=seq, remat=remat != "none",
     )
-    # Offer exactly the tiers this mesh realizes: host tiers when the
-    # backend has a host memory space, peer tiers when the mesh has a
-    # 'donor' axis, remote tiers when it has a 'donor_pod' axis (the
-    # donor-axis sharding in make_state_specs physically produces them).
-    best, preds = plan(prof, **donor_allow_flags(mesh))
-    for p in preds:
-        log.info("planner: %s", p.explain())
-    if not best.fits:
-        for p in preds:
+    best = rt.plans["train"]
+    if best.picked not in best.feasible:
+        for name, p in best.predictions.items():
             log.warning("planner OOM: %s overflows pools %s",
-                        p.policy, ", ".join(p.overflow_pools) or "none")
-    log.info("planner picked %s", best.policy)
-    return POLICIES[best.policy]
+                        name, ", ".join(p.overflow_pools) or "none")
+    log.info("planner picked %s", rt.policy.name)
+    return rt
 
 
 def main() -> None:
@@ -89,7 +84,13 @@ def main() -> None:
     ap.add_argument("--remote-donor", type=int, default=1,
                     help="prepend a DCN donor axis of this size (>=2 "
                          "unlocks kv_remote_hbm)")
-    ap.add_argument("--policy", default=None, choices=[None, *POLICIES])
+    ap.add_argument(
+        "--policy", default=None,
+        help="force a placement policy: a registered name "
+             f"({', '.join(registered_policies())}), the compact "
+             "role=tier[:strategy][,...] grammar (e.g. "
+             "'opt=host:stream'), or policy JSON; default: planner",
+    )
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
     ap.add_argument("--compress-pod-grads", action="store_true")
@@ -110,10 +111,11 @@ def main() -> None:
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     bundle = ModelBundle(cfg)
-    policy = pick_policy(
+    rt = make_runtime(
         bundle, mesh, args.policy,
         batch=args.batch, seq=args.seq, remat=args.remat,
     )
+    policy = rt.policy
 
     tcfg = TrainConfig(
         remat=args.remat,

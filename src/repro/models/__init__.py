@@ -8,8 +8,16 @@ from repro.models.sharding import (  # noqa: F401
     defs_to_specs,
     donor_extend,
     materialize,
-    policy_specs,
     shard,
     spec_for,
     use_sharding,
 )
+
+
+def __getattr__(name: str):
+    # deprecated: forwards to sharding's PEP 562 shim (one-shot warning)
+    if name == "policy_specs":
+        from repro.models import sharding
+
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -362,7 +362,7 @@ def donor_extend(
     )
 
 
-def policy_specs(
+def _policy_specs(
     defs,
     mesh: Mesh,
     rules,
@@ -372,8 +372,10 @@ def policy_specs(
 ):
     """NamedShardings realizing ``policy``'s placement of ``role``.
 
-    The one entry point every realizer (serve engine, train state, sweep,
-    benchmarks) uses: resolves the role's memory kind on this backend and,
+    The one entry point every realizer uses — via the
+    :class:`repro.api.Runtime` facade (``Runtime.specs`` /
+    ``Runtime.realize``); importing it directly as ``policy_specs`` is
+    deprecated.  Resolves the role's memory kind on this backend and,
     for peer/remote tiers, the donor mesh axes that physically hold the
     bytes.  Raises :class:`repro.core.placement.DonorAxisError` if the
     mesh cannot realize the tier — the placement never silently degrades
@@ -409,6 +411,27 @@ def policy_specs(
                 len(jax.tree.leaves(specs)), donor,
             )
     return specs
+
+
+_WARNED_DEPRECATED: set[str] = set()
+
+
+def __getattr__(name: str):
+    # PEP 562 shim: `policy_specs` keeps resolving for external callers,
+    # with a one-shot DeprecationWarning pointing at the facade.
+    if name == "policy_specs":
+        if name not in _WARNED_DEPRECATED:
+            _WARNED_DEPRECATED.add(name)
+            import warnings
+
+            warnings.warn(
+                "repro.models.sharding.policy_specs is deprecated; use "
+                "repro.api.Runtime.specs / Runtime.realize instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return _policy_specs
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def donation_compatible(policy, role) -> bool:

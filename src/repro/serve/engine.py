@@ -7,8 +7,8 @@ datapath once — and, as of the zero-copy rework, *exactly* once:
 * **Donated caches** — the jitted decode step (and the chunked-prefill jit)
   donates the KV cache pytree, so XLA updates KV in place instead of
   allocating and copying a cache-sized buffer per token.  The
-  ``policy_specs``-pinned ``out_shardings`` keep donor/host placements on
-  the aliased buffer across steps.  Donation is gated per policy by
+  placement-pinned ``out_shardings`` (``Runtime.specs``) keep donor/host
+  placements on the aliased buffer across steps.  Donation is gated per policy by
   :func:`repro.models.sharding.donation_compatible`: ``Strategy.STREAM``
   placements keep their far-tier resident buffer undonated.
 * **Chunked batched prefill** — admission writes whole prompt chunks for
@@ -23,18 +23,23 @@ datapath once — and, as of the zero-copy rework, *exactly* once:
   returned vector, never re-uploaded per step (uploads happen only on slot
   lifecycle events: admission and free).
 
-The engine also owns the KV placement policy: when ``ServeConfig.policy``
-is ``None`` it builds decode *and* chunked-prefill
-:class:`~repro.core.planner.WorkloadProfile`\\ s from the model config and
-asks the planner for the fastest policy that fits every memory pool in
-both phases.  Tiers are offered exactly when this runtime realizes them:
-host tiers when the backend exposes a distinct host memory space
-(:func:`host_available`), peer tiers when the mesh has a ``donor`` axis,
-and ``kv_remote_hbm`` when it has a ``donor_pod`` axis.  A forced
-``ServeConfig.policy`` that names a peer/remote tier on a donor-less mesh
-raises :class:`repro.core.placement.DonorAxisError` instead of silently
-serving from local HBM.  See ``docs/serving.md`` for the slot lifecycle,
-chunking, and donation rules in full.
+Placement is owned by a :class:`repro.api.Runtime` facade: when
+``ServeConfig.policy`` is ``None`` the runtime's planner prices decode
+*and* chunked-prefill profiles and picks the fastest policy that fits
+every memory pool in both phases, restricted to the tiers this runtime
+realizes (host tiers when the backend exposes a distinct host memory
+space, peer/remote tiers when the mesh has the ``donor``/``donor_pod``
+axis).  A forced policy — any :func:`repro.core.placement.parse_policy`
+spelling, including custom string/JSON policies — that names a
+peer/remote tier on a donor-less mesh raises
+:class:`repro.core.placement.DonorAxisError` instead of silently serving
+from local HBM.  :meth:`Server.replan` re-runs the planner against the
+*live* cache occupancy and, when the pick changes, migrates the KV cache
+and params between tiers mid-serve via :meth:`repro.api.Runtime.migrate`
+(decode output is bit-identical across the move — it is a placement
+change, not a recompute).  See ``docs/serving.md`` for the slot
+lifecycle, chunking, and donation rules in full, and
+``docs/placement.md`` for the policy grammar + migration semantics.
 """
 
 from __future__ import annotations
@@ -47,16 +52,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.placement import (
-    POLICIES,
-    PlacementPolicy,
-    Role,
-    donor_allow_flags,
-    validate_policy_for_mesh,
-)
-from repro.core.planner import plan, predict
+from repro.api import Runtime
+from repro.core.placement import PlacementPolicy, Role, parse_policy
 from repro.models.model_zoo import ModelBundle
-from repro.models.sharding import donation_compatible, policy_specs
+from repro.models.sharding import donation_compatible
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -76,76 +75,18 @@ class ServeConfig:
     max_len: int = 512
     #: tokens per chunked-prefill dispatch during admission
     prefill_chunk: int = 32
-    #: None -> consult the placement planner (datapath-bound model)
-    policy: PlacementPolicy | None = None
+    #: None -> consult the placement planner (datapath-bound model);
+    #: otherwise any ``parse_policy`` spelling: a PlacementPolicy value,
+    #: a registered name, ``"kv=host:stream,..."``, or policy JSON.
+    policy: PlacementPolicy | str | dict | None = None
     rules: dict | None = None
-
-
-def plan_serve_policy(
-    bundle: ModelBundle,
-    cfg: ServeConfig,
-    num_chips: int = 1,
-    *,
-    mesh=None,
-) -> PlacementPolicy:
-    """Planner-selected policy for this server's decode + prefill phases.
-
-    With ``mesh=None`` the server cannot re-place anything, so the pick is
-    restricted to the default placement.  With a mesh, the candidate tiers
-    are exactly the ones this runtime realizes
-    (:func:`repro.core.placement.donor_allow_flags`), so the auto pick
-    never chooses a placement the engine would have to silently realize as
-    ``hbm_resident``.  Both serve phases are priced: the decode profile
-    (per generated token) and the chunked-prefill profile (per admission
-    dispatch, amortized over ``prefill_chunk`` prompt tokens) — a policy
-    must *fit* both, and the pick minimizes the combined per-token time.
-    When nothing fits, the least-HBM policy is returned and the per-pool
-    overflow is logged (the OOM report the operator acts on).  Forcing any
-    policy via ``ServeConfig.policy`` remains possible.
-    """
-    from repro.configs import ShapeSpec
-
-    shape = ShapeSpec("serve", cfg.max_len, cfg.batch_slots, "decode")
-    dec_prof = bundle.decode_workload(shape, num_chips=num_chips)
-    pre_prof = bundle.prefill_workload(
-        shape, chunk_tokens=cfg.prefill_chunk, num_chips=num_chips
-    )
-    candidates = None if mesh is not None else [POLICIES["hbm_resident"]]
-    _, dec_preds = plan(dec_prof, candidates, **donor_allow_flags(mesh))
-    pre_preds = {
-        d.policy: predict(pre_prof, POLICIES[d.policy]) for d in dec_preds
-    }
-    for d in dec_preds:
-        log.info("planner[decode]: %s", d.explain())
-        log.info("planner[prefill]: %s", pre_preds[d.policy].explain())
-
-    def per_token(d):
-        # one decode step yields B tokens; one prefill dispatch ingests
-        # B * prefill_chunk prompt tokens — amortize to a 1:1 token mix.
-        return d.step_s + pre_preds[d.policy].step_s / max(
-            cfg.prefill_chunk, 1
-        )
-
-    feasible = [
-        d for d in dec_preds if d.fits and pre_preds[d.policy].fits
-    ]
-    if feasible:
-        best = min(feasible, key=per_token)
-    else:
-        best = min(dec_preds, key=lambda d: d.hbm_bytes)
-        for d in dec_preds:
-            log.warning(
-                "planner OOM: %s overflows pools %s (decode) / %s (prefill)",
-                d.policy,
-                ", ".join(d.overflow_pools) or "none",
-                ", ".join(pre_preds[d.policy].overflow_pools) or "none",
-            )
-    log.info(
-        "planner picked %s for %s (%d slots x %d ctx, prefill chunk %d)",
-        best.policy, bundle.cfg.name, cfg.batch_slots, cfg.max_len,
-        cfg.prefill_chunk,
-    )
-    return POLICIES[best.policy]
+    #: re-run the planner (and migrate KV/params if the pick changes)
+    #: whenever cache occupancy crosses a band boundary — the live form
+    #: of the paper's phase-dependent placement decision.
+    auto_replan: bool = False
+    #: number of occupancy bands for auto_replan (4 -> re-price at 25%
+    #: occupancy steps)
+    replan_bands: int = 4
 
 
 class Server:
@@ -156,13 +97,22 @@ class Server:
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
-        num_chips = int(mesh.devices.size) if mesh is not None else 1
-        self.policy = cfg.policy or plan_serve_policy(
-            bundle, cfg, num_chips, mesh=mesh
-        )
-        # A forced peer/remote policy needs the donor axis that realizes
-        # it — refuse up front rather than serving from local HBM.
-        validate_policy_for_mesh(self.policy, mesh)
+        # The Runtime facade owns mesh + policy + planner.  A forced
+        # peer/remote policy on a donor-less mesh raises DonorAxisError
+        # here, up front, rather than serving from local HBM.
+        if cfg.policy is not None:
+            self.rt = Runtime(bundle, mesh, cfg.policy, rules=cfg.rules)
+        else:
+            self.rt = Runtime.auto(
+                bundle, mesh, phase="serve", rules=cfg.rules,
+                batch_slots=cfg.batch_slots, max_len=cfg.max_len,
+                prefill_chunk=cfg.prefill_chunk,
+            )
+            log.info(
+                "planner picked %s for %s (%d slots x %d ctx, prefill "
+                "chunk %d)", self.rt.policy.name, bundle.cfg.name,
+                cfg.batch_slots, cfg.max_len, cfg.prefill_chunk,
+            )
         self._requests: dict[int, Request] = {}
         self._slots: list[int | None] = [None] * cfg.batch_slots
         # host mirrors of the device-side serve state (see _sync_state)
@@ -170,28 +120,50 @@ class Server:
         self._last_tokens = np.zeros((cfg.batch_slots, 1), np.int32)
         self._active = np.zeros(cfg.batch_slots, bool)
         self._caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
-        cache_specs = None
         if mesh is not None:
             # realize the policy for every role the server owns: the KV
             # cache AND the params (weights_stream keeps params host-side;
             # kv_peer_hbm/weights_peer_hbm shard across the donor slices)
-            cache_defs = bundle.cache_defs(cfg.batch_slots, cfg.max_len)
-            cache_specs = policy_specs(
-                cache_defs, mesh, cfg.rules, Role.KV_CACHE, self.policy
+            self._caches = self.rt.realize(
+                self._caches, Role.KV_CACHE, self._cache_defs()
             )
-            self._caches = jax.tree.map(
-                jax.device_put, self._caches, cache_specs
-            )
-            param_specs = policy_specs(
-                bundle.param_defs(), mesh, cfg.rules, Role.PARAMS, self.policy
-            )
-            self.params = jax.tree.map(jax.device_put, self.params, param_specs)
+            self.params = self.rt.realize(self.params, Role.PARAMS)
+        self._build_steps()
+        self._state = self._make_state()
+        self._pending: list[Request] = []
+        self._replan_band: int | None = None
+        #: serve-phase throughput counters (tokens and wall seconds)
+        self.stats = {
+            "prefill_tokens": 0, "prefill_s": 0.0,
+            "decode_tokens": 0, "decode_s": 0.0,
+            "replans": 0, "migrations": 0,
+        }
+
+    @property
+    def policy(self) -> PlacementPolicy:
+        """The placement policy currently in force (may change across
+        :meth:`replan` migrations)."""
+        return self.rt.policy
+
+    def _cache_defs(self):
+        return self.bundle.cache_defs(self.cfg.batch_slots, self.cfg.max_len)
+
+    def _build_steps(self) -> None:
+        """(Re)build the jitted decode/prefill steps for the current
+        policy: donation flags and pinned cache out_shardings are
+        placement-dependent, so :meth:`replan` calls this after a
+        migration."""
+        bundle, cfg = self.bundle, self.cfg
+        cache_specs = (
+            None if self.mesh is None
+            else self.rt.specs(Role.KV_CACHE, self._cache_defs())
+        )
 
         # STREAM placements (kv_host & co.) keep the resident cache buffer
         # undonated — it is the source of truth the next step's staged
         # migration reads.  Everything RESIDENT donates: the decode step
         # then updates KV in place, no per-token cache-sized allocation.
-        self._donate_cache = donation_compatible(self.policy, Role.KV_CACHE)
+        self._donate_cache = self.rt.donate_ok(Role.KV_CACHE)
         log.info(
             "decode step %s the KV cache under policy %s",
             "donates" if self._donate_cache else "does NOT donate",
@@ -243,13 +215,116 @@ class Server:
                 **({} if cache_specs is None
                    else {"out_shardings": (None, cache_specs)}),
             )
-        self._state = self._make_state()
-        self._pending: list[Request] = []
-        #: serve-phase throughput counters (tokens and wall seconds)
-        self.stats = {
-            "prefill_tokens": 0, "prefill_s": 0.0,
-            "decode_tokens": 0, "decode_s": 0.0,
-        }
+
+    # -- live re-placement -------------------------------------------------
+    def occupancy(self) -> float:
+        """Live cache utilization: tokens resident across all slots over
+        the cache extent — what replan pricing feeds the planner."""
+        return float(self._lengths.sum()) / float(
+            self.cfg.batch_slots * self.cfg.max_len
+        )
+
+    def replan(self, policy=None, *, force: bool = False) -> bool:
+        """Re-place the live KV cache (and params) mid-serve.
+
+        With ``policy=None``, re-runs the planner's combined serve
+        pricing against the *current* cache occupancy
+        (:meth:`occupancy` scales the KV bytes, so a near-empty cache
+        prices like a near-empty cache); with an explicit ``policy`` (any
+        ``parse_policy`` spelling), adopts it directly.  When the target
+        differs from the policy in force, the KV cache and — if its
+        placement changed — the params are migrated between tiers via
+        :meth:`repro.api.Runtime.migrate` (donation-aware ``device_put``
+        onto the new shardings; decode output is bit-identical across
+        the move), and the jitted steps are rebuilt for the new donation
+        flags and pinned out_shardings.  Returns True iff a migration
+        happened.  No mesh -> nothing is realizable, always False.
+        """
+        if self.mesh is None:
+            return False
+        old = self.rt.policy
+        self.stats["replans"] += 1
+        if policy is None:
+            self.rt.plan_phase(
+                "serve",
+                batch_slots=self.cfg.batch_slots,
+                max_len=self.cfg.max_len,
+                prefill_chunk=self.cfg.prefill_chunk,
+                kv_utilization=self.occupancy(),
+                log_table=False,
+            )
+            target = self.rt.policy
+        else:
+            target = parse_policy(policy)
+        # structural comparison, not names: a custom 'kv=host:stream' is
+        # the same placement as the registered kv_host (no-op), while a
+        # JSON policy reusing a registered name may carry new placements
+        same = all(
+            target.placement(r) == old.placement(r) for r in Role
+        )
+        if same and not force:
+            self.rt.policy = old
+            return False
+        # drain in-flight dispatches against the old placement before the
+        # buffers move out from under them
+        jax.block_until_ready((self._caches, self._state["tokens"]))
+        # plan_phase may have already adopted the target into rt.policy;
+        # migrate() owns the handover, and on failure rt.policy must keep
+        # describing what the live buffers actually are.  Donation is
+        # decided by the SOURCE placement (a STREAM source keeps its
+        # resident buffer undonated) — pass it explicitly.
+        self.rt.policy = old
+        moved_kv = False
+        try:
+            if force or target.placement(Role.KV_CACHE) != old.placement(
+                Role.KV_CACHE
+            ):
+                self._caches = self.rt.migrate(
+                    self._caches, Role.KV_CACHE, target, self._cache_defs(),
+                    donate=donation_compatible(old, Role.KV_CACHE),
+                )
+                moved_kv = True
+            if force or target.placement(Role.PARAMS) != old.placement(
+                Role.PARAMS
+            ):
+                self.params = self.rt.migrate(
+                    self.params, Role.PARAMS, target,
+                    donate=donation_compatible(old, Role.PARAMS),
+                )
+        except Exception:
+            # a half-done replan must not lie about the live placement:
+            # nothing moved -> the old policy; KV moved but params did
+            # not -> old with the KV placement swapped in
+            self.rt.policy = (
+                old.with_placement(
+                    Role.KV_CACHE, target.placement(Role.KV_CACHE)
+                ).renamed(
+                    f"{old.name}+kv_cache="
+                    f"{target.placement(Role.KV_CACHE).to_str()}"
+                )
+                if moved_kv else old
+            )
+            self._build_steps()
+            raise
+        self.rt.policy = target
+        self._build_steps()
+        self.stats["migrations"] += 1
+        log.info(
+            "replan: migrated %s -> %s at occupancy %.0f%%",
+            old.name, target.name, 100 * self.occupancy(),
+        )
+        return True
+
+    def _maybe_auto_replan(self) -> None:
+        """Fire :meth:`replan` when occupancy crosses a band boundary —
+        only for planner-owned policies (a forced ``cfg.policy`` pins
+        placement; call :meth:`replan` explicitly to move it)."""
+        if not self.cfg.auto_replan or self.cfg.policy is not None:
+            return
+        band = int(self.occupancy() * max(self.cfg.replan_bands, 1))
+        if band != self._replan_band:
+            self._replan_band = band
+            self.replan()
 
     # -- device-side serve state ------------------------------------------
     @staticmethod
@@ -440,6 +515,7 @@ class Server:
         back (fetched via one async transfer, then blocked on).
         """
         self._admit()
+        self._maybe_auto_replan()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return 0
@@ -468,6 +544,7 @@ class Server:
                 freed = True
         if freed:
             self._sync_state()
+            self._maybe_auto_replan()
         return len(active)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:

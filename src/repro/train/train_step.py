@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.api import Runtime
 from repro.core.placement import (
     HBM_RESIDENT,
     PlacementPolicy,
@@ -32,7 +33,6 @@ from repro.core.placement import (
 )
 from repro.models.model_zoo import ModelBundle
 from repro.models.sharding import (
-    policy_specs,
     spec_for,
     use_sharding,
 )
@@ -64,19 +64,19 @@ def make_state_specs(
 ):
     """NamedShardings for (params, opt_state) under the placement policy.
 
-    Realized via :func:`policy_specs`, so a peer/remote placement (e.g.
-    ``opt_peer_host``'s spill of master+moments to a donor's host DRAM)
-    lands on the mesh's donor axis — and raises ``DonorAxisError`` when
-    the mesh has none, instead of silently staying local.
+    Realized via :meth:`repro.api.Runtime.specs`, so a peer/remote
+    placement (e.g. ``opt_peer_host``'s spill of master+moments to a
+    donor's host DRAM) lands on the mesh's donor axis — and raises
+    ``DonorAxisError`` when the mesh has none, instead of silently
+    staying local.
     """
+    rt = Runtime(bundle, mesh, policy, rules=rules)
     defs = bundle.param_defs()
-    param_specs = policy_specs(
-        defs, mesh, rules, Role.PARAMS, policy,
+    param_specs = rt.specs(
+        Role.PARAMS, defs,
         fsdp_axes=fsdp_axes if zero_stage >= 3 else (),
     )
-    opt_member = policy_specs(
-        defs, mesh, rules, Role.OPT_STATE, policy, fsdp_axes=fsdp_axes
-    )
+    opt_member = rt.specs(Role.OPT_STATE, defs, fsdp_axes=fsdp_axes)
     opt_specs = {
         "master": opt_member,
         "mu": opt_member,

@@ -198,7 +198,7 @@ class TestDonorMeshRealization:
     def test_kv_peer_hbm_realized_on_donor_slice(self):
         run_with_devices("""
         import jax, numpy as np
-        from repro.core.placement import POLICIES, resolve_memory_kind
+        from repro.core.placement import resolve_memory_kind
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
         from repro.serve.engine import Request, ServeConfig, Server
@@ -208,8 +208,7 @@ class TestDonorMeshRealization:
         params = b.init_params(jax.random.PRNGKey(0), "float32")
         srv = Server(
             b,
-            ServeConfig(batch_slots=4, max_len=32,
-                        policy=POLICIES["kv_peer_hbm"]),
+            ServeConfig(batch_slots=4, max_len=32, policy="kv_peer_hbm"),
             params, mesh=mesh,
         )
         donor_devs = set(mesh.devices[1].ravel())  # donor slice 1
@@ -240,7 +239,7 @@ class TestDonorMeshRealization:
         run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.core.placement import DonorStream, POLICIES
+        from repro.core.placement import DonorStream
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
         from repro.serve.engine import Request, ServeConfig, Server
@@ -251,7 +250,7 @@ class TestDonorMeshRealization:
         srv = Server(
             b,
             ServeConfig(batch_slots=4, max_len=32,
-                        policy=POLICIES["weights_peer_hbm"]),
+                        policy="weights_peer_hbm"),
             params, mesh=mesh,
         )
         from repro.models.sharding import spec_axes
@@ -268,15 +267,16 @@ class TestDonorMeshRealization:
         srv.run_until_done(200)
         assert req.done
 
-        # put_like (the array-level realizer): a stacked tree under a
-        # STREAM peer placement lands donor-sharded on its stack dim
-        from repro.core.placement import Role, put_like
+        # Runtime.realize (the array-level realizer): a def-less stacked
+        # tree under a STREAM peer placement lands donor-sharded on its
+        # stack dim
+        from repro.api import Runtime
+        from repro.core.placement import Role
         from repro.models.sharding import spec_axes
         n, m = 6, 128
         stacked = jnp.arange(n * m, dtype=jnp.float32).reshape(n, m)
-        placed = put_like(
-            {"w": stacked}, mesh, P(), Role.PARAMS,
-            POLICIES["weights_peer_hbm"],
+        placed = Runtime(b, mesh, "weights_peer_hbm").realize(
+            {"w": stacked}, Role.PARAMS, specs=P()
         )
         assert spec_axes(placed["w"].sharding.spec) == {"donor"}
         assert {s.device for s in placed["w"].addressable_shards} & donor_devs
@@ -300,7 +300,7 @@ class TestDonorMeshRealization:
     def test_planner_pick_under_donor_mesh_is_realized(self):
         run_with_devices("""
         import jax, numpy as np
-        from repro.core.placement import POLICIES, donor_allow_flags
+        from repro.core.placement import donor_allow_flags
         from repro.core.planner import plan
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
@@ -322,8 +322,7 @@ class TestDonorMeshRealization:
         b = get_smoke_bundle("olmo-1b")
         params = b.init_params(jax.random.PRNGKey(0), "float32")
         srv = Server(
-            b, ServeConfig(batch_slots=4, max_len=32,
-                           policy=POLICIES[best.policy]),
+            b, ServeConfig(batch_slots=4, max_len=32, policy=best.policy),
             params, mesh=mesh)
         from repro.models.sharding import spec_axes
         donor_devs = set(mesh.devices[1].ravel())

@@ -1,0 +1,454 @@
+"""Compositional placement API + Runtime facade + live migration.
+
+Three contracts, per ISSUE 5:
+
+* **Serialization is lossless** — JSON round-trip is identity for every
+  registered policy; the compact grammar and ``policy()``/``PolicyBuilder``
+  build the same values the registry holds.
+* **Migration preserves values and lands where predicted** — for each
+  pair of policies realizable on this host, ``Runtime.migrate`` moves a
+  live pytree bit-identically onto exactly the shardings/memory kinds
+  ``Runtime.specs`` predicts for the target policy; a donor-tier target
+  on a donor-less mesh raises ``DonorAxisError`` (never a silent local
+  landing).
+* **Deprecated paths still work, loudly** — ``POLICIES`` and
+  ``policy_specs`` resolve with a ``DeprecationWarning`` pointing at
+  ``repro.api``, and ``POLICIES`` is a read-only live view of the
+  registry.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api import Runtime
+from repro.core.hardware import MemoryTier
+from repro.core.placement import (
+    DonorAxisError,
+    Placement,
+    PlacementPolicy,
+    PolicyBuilder,
+    Role,
+    Strategy,
+    get_policy,
+    parse_policy,
+    policy,
+    register_policy,
+    registered_policies,
+)
+from repro.launch.mesh import make_donor_mesh, make_mesh_for
+from repro.models import get_smoke_bundle
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Serialization + construction
+# ---------------------------------------------------------------------------
+
+class TestSerialization:
+    def test_json_round_trip_identity_for_all_registered(self):
+        for name, pol in registered_policies().items():
+            assert PlacementPolicy.from_json(pol.to_json()) == pol, name
+
+    def test_placement_str_round_trip(self):
+        for pl in (
+            Placement(),
+            Placement(MemoryTier.HOST, Strategy.STREAM),
+            Placement(MemoryTier.PEER_HBM),
+            Placement(MemoryTier.PEER_HOST, Strategy.STREAM),
+            Placement(MemoryTier.REMOTE_HBM),
+        ):
+            assert Placement.parse(pl.to_str()) == pl
+
+    def test_compact_grammar(self):
+        pol = parse_policy("kv=host:stream,params=peer_hbm")
+        assert pol.placements[Role.KV_CACHE] == Placement(
+            MemoryTier.HOST, Strategy.STREAM
+        )
+        assert pol.placements[Role.PARAMS] == Placement(MemoryTier.PEER_HBM)
+        # aliases: kv/weights/opt, enum tier values, 'device'/'ddr'
+        alias = parse_policy("weights=ddr:stream,opt=hbm_p")
+        assert alias.placements[Role.PARAMS] == Placement(
+            MemoryTier.HOST, Strategy.STREAM
+        )
+        assert alias.placements[Role.OPT_STATE] == Placement(
+            MemoryTier.PEER_HBM
+        )
+
+    def test_registered_name_and_json_inputs(self):
+        assert parse_policy("kv_host") is get_policy("kv_host")
+        via_json = parse_policy(get_policy("kv_host").to_json())
+        assert via_json == get_policy("kv_host")
+
+    def test_parse_errors_are_loud(self):
+        with pytest.raises(ValueError, match="unknown policy"):
+            parse_policy("not_a_policy")
+        with pytest.raises(ValueError, match="role"):
+            parse_policy("bogus_role=hbm")
+        with pytest.raises(ValueError, match="tier"):
+            parse_policy("kv=bogus_tier")
+        with pytest.raises(ValueError, match="strategy"):
+            parse_policy("kv=host:bogus")
+
+    def test_policy_constructor_and_builder_agree(self):
+        a = policy(kv="host:stream", params="peer_hbm")
+        b = (
+            PolicyBuilder()
+            .place("kv", "host:stream")
+            .place(Role.PARAMS, Placement(MemoryTier.PEER_HBM))
+            .build()
+        )
+        assert a.placements == b.placements
+        assert a.name == b.name          # stable derived name
+        assert a.name.startswith("custom(")
+
+    def test_registry_rejects_silent_overwrite(self):
+        mine = policy("test_registry_tmp", kv="host:stream")
+        register_policy(mine)
+        try:
+            assert get_policy("test_registry_tmp") is mine
+            with pytest.raises(ValueError, match="already registered"):
+                register_policy(policy("test_registry_tmp", kv="hbm"))
+            register_policy(
+                policy("test_registry_tmp", kv="hbm"), overwrite=True
+            )
+            assert get_policy("test_registry_tmp").placements[
+                Role.KV_CACHE
+            ] == Placement()
+        finally:
+            from repro.core.placement import _REGISTRY
+
+            _REGISTRY.pop("test_registry_tmp", None)
+
+    def test_registered_policy_enters_planner_enumeration(self):
+        from repro.core.planner import eligible_policies
+
+        mine = policy("test_enum_tmp", kv="host:stream")
+        register_policy(mine)
+        try:
+            assert mine in eligible_policies()
+            assert mine not in eligible_policies(allow_host=False)
+        finally:
+            from repro.core.placement import _REGISTRY
+
+            _REGISTRY.pop("test_enum_tmp", None)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated surface
+# ---------------------------------------------------------------------------
+
+class TestDeprecatedPaths:
+    def test_policies_view_warns_and_forwards(self):
+        import repro.core.placement as placement_mod
+
+        placement_mod._WARNED.discard("POLICIES")
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            from repro.core.placement import POLICIES
+
+            assert POLICIES["kv_host"] is get_policy("kv_host")
+            assert set(POLICIES) == set(registered_policies())
+        assert any(
+            issubclass(x.category, DeprecationWarning)
+            and "repro.api" in str(x.message).lower()
+            or "registered_policies" in str(x.message)
+            for x in w
+        )
+        # a second access does NOT warn again (single warning per process)
+        with warnings.catch_warnings(record=True) as w2:
+            warnings.simplefilter("always")
+            _ = POLICIES["hbm_resident"]
+        assert not [
+            x for x in w2 if issubclass(x.category, DeprecationWarning)
+        ]
+        # read-only: the closed-dict mutation idiom is gone
+        with pytest.raises(TypeError, match="read-only"):
+            POLICIES["mine"] = get_policy("kv_host")
+
+    def test_policies_view_sees_later_registrations(self):
+        from repro.core.placement import _REGISTRY, POLICIES
+
+        mine = policy("test_view_tmp", kv="host:stream")
+        register_policy(mine)
+        try:
+            assert POLICIES["test_view_tmp"] is mine
+        finally:
+            _REGISTRY.pop("test_view_tmp", None)
+
+    def test_policy_specs_import_warns(self):
+        import repro.models.sharding as sharding_mod
+
+        sharding_mod._WARNED_DEPRECATED.discard("policy_specs")
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fn = sharding_mod.policy_specs
+        assert fn is sharding_mod._policy_specs
+        assert any(
+            issubclass(x.category, DeprecationWarning)
+            and "Runtime" in str(x.message)
+            for x in w
+        )
+
+    def test_put_like_import_warns(self):
+        import repro.core.placement as placement_mod
+
+        placement_mod._WARNED.discard("put_like")
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fn = placement_mod.put_like
+        assert fn is placement_mod._put_like
+        assert any(
+            issubclass(x.category, DeprecationWarning) for x in w
+        )
+
+
+# ---------------------------------------------------------------------------
+# Migration equivalence
+# ---------------------------------------------------------------------------
+
+def _realizable_policies(mesh):
+    """Registered policies realizable on ``mesh`` (donor tiers need the
+    axis; host tiers degrade gracefully on CPU)."""
+    from repro.core.placement import validate_policy_for_mesh
+
+    out = []
+    for pol in registered_policies().values():
+        try:
+            validate_policy_for_mesh(pol, mesh)
+        except DonorAxisError:
+            continue
+        out.append(pol)
+    return out
+
+
+def _assert_lands_as_predicted(tree, rt, role, defs):
+    want = rt.specs(role, defs)
+    for leaf, sharding in zip(
+        jax.tree.leaves(tree), jax.tree.leaves(
+            want, is_leaf=lambda x: hasattr(x, "memory_kind")
+        )
+    ):
+        assert leaf.sharding.spec == sharding.spec, (
+            leaf.sharding, sharding
+        )
+        assert leaf.sharding.memory_kind == sharding.memory_kind
+
+
+class TestMigration:
+    @pytest.fixture(scope="class")
+    def bundle(self):
+        return get_smoke_bundle("olmo-1b")
+
+    def test_migrate_pairs_preserve_values_and_land_predicted(self, bundle):
+        """For each ordered pair of realizable policies: migrate() is
+        bit-exact and the result carries exactly the shardings/memory
+        kinds Runtime.specs predicts for the target."""
+        mesh = (
+            make_donor_mesh((1,), ("data",), 2)
+            if jax.device_count() >= 2
+            else make_mesh_for((1,), ("data",))
+        )
+        policies = _realizable_policies(mesh)
+        assert len(policies) >= 4
+        defs = bundle.cache_defs(2, 16)
+        for src in policies:
+            rt = Runtime(bundle, mesh, src)
+            caches = rt.realize(bundle.init_cache(2, 16), Role.KV_CACHE, defs)
+            snap = [np.asarray(x) for x in jax.tree.leaves(caches)]
+            for dst in policies:
+                if dst.name == src.name:
+                    continue
+                moved = rt.migrate(caches, Role.KV_CACHE, dst, defs)
+                for a, b in zip(snap, jax.tree.leaves(moved)):
+                    np.testing.assert_array_equal(a, np.asarray(b))
+                _assert_lands_as_predicted(moved, rt, Role.KV_CACHE, defs)
+                assert rt.policy.name == dst.name
+                # migrate back for the next pair (src is the fixture)
+                caches = rt.migrate(moved, Role.KV_CACHE, src, defs)
+                for a, b in zip(snap, jax.tree.leaves(caches)):
+                    np.testing.assert_array_equal(a, np.asarray(b))
+
+    def test_migrate_to_donor_tier_without_axis_raises(self, bundle):
+        mesh = make_mesh_for((1,), ("data",))
+        rt = Runtime(bundle, mesh, "hbm_resident")
+        defs = bundle.cache_defs(2, 16)
+        caches = rt.realize(bundle.init_cache(2, 16), Role.KV_CACHE, defs)
+        with pytest.raises(DonorAxisError, match="donor"):
+            rt.migrate(caches, Role.KV_CACHE, "kv_peer_hbm", defs)
+        # the failed migration must not have adopted the target policy
+        assert rt.policy.name == "hbm_resident"
+        # ... and the tree is untouched (still the local placement)
+        _assert_lands_as_predicted(caches, rt, Role.KV_CACHE, defs)
+
+    def test_migrate_without_mesh_refuses(self, bundle):
+        rt = Runtime(bundle, None, "hbm_resident")
+        with pytest.raises(ValueError, match="mesh"):
+            rt.migrate(
+                bundle.init_cache(2, 16), Role.KV_CACHE, "kv_host",
+                bundle.cache_defs(2, 16),
+            )
+
+    def test_migrate_accepts_bare_placement(self, bundle):
+        mesh = make_mesh_for((1,), ("data",))
+        rt = Runtime(bundle, mesh, "hbm_resident")
+        defs = bundle.cache_defs(2, 16)
+        caches = rt.realize(bundle.init_cache(2, 16), Role.KV_CACHE, defs)
+        moved = rt.migrate(
+            caches, Role.KV_CACHE,
+            Placement(MemoryTier.HOST, Strategy.STREAM), defs,
+        )
+        assert rt.policy.placement(Role.KV_CACHE) == Placement(
+            MemoryTier.HOST, Strategy.STREAM
+        )
+        # other roles keep the source policy's placements
+        assert rt.policy.placement(Role.PARAMS) == Placement()
+        _assert_lands_as_predicted(moved, rt, Role.KV_CACHE, defs)
+
+    def test_migrate_rebuilds_registered_stream(self, bundle):
+        mesh = make_mesh_for((1,), ("data",))
+        rt = Runtime(bundle, mesh, "weights_stream")
+        n, m = 4, 8
+        stack = jnp.arange(n * m, dtype=jnp.float32).reshape(n, m)
+        stream = rt.open_stream(stack, Role.PARAMS, n)
+        assert rt.stream(Role.PARAMS) is stream
+        _ = stream.window(0)                       # stage a window
+        moved = rt.migrate(stack, Role.PARAMS, "hbm_resident", specs=P())
+        rebuilt = rt.stream(Role.PARAMS)
+        assert rebuilt is not stream               # staging buffers rebuilt
+        np.testing.assert_array_equal(
+            np.asarray(rebuilt.window(1)), np.asarray(moved[1])
+        )
+
+    def test_replan_compares_placements_not_names(self, bundle):
+        """A custom spelling of the current placement is a no-op (no
+        pointless cache move + jit rebuild); a genuinely different
+        placement migrates."""
+        from repro.serve import ServeConfig, Server
+
+        mesh = make_mesh_for((1,), ("data",))
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        server = Server(
+            bundle,
+            ServeConfig(batch_slots=2, max_len=32, policy="kv_host"),
+            params, mesh=mesh,
+        )
+        # same placements under a different (derived) name -> no-op
+        assert server.replan("kv=host:stream") is False
+        assert server.stats["migrations"] == 0
+        assert server.policy.name == "kv_host"
+        # different placements -> migrates
+        assert server.replan("hbm_resident") is True
+        assert server.stats["migrations"] == 1
+
+    def test_custom_string_policy_serves_with_mid_run_migration(self, bundle):
+        """Acceptance: a non-registered custom policy (string grammar)
+        serves end-to-end through Runtime, and a live mid-serve
+        migration leaves the greedy tokens identical to an uninterrupted
+        static-policy run."""
+        from repro.serve import Request, ServeConfig, Server
+
+        mesh = make_mesh_for((1,), ("data",))
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+
+        def run(policy_arg, migrate_at=None, target=None):
+            server = Server(
+                bundle,
+                ServeConfig(batch_slots=2, max_len=32, prefill_chunk=4,
+                            policy=policy_arg),
+                params, mesh=mesh,
+            )
+            rng = np.random.default_rng(0)
+            reqs = [
+                Request(rid=i,
+                        prompt=rng.integers(1, bundle.cfg.vocab, 6)
+                        .astype(np.int32),
+                        max_new_tokens=8)
+                for i in range(3)
+            ]
+            server.add_requests(reqs)
+            steps = 0
+            while server._pending or any(
+                s is not None for s in server._slots
+            ):
+                server.step()
+                steps += 1
+                if migrate_at is not None and steps == migrate_at:
+                    assert server.replan(target) is True
+                assert steps < 200
+            return [r.out_tokens for r in reqs], server
+
+        custom = "kv=host:stream"            # NOT a registered name
+        assert custom not in registered_policies()
+        base, _ = run(custom)
+        moved, server = run(custom, migrate_at=3, target="hbm_resident")
+        assert base == moved
+        assert server.stats["migrations"] == 1
+        assert server.policy.name == "hbm_resident"
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="donor mesh needs >= 2 devices")
+class TestDonorMigration:
+    """The peer-tier half of the migration matrix (runs on the CI
+    4-device leg): live KV moves local<->donor-sharded mid-serve with
+    token equality."""
+
+    def test_serve_migrates_kv_to_peer_and_back(self):
+        from repro.serve import Request, ServeConfig, Server
+
+        bundle = get_smoke_bundle("olmo-1b")
+        mesh = make_donor_mesh((2,), ("data",), 2)
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+
+        def run(migrations=()):
+            server = Server(
+                bundle,
+                ServeConfig(batch_slots=2, max_len=32, prefill_chunk=4,
+                            policy="hbm_resident"),
+                params, mesh=mesh,
+            )
+            rng = np.random.default_rng(1)
+            reqs = [
+                Request(rid=i,
+                        prompt=rng.integers(1, bundle.cfg.vocab, 5)
+                        .astype(np.int32),
+                        max_new_tokens=6)
+                for i in range(3)
+            ]
+            server.add_requests(reqs)
+            steps = 0
+            sched = dict(migrations)
+            while server._pending or any(
+                s is not None for s in server._slots
+            ):
+                server.step()
+                steps += 1
+                if steps in sched:
+                    assert server.replan(sched[steps]) is True
+                assert steps < 300
+            return [r.out_tokens for r in reqs], server
+
+        base, _ = run()
+        moved, server = run(migrations=((2, "kv_peer_hbm"),
+                                        (5, "hbm_resident")))
+        assert base == moved
+        assert server.stats["migrations"] == 2
+
+        # donor landing is physical: migrate a cache tree and check the
+        # donor axis + donor-slice devices appear on its shards
+        from repro.models.sharding import spec_axes
+
+        rt = Runtime(bundle, mesh, "hbm_resident")
+        defs = bundle.cache_defs(2, 16)
+        caches = rt.realize(bundle.init_cache(2, 16), Role.KV_CACHE, defs)
+        moved = rt.migrate(caches, Role.KV_CACHE, "kv_peer_hbm", defs)
+        donor_devs = set(mesh.devices[1].ravel())
+        for leaf in jax.tree.leaves(moved):
+            assert "donor" in spec_axes(leaf.sharding.spec)
+            assert {s.device for s in leaf.addressable_shards} & donor_devs

@@ -29,8 +29,8 @@ from repro.core.placement import (
     KV_PEER_HBM,
     KV_REMOTE_HBM,
     OPT_HOST,
-    POLICIES,
     WEIGHTS_STREAM,
+    registered_policies,
 )
 
 GB = 1e9
@@ -182,7 +182,7 @@ class TestPlan:
             "hbm_resident", "opt_host", "kv_host", "weights_stream",
             "kv_peer_hbm", "weights_peer_hbm", "opt_peer_host",
             "kv_remote_hbm",
-        } <= set(POLICIES)
+        } <= set(registered_policies())
 
     def test_offload_never_increases_hbm(self):
         for gb in (0.1, 1.0, 4.0, 8.0):
@@ -293,16 +293,28 @@ class TestPerPoolOOMReport:
 
 
 class TestServeIntegration:
-    def test_plan_serve_policy_logs_and_picks(self, caplog):
+    def test_server_auto_pick_logs_explain_table(self, caplog):
         import logging
 
+        import jax
+
         from repro.models import get_smoke_bundle
-        from repro.serve.engine import ServeConfig, plan_serve_policy
+        from repro.serve.engine import ServeConfig, Server
 
         bundle = get_smoke_bundle("olmo-1b")
-        with caplog.at_level(logging.INFO, logger="repro.serve.engine"):
-            policy = plan_serve_policy(
-                bundle, ServeConfig(batch_slots=2, max_len=64)
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        with caplog.at_level(logging.INFO):
+            server = Server(
+                bundle, ServeConfig(batch_slots=2, max_len=64), params
             )
-        assert policy.name in POLICIES
-        assert any("planner picked" in r.message for r in caplog.records)
+        assert server.policy.name in registered_policies()
+        assert any(
+            "planner picked" in r.getMessage() for r in caplog.records
+        )
+        # the auto-pick logs the top-candidate explain table, not just
+        # the winner's name
+        table = "\n".join(
+            r.getMessage() for r in caplog.records if r.name == "repro.api"
+        )
+        assert "phase=serve picked=" in table
+        assert "limited by" in table

@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ArchConfig, AttentionSpec
-from repro.core.placement import POLICIES, Role
+from repro.core.placement import Role, get_policy
 from repro.core.planner import predict, prefill_profile
 from repro.kernels import ops
 from repro.models import get_smoke_bundle
@@ -363,7 +363,7 @@ class TestCacheDonation:
     def test_stream_policy_keeps_cache_undonated(self):
         """kv_host streams the cache: the resident buffer must survive
         the step (it is the source of the next migration)."""
-        server = self._server(policy=POLICIES["kv_host"])
+        server = self._server(policy=get_policy("kv_host"))
         assert not server._donate_cache
         server.step()
         old_leaves = jax.tree.leaves(server._caches)
@@ -371,15 +371,15 @@ class TestCacheDonation:
         assert not any(leaf.is_deleted() for leaf in old_leaves)
 
     def test_donation_compatibility_helper(self):
-        assert donation_compatible(POLICIES["hbm_resident"], Role.KV_CACHE)
-        assert donation_compatible(POLICIES["kv_peer_hbm"], Role.KV_CACHE)
-        assert not donation_compatible(POLICIES["kv_host"], Role.KV_CACHE)
+        assert donation_compatible(get_policy("hbm_resident"), Role.KV_CACHE)
+        assert donation_compatible(get_policy("kv_peer_hbm"), Role.KV_CACHE)
+        assert not donation_compatible(get_policy("kv_host"), Role.KV_CACHE)
         assert not donation_compatible(
-            POLICIES["weights_stream"], Role.PARAMS
+            get_policy("weights_stream"), Role.PARAMS
         )
-        assert_donation_compatible(POLICIES["hbm_resident"], Role.KV_CACHE)
+        assert_donation_compatible(get_policy("hbm_resident"), Role.KV_CACHE)
         with pytest.raises(ValueError, match="undonated"):
-            assert_donation_compatible(POLICIES["kv_host"], Role.KV_CACHE)
+            assert_donation_compatible(get_policy("kv_host"), Role.KV_CACHE)
 
 
 class TestRequestValidation:
@@ -467,10 +467,10 @@ class TestPrefillPlanning:
             name="p", param_bytes=2e9, kv_bytes=1e9,
             chunk_flops=1e12, activation_bytes=1e8,
         )
-        pred = predict(prof, POLICIES["hbm_resident"])
+        pred = predict(prof, get_policy("hbm_resident"))
         assert pred.step_s > 0 and pred.fits
         # KV behind the host link must surface as PCIe/stream time
-        pred_host = predict(prof, POLICIES["kv_host"])
+        pred_host = predict(prof, get_policy("kv_host"))
         assert pred_host.pcie_s > 0
 
     def test_bundle_prefill_workload(self):
@@ -485,10 +485,15 @@ class TestPrefillPlanning:
         assert prof.bytes_per_role[Role.KV_CACHE] == \
             dec.bytes_per_role[Role.KV_CACHE]
 
-    def test_plan_serve_policy_smoke(self):
-        from repro.serve.engine import plan_serve_policy
+    def test_runtime_serve_plan_smoke(self):
+        from repro.api import Runtime
 
         bundle = get_smoke_bundle("olmo-1b")
-        cfg = ServeConfig(batch_slots=2, max_len=32, prefill_chunk=8)
-        policy = plan_serve_policy(bundle, cfg)
-        assert policy.name == "hbm_resident"
+        rt = Runtime.auto(
+            bundle, None, phase="serve",
+            batch_slots=2, max_len=32, prefill_chunk=8,
+        )
+        # with no mesh nothing is re-placeable: the pick must be the
+        # default placement, and the explain table must surface it
+        assert rt.policy.name == "hbm_resident"
+        assert "hbm_resident" in rt.explain("serve")

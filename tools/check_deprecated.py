@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Deprecation hygiene check: no in-repo caller uses the deprecated
+placement paths.
+
+The compositional placement API (ISSUE 5) deprecated three spellings in
+favor of ``repro.api`` / the policy registry:
+
+* ``POLICIES``      -> ``registered_policies()`` / ``get_policy()`` /
+                       ``parse_policy()``
+* ``policy_specs``  -> ``Runtime.specs`` / ``Runtime.realize``
+* ``put_like``      -> ``Runtime.realize``
+
+External code keeps working through PEP 562 shims (one
+``DeprecationWarning`` per process), but nothing inside this repo may
+use them: this script greps every tracked ``*.py`` under ``src/``,
+``tests/``, ``examples/``, ``benchmarks/``, ``launch/`` and ``tools/``
+and exits 1 listing any offender.  The defining modules (where the shim
+and the private implementation live) and the facade are allowlisted.
+
+Run from the repo root:  ``python tools/check_deprecated.py``
+(CI runs it on every leg).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+#: deprecated public names.  \b-delimited so attribute access
+#: (``sharding.policy_specs``) IS matched — that path hits the shim at
+#: runtime too — while the private implementations (``_put_like``,
+#: ``_policy_specs``, ``_POLICIES_VIEW``) are not (no word boundary
+#: after a leading underscore).
+PATTERNS = {
+    "POLICIES": re.compile(r"\bPOLICIES\b"),
+    "policy_specs": re.compile(r"\bpolicy_specs\b"),
+    "put_like": re.compile(r"\bput_like\b"),
+}
+
+#: modules that define/shim the deprecated names or implement the facade
+ALLOWLIST = {
+    "src/repro/core/placement.py",
+    "src/repro/core/__init__.py",
+    "src/repro/models/sharding.py",
+    "src/repro/models/__init__.py",
+    "src/repro/api.py",
+    "tools/check_deprecated.py",
+    # the deprecation tests exercise the shims on purpose
+    "tests/test_placement_api.py",
+}
+
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")
+
+
+def main() -> int:
+    offenders: list[str] = []
+    for top in SCAN_DIRS:
+        for path in sorted((REPO / top).rglob("*.py")):
+            rel = path.relative_to(REPO).as_posix()
+            if rel in ALLOWLIST:
+                continue
+            for lineno, line in enumerate(
+                path.read_text().splitlines(), start=1
+            ):
+                stripped = line.split("#", 1)[0]
+                for name, pat in PATTERNS.items():
+                    if pat.search(stripped):
+                        offenders.append(f"{rel}:{lineno}: {name}: {line.strip()}")
+    if offenders:
+        print(
+            "deprecated placement paths used in-repo (use repro.api / the "
+            "policy registry instead):"
+        )
+        print("\n".join(f"  {o}" for o in offenders))
+        return 1
+    print("deprecation hygiene OK: no in-repo use of "
+          + "/".join(PATTERNS))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
