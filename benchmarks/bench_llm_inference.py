@@ -8,9 +8,12 @@ yi-6b / gemma3-27b configs — the paper's figure as a table.
 
 Serve: the continuous-batching engine end-to-end with its zero-copy hot
 path (donated caches, chunked batched prefill, on-device state), reporting
-prefill and decode tokens/s *separately* and writing them to
-``BENCH_serve.json`` so CI records the serving-perf trajectory per commit.
-``--smoke`` runs only this leg at smoke scale."""
+prefill and decode tokens/s *separately*, plus a queued-arrival workload
+(requests arriving over time into an oversubscribed slot pool with
+planner-priced preemption) reporting p50/p99 per-request completion
+latency and time-to-first-token — all written to ``BENCH_serve.json`` so
+CI records the serving-perf trajectory per commit.  ``--smoke`` runs only
+these legs at smoke scale."""
 
 from __future__ import annotations
 
@@ -193,6 +196,92 @@ def serve(out_path: str = "BENCH_serve.json", *, requests: int = 8,
     return results
 
 
+def queued(out_path: str = "BENCH_serve.json", *, requests: int = 16,
+           prompt_len: int = 16, max_new: int = 8, batch_slots: int = 2,
+           arrival_every: int = 2, policy: str | None = None) -> dict:
+    """Queued-arrival workload: per-request latency under oversubscription.
+
+    Unlike :func:`serve` (all requests submitted up front), requests
+    arrive over time — one every ``arrival_every`` decode ticks — into a
+    slot pool they oversubscribe, with planner-priced preemption on.
+    Each request's ``submitted_s`` / ``first_token_s`` / ``finished_s``
+    stamps yield queue-inclusive completion latency and time-to-first-
+    token; the p50/p99 of both land in ``BENCH_serve.json`` alongside
+    the throughput rows so CI tracks tail latency per commit.
+    """
+    from repro.serve import Request, SamplingParams, ServeConfig, Server
+
+    arch = "yi-6b"
+    bundle = get_smoke_bundle(arch)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    mesh = make_mesh_for((1,), ("data",))
+    server = Server(
+        bundle,
+        ServeConfig(batch_slots=batch_slots, max_len=96, prefill_chunk=8,
+                    policy=policy, max_queue=requests,
+                    preempt=True, preempt_wait=4),
+        params,
+        mesh=mesh,
+    )
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(1, bundle.cfg.vocab, prompt_len)
+            .astype(np.int32),
+            max_new_tokens=max_new,
+            sampling=(SamplingParams() if i % 2 == 0 else
+                      SamplingParams(temperature=0.8, top_k=20, seed=i)),
+        )
+        for i in range(requests)
+    ]
+    pending = list(reqs)
+    tick = 0
+    while pending or server.has_work():
+        while pending and tick >= arrival_every * (len(reqs) - len(pending)):
+            server.add_request(pending.pop(0))
+        server.step()
+        tick += 1
+        assert tick < 50_000, "queued-arrival loop did not drain"
+    assert all(r.done for r in reqs)
+
+    lat = np.asarray([r.finished_s - r.submitted_s for r in reqs])
+    ttft = np.asarray([r.first_token_s - r.submitted_s for r in reqs])
+    stats = server.stats()
+    tp = server.throughput()
+    row = {
+        "arch": arch,
+        "batch_slots": batch_slots,
+        "requests": requests,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "arrival_every_ticks": arrival_every,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "preemptions": stats["preemptions"],
+        "promotions": stats["promotions"],
+        "peak_queue": stats["peak_queue"],
+        **server.rt.describe(),
+        **tp,
+    }
+    emit(f"serve_queued_p50[{arch}]", row["latency_p50_s"] * 1e6,
+         f"{row['latency_p50_s']*1e3:.1f}ms")
+    emit(f"serve_queued_p99[{arch}]", row["latency_p99_s"] * 1e6,
+         f"{row['latency_p99_s']*1e3:.1f}ms "
+         f"({stats['preemptions']} preemptions)")
+    try:
+        with open(out_path) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {}
+    results[f"{arch},queued"] = row
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -209,10 +298,13 @@ def main() -> None:
     if args.smoke:
         serve(args.out, requests=4, prompt_len=16, max_new=6,
               policy=args.policy)
+        queued(args.out, requests=8, prompt_len=12, max_new=6,
+               policy=args.policy)
         return
     measured()
     analytic()
     serve(args.out, policy=args.policy)
+    queued(args.out, policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,20 @@
-"""Batched serving example: continuous batching with placement policies.
+"""Batched serving example: continuous batching, sampling, streaming.
 
     PYTHONPATH=src python examples/serve_llm.py [--policy kv_host]
 
-Serves a stream of synthetic requests through the continuous-batching
-engine — batched admission into the chunked prefill path, donated-cache
-decode steps — and reports prefill vs decode tokens/s per placement
-policy: the paper's Fig. 17 experiment as a runnable service loop.
+Serves a stream of synthetic requests through the layered serve stack —
+batched admission into the chunked prefill path, donated-cache decode
+steps with per-request sampling computed in-jit — and reports prefill vs
+decode tokens/s per placement policy: the paper's Fig. 17 experiment as
+a runnable service loop.  Requests mix greedy decode with seeded
+temperature/top-k/top-p sampling, tokens stream through ``on_token``
+callbacks as they decode, and ``--asyncio`` drives the same workload
+through the async :class:`~repro.serve.Scheduler` front end
+(``await submit()`` / ``async for tok in stream()``).
 """
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -16,7 +22,104 @@ import numpy as np
 
 from repro.core.placement import registered_policies
 from repro.models import get_smoke_bundle
-from repro.serve import Request, ServeConfig, Server
+from repro.serve import (
+    Request,
+    SamplingParams,
+    Scheduler,
+    ServeConfig,
+    Server,
+)
+
+
+def make_sampling(i: int) -> SamplingParams:
+    """Alternate greedy and seeded nucleus sampling across requests."""
+    if i % 2 == 0:
+        return SamplingParams()  # temperature=0 -> greedy
+    return SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=i)
+
+
+def run_sync(bundle, params, args, pname, rng) -> None:
+    server = Server(
+        bundle,
+        ServeConfig(
+            batch_slots=3,
+            max_len=128,
+            prefill_chunk=args.prefill_chunk,
+            policy=pname,   # ServeConfig accepts any policy spelling
+        ),
+        params,
+    )
+    streamed: dict[int, int] = {}
+
+    def on_token(req: Request, tok: int) -> None:
+        # fires the tick each token is decoded; req.done marks the last
+        streamed[req.rid] = streamed.get(req.rid, 0) + 1
+
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(
+                0, bundle.cfg.vocab, args.prompt_len
+            ).astype(np.int32),
+            max_new_tokens=args.max_new,
+            sampling=make_sampling(i),
+            on_token=on_token,
+        )
+        for i in range(args.requests)
+    ]
+    server.add_requests(reqs)          # batched admission
+    t0 = time.perf_counter()
+    server.run_until_done()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    assert streamed == {r.rid: len(r.out_tokens) for r in reqs}
+    tp = server.throughput()
+    print(
+        f"[{pname}] {args.requests} requests, {total} tokens in "
+        f"{dt:.2f}s -> {total/dt:.1f} tok/s overall | prefill "
+        f"{tp['prefill_tps']:.1f} tok/s ({tp['prefill_tokens']} tok) | "
+        f"decode {tp['decode_tps']:.1f} tok/s ({tp['decode_tokens']} tok)"
+    )
+    for r in reqs[:2]:
+        mode = "greedy" if r.sampling.temperature == 0 else (
+            f"T={r.sampling.temperature} top_k={r.sampling.top_k} "
+            f"top_p={r.sampling.top_p} seed={r.sampling.seed}"
+        )
+        print(f"  req {r.rid} ({mode}): prompt {r.prompt[:6]}... "
+              f"-> {r.out_tokens}")
+
+
+async def run_async(bundle, params, args, pname, rng) -> None:
+    """The same workload through the asyncio front end: submissions
+    absorb backpressure, tokens stream as they decode."""
+    server = Server(
+        bundle,
+        ServeConfig(batch_slots=3, max_len=128,
+                    prefill_chunk=args.prefill_chunk, policy=pname,
+                    max_queue=max(args.requests // 2, 1)),
+        params,
+    )
+    sched = Scheduler(server)
+
+    async def client(i: int) -> list[int]:
+        req = await sched.submit(   # awaits queue space when full
+            rng.integers(0, bundle.cfg.vocab, args.prompt_len)
+            .astype(np.int32),
+            max_new_tokens=args.max_new,
+            sampling=make_sampling(i),
+        )
+        return [tok async for tok in sched.stream(req)]
+
+    async def clients():
+        outs = await asyncio.gather(
+            *(client(i) for i in range(args.requests)))
+        sched.close()
+        return outs
+
+    _, outs = await asyncio.gather(sched.run(), clients())
+    total = sum(len(o) for o in outs)
+    print(f"[{pname}] asyncio front end streamed {total} tokens across "
+          f"{len(outs)} concurrent clients")
 
 
 def main() -> None:
@@ -32,6 +135,9 @@ def main() -> None:
              f"({', '.join(registered_policies())}), the "
              "role=tier[:strategy][,...] grammar, or policy JSON",
     )
+    ap.add_argument("--asyncio", action="store_true",
+                    help="also drive the workload through the async "
+                         "Scheduler front end")
     args = ap.parse_args()
 
     bundle = get_smoke_bundle(args.arch)
@@ -40,40 +146,9 @@ def main() -> None:
     policies = [args.policy] if args.policy else ["hbm_resident"]
 
     for pname in policies:
-        server = Server(
-            bundle,
-            ServeConfig(
-                batch_slots=3,
-                max_len=128,
-                prefill_chunk=args.prefill_chunk,
-                policy=pname,   # ServeConfig accepts any policy spelling
-            ),
-            params,
-        )
-        reqs = [
-            Request(
-                rid=i,
-                prompt=rng.integers(
-                    0, bundle.cfg.vocab, args.prompt_len
-                ).astype(np.int32),
-                max_new_tokens=args.max_new,
-            )
-            for i in range(args.requests)
-        ]
-        server.add_requests(reqs)          # batched admission
-        t0 = time.perf_counter()
-        server.run_until_done()
-        dt = time.perf_counter() - t0
-        total = sum(len(r.out_tokens) for r in reqs)
-        tp = server.throughput()
-        print(
-            f"[{pname}] {args.requests} requests, {total} tokens in "
-            f"{dt:.2f}s -> {total/dt:.1f} tok/s overall | prefill "
-            f"{tp['prefill_tps']:.1f} tok/s ({tp['prefill_tokens']} tok) | "
-            f"decode {tp['decode_tps']:.1f} tok/s ({tp['decode_tokens']} tok)"
-        )
-        for r in reqs[:2]:
-            print(f"  req {r.rid}: prompt {r.prompt[:6]}... -> {r.out_tokens}")
+        run_sync(bundle, params, args, pname, rng)
+        if args.asyncio:
+            asyncio.run(run_async(bundle, params, args, pname, rng))
 
 
 if __name__ == "__main__":

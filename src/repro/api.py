@@ -22,7 +22,7 @@ pre-facade wiring could not express:
    against the mesh (:class:`~repro.core.placement.DonorAxisError`, never
    a silent local landing), with registered ``Strategy.STREAM`` staging
    buffers rebuilt around the moved tree.  ``Server.replan()`` in
-   :mod:`repro.serve.engine` uses it to re-place the KV cache and params
+   :mod:`repro.serve.scheduler` uses it to re-place the KV cache and params
    when occupancy crosses planner-priced thresholds — the first point in
    the repo where the paper's placement tradeoffs are acted on *during*
    execution instead of only at startup.
@@ -38,7 +38,8 @@ from typing import Iterable, Mapping, Sequence
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.hardware import DEFAULT_SYSTEM, SystemSpec
+from repro.core.datapath import copy_bound
+from repro.core.hardware import DEFAULT_SYSTEM, MemoryTier, SystemSpec
 from repro.core.placement import (
     DonorStream,
     Placement,
@@ -49,6 +50,7 @@ from repro.core.placement import (
     get_policy,
     parse_policy,
     parse_role,
+    parse_tier,
     registered_policies,
     validate_policy_for_mesh,
 )
@@ -147,6 +149,7 @@ class Runtime:
         #: planner passes run by auto()/plan_phase(), newest last per phase
         self.plans: dict[str, PhasePlan] = {}
         self._streams: dict[Role, tuple[DonorStream, tuple]] = {}
+        self._step_estimates: dict[tuple, float] = {}
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -205,8 +208,9 @@ class Runtime:
 
         Restricted to tiers this runtime realizes; ``kv_utilization``
         scales the KV-cache bytes of the serve-side profiles to the
-        *current* cache occupancy — what :meth:`repro.serve.engine.Server.
-        replan` feeds so spill/promote thresholds are priced on live
+        *current* cache occupancy — what :meth:`repro.serve.scheduler.
+        Server.replan` feeds so spill/promote thresholds are priced on
+        live
         state, not the worst case.  Returns the winning (decode-side for
         ``serve``) prediction; the full comparison lands in
         :attr:`plans` and :meth:`explain`.
@@ -437,6 +441,86 @@ class Runtime:
         """May a jitted step donate ``role``'s buffers under the current
         policy?  (STREAM placements must keep their resident buffer.)"""
         return donation_compatible(self.policy, parse_role(role))
+
+    # -- eviction pricing --------------------------------------------------
+    def price_copy(
+        self,
+        nbytes: float,
+        dst: "Placement | MemoryTier | str",
+        src: "Placement | MemoryTier | str | None" = None,
+    ) -> float:
+        """Planner-priced seconds to move ``nbytes`` between tiers.
+
+        The datapath ``copy_bound`` (twice-traversed-link halving rule +
+        per-segment latencies) between ``src`` (default: the current
+        policy's KV-cache tier) and ``dst`` — the cost model behind
+        preemption decisions: what does parking these cache rows off-HBM
+        actually cost on this machine?
+        """
+        if src is None:
+            src = self.policy.placement(Role.KV_CACHE)
+        src_t = src.tier if isinstance(src, Placement) else parse_tier(src)
+        dst_t = dst.tier if isinstance(dst, Placement) else parse_tier(dst)
+        return copy_bound(src_t, dst_t, self.system).time(nbytes)
+
+    def spill_placement(self) -> Placement:
+        """The cheapest *realizable* far-tier parking spot for evicted KV
+        rows: host DRAM when the backend exposes it, the peer/remote
+        donor pools when the mesh has the donor axis — whichever round
+        trip the datapath model prices lowest.  Falls back to local HBM
+        (a placement-neutral parking copy: the slot is still freed, just
+        without relieving HBM capacity) when no far tier is realizable.
+        """
+        allow = donor_allow_flags(self.mesh)
+        tiers: list[MemoryTier] = []
+        if allow["allow_host"]:
+            tiers.append(MemoryTier.HOST)
+        if allow["allow_peer"]:
+            tiers += [MemoryTier.PEER_HOST, MemoryTier.PEER_HBM]
+        if allow["allow_remote"]:
+            tiers.append(MemoryTier.REMOTE_HBM)
+        if not tiers:
+            return Placement(MemoryTier.HBM)
+        one_mb = 1 << 20   # round trip at a representative row size
+        best = min(
+            tiers,
+            key=lambda t: self.price_copy(one_mb, t)
+            + self.price_copy(one_mb, self.policy.placement(Role.KV_CACHE),
+                              src=t),
+        )
+        return Placement(best)
+
+    def preemption_price(self, nbytes: float) -> tuple[Placement, float]:
+        """(spill placement, round-trip seconds) for parking ``nbytes``
+        of KV rows off-cache and bringing them back — what the scheduler
+        weighs against the planner-predicted natural slot-free time
+        before evicting a victim."""
+        spill = self.spill_placement()
+        kv = self.policy.placement(Role.KV_CACHE)
+        return spill, (
+            self.price_copy(nbytes, spill)
+            + self.price_copy(nbytes, kv, src=spill)
+        )
+
+    def decode_step_seconds(
+        self, batch_slots: int, max_len: int
+    ) -> float:
+        """Planner-predicted decode-step seconds under the current policy
+        — the other side of the preemption ledger (how long until a slot
+        frees naturally)."""
+        from repro.configs import ShapeSpec
+
+        key = (batch_slots, max_len, self.policy.name)
+        cached = self._step_estimates.get(key)
+        if cached is not None:
+            return cached
+        prof = self.bundle.decode_workload(
+            ShapeSpec("serve", max_len, batch_slots, "decode"),
+            num_chips=self.num_chips,
+        )
+        est = predict(prof, self.policy, self.system).step_s
+        self._step_estimates[key] = est
+        return est
 
     # -- live migration ----------------------------------------------------
     def migrate(

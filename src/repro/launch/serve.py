@@ -18,7 +18,7 @@ from repro.configs import get_config, smoke_config
 from repro.core.placement import registered_policies
 from repro.launch.mesh import make_mesh_for
 from repro.models.model_zoo import ModelBundle
-from repro.serve import Request, ServeConfig, Server
+from repro.serve import Request, SamplingParams, ServeConfig, Server
 
 log = logging.getLogger("repro.serve")
 
@@ -53,6 +53,23 @@ def main() -> None:
              "boundaries and migrate the live KV cache/params when the "
              "pick changes (planner-owned policies only)",
     )
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "(0 = no top-k filter)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = no top-p filter)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed base (request rid is "
+                         "added so rows draw independently)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on waiting requests (backpressure); "
+                         "default unbounded")
+    ap.add_argument("--preempt", action="store_true",
+                    help="enable planner-priced KV preemption: starved "
+                         "waiters may evict a victim slot to the cheapest "
+                         "realizable far tier")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -75,6 +92,8 @@ def main() -> None:
             max_len=args.max_len,
             policy=None if args.policy == "auto" else args.policy,
             auto_replan=args.auto_replan,
+            max_queue=args.max_queue,
+            preempt=args.preempt,
         ),
         params,
         mesh=mesh,
@@ -89,6 +108,12 @@ def main() -> None:
                     0, cfg.vocab, size=args.prompt_len
                 ).astype(np.int32),
                 max_new_tokens=args.max_new,
+                sampling=SamplingParams(
+                    temperature=args.temperature,
+                    top_k=args.top_k,
+                    top_p=args.top_p,
+                    seed=args.seed + rid,
+                ),
             )
         )
     t0 = time.perf_counter()
@@ -96,13 +121,15 @@ def main() -> None:
     dt = time.perf_counter() - t0
     total_tokens = args.requests * args.max_new
     tp = server.throughput()
+    stats = server.stats()
     log.info(
         "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
-        "(policy %s, %d replans / %d migrations) | prefill %.1f tok/s "
-        "| decode %.1f tok/s",
+        "(policy %s, %d replans / %d migrations, %d preemptions / "
+        "%d promotions) | prefill %.1f tok/s | decode %.1f tok/s",
         args.requests, total_tokens, dt, total_tokens / dt,
-        server.policy.name, server.stats["replans"],
-        server.stats["migrations"], tp["prefill_tps"], tp["decode_tps"],
+        server.policy.name, stats["replans"], stats["migrations"],
+        stats["preemptions"], stats["promotions"],
+        tp["prefill_tps"], tp["decode_tps"],
     )
 
 

@@ -1,1 +1,26 @@
-from repro.serve.engine import Request, ServeConfig, Server  # noqa: F401
+"""Layered serve stack: state / sampling / scheduler / engine.
+
+- :mod:`repro.serve.state` — slot/sequence host mirrors, device serve
+  state, and the race-safe upload discipline.
+- :mod:`repro.serve.sampling` — per-request sampling params computed
+  in-jit (temperature / top-k / top-p / seeded draws / stop tokens)
+  with a NumPy reference oracle.
+- :mod:`repro.serve.scheduler` — the continuous-batching front end:
+  bounded request queue, streaming callbacks, planner-priced KV
+  preemption, and the public :class:`Server` / async
+  :class:`Scheduler`.
+- :mod:`repro.serve.engine` — the :class:`Executor`: every jitted
+  dispatch (donated decode step, chunked prefill, slot
+  extract/insert) and live re-placement.
+"""
+
+from repro.serve.engine import Executor  # noqa: F401
+from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    QueueFullError,
+    Request,
+    Scheduler,
+    ServeConfig,
+    Server,
+)
+from repro.serve.state import SlotTable, SpilledSequence  # noqa: F401

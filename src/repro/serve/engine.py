@@ -1,98 +1,81 @@
-"""Batched serving engine: continuous batching over prefill/decode steps.
+"""Executor: the jitted device half of the serve stack.
 
-The serving loop is the paper's Fig. 17 workload industrialized: per decoded
-token, every parameter byte and every cache byte crosses the compute
-datapath once — and, as of the zero-copy rework, *exactly* once:
+The serve package is layered (see ``docs/serving.md``):
 
-* **Donated caches** — the jitted decode step (and the chunked-prefill jit)
-  donates the KV cache pytree, so XLA updates KV in place instead of
-  allocating and copying a cache-sized buffer per token.  The
-  placement-pinned ``out_shardings`` (``Runtime.specs``) keep donor/host
-  placements on the aliased buffer across steps.  Donation is gated per policy by
-  :func:`repro.models.sharding.donation_compatible`: ``Strategy.STREAM``
-  placements keep their far-tier resident buffer undonated.
+* :mod:`repro.serve.state` — slot/sequence host mirrors + device state,
+  upload discipline;
+* :mod:`repro.serve.sampling` — per-request temperature/top-k/top-p/
+  seeds/stop tokens, computed in-jit;
+* :mod:`repro.serve.scheduler` — the continuous-batching front end
+  (request queue, admission ordering, streaming callbacks, planner-priced
+  KV preemption) and the public :class:`~repro.serve.scheduler.Server`;
+* this module — the **executor**: it owns the params, the KV cache, the
+  :class:`repro.api.Runtime` (mesh + policy + planner), and every jitted
+  dispatch.  Nothing here knows about requests or queues; it moves
+  batches of tokens and cache rows.
+
+The hot path keeps the zero-copy discipline of the Fig. 17 rework —
+per decoded token every parameter byte and cache byte crosses the
+compute datapath exactly once:
+
+* **Donated caches** — decode/prefill jits donate the cache pytree
+  (gated per policy by ``donation_compatible``; ``Strategy.STREAM``
+  placements keep their far-tier resident buffer undonated), with
+  ``Runtime.specs``-pinned ``out_shardings`` so donor/host placements
+  survive the aliasing across steps.
 * **Chunked batched prefill** — admission writes whole prompt chunks for
-  every newly claimed slot in one :meth:`ModelBundle.prefill_at` dispatch
-  per chunk (row-sliced cache scatter at per-slot offsets), so admitting a
-  batch of length-L prompts costs O(L / prefill_chunk) dispatches instead
-  of replaying O(B·L) full-batch decode steps.
-* **On-device serve state** — per-slot lengths and last tokens live in a
-  device-side state dict carried through the jitted step; the greedy
-  argmax happens in-jit and the only per-step host↔device traffic is the
-  (B,) next-token vector fetched back.  Host mirrors are updated from that
-  returned vector, never re-uploaded per step (uploads happen only on slot
-  lifecycle events: admission and free).
+  all newly claimed slots per :meth:`ModelBundle.prefill_at` dispatch, so
+  a batch of length-L prompts costs O(L / prefill_chunk) dispatches.
+  Encoder-decoder bundles fall back to the O(B·L) decode-step replay —
+  now warned once and counted (``decode_replay_prefills``) instead of
+  silent.
+* **On-device serve state** — lengths/last-token/active *and the
+  per-slot sampling parameters* live in a device state dict carried
+  through the jitted step; sampling + stop detection happen in-jit, and
+  the only per-step host↔device traffic is one packed ``(2, B)``
+  next-token/stopped vector fetched back.
+* **Slot extract/insert** — preemption's device half: one jitted
+  ``dynamic_slice`` pulls a victim's cache rows out (then parked on the
+  planner-priced spill tier), one jitted ``dynamic_update_slice`` puts
+  them back on promotion.  Both preserve the pinned cache placement.
 
-Placement is owned by a :class:`repro.api.Runtime` facade: when
-``ServeConfig.policy`` is ``None`` the runtime's planner prices decode
-*and* chunked-prefill profiles and picks the fastest policy that fits
-every memory pool in both phases, restricted to the tiers this runtime
-realizes (host tiers when the backend exposes a distinct host memory
-space, peer/remote tiers when the mesh has the ``donor``/``donor_pod``
-axis).  A forced policy — any :func:`repro.core.placement.parse_policy`
-spelling, including custom string/JSON policies — that names a
-peer/remote tier on a donor-less mesh raises
-:class:`repro.core.placement.DonorAxisError` instead of silently serving
-from local HBM.  :meth:`Server.replan` re-runs the planner against the
-*live* cache occupancy and, when the pick changes, migrates the KV cache
-and params between tiers mid-serve via :meth:`repro.api.Runtime.migrate`
-(decode output is bit-identical across the move — it is a placement
-change, not a recompute).  See ``docs/serving.md`` for the slot
-lifecycle, chunking, and donation rules in full, and
-``docs/placement.md`` for the policy grammar + migration semantics.
+:meth:`Executor.replan` re-places the live cache/params mid-serve via
+:meth:`repro.api.Runtime.migrate` and rebuilds the jits (donation flags
+and pinned out_shardings are placement-dependent); decode output is
+bit-identical across the move.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import logging
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api import Runtime
-from repro.core.placement import PlacementPolicy, Role, parse_policy
-from repro.models.model_zoo import ModelBundle
+from repro.core.placement import Placement, PlacementPolicy, Role, parse_policy
 from repro.models.sharding import donation_compatible
+from repro.serve import sampling as sampling_mod
+from repro.serve.state import upload
 
 log = logging.getLogger("repro.serve.engine")
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (L,) int32
-    max_new_tokens: int
-    out_tokens: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class Executor:
+    """Jitted decode/prefill/extract/insert steps over one model bundle.
 
+    ``cfg`` is the scheduler's ``ServeConfig`` (duck-typed: only the
+    shape/policy fields are read here).  The executor owns ``params``,
+    ``caches`` and the :class:`repro.api.Runtime`; the scheduler owns
+    requests, slots, and the device state dict it threads through
+    :meth:`decode`.
+    """
 
-@dataclasses.dataclass
-class ServeConfig:
-    batch_slots: int = 8
-    max_len: int = 512
-    #: tokens per chunked-prefill dispatch during admission
-    prefill_chunk: int = 32
-    #: None -> consult the placement planner (datapath-bound model);
-    #: otherwise any ``parse_policy`` spelling: a PlacementPolicy value,
-    #: a registered name, ``"kv=host:stream,..."``, or policy JSON.
-    policy: PlacementPolicy | str | dict | None = None
-    rules: dict | None = None
-    #: re-run the planner (and migrate KV/params if the pick changes)
-    #: whenever cache occupancy crosses a band boundary — the live form
-    #: of the paper's phase-dependent placement decision.
-    auto_replan: bool = False
-    #: number of occupancy bands for auto_replan (4 -> re-price at 25%
-    #: occupancy steps)
-    replan_bands: int = 4
-
-
-class Server:
-    """Single-model continuous-batching server (greedy decoding)."""
-
-    def __init__(self, bundle: ModelBundle, cfg: ServeConfig, params, mesh=None):
+    def __init__(self, bundle, cfg, params, mesh=None):
         self.bundle = bundle
         self.cfg = cfg
         self.params = params
@@ -113,31 +96,34 @@ class Server:
                 "chunk %d)", self.rt.policy.name, bundle.cfg.name,
                 cfg.batch_slots, cfg.max_len, cfg.prefill_chunk,
             )
-        self._requests: dict[int, Request] = {}
-        self._slots: list[int | None] = [None] * cfg.batch_slots
-        # host mirrors of the device-side serve state (see _sync_state)
-        self._lengths = np.zeros(cfg.batch_slots, np.int32)
-        self._last_tokens = np.zeros((cfg.batch_slots, 1), np.int32)
-        self._active = np.zeros(cfg.batch_slots, bool)
-        self._caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
+        self.caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
         if mesh is not None:
-            # realize the policy for every role the server owns: the KV
+            # realize the policy for every role the executor owns: the KV
             # cache AND the params (weights_stream keeps params host-side;
             # kv_peer_hbm/weights_peer_hbm shard across the donor slices)
-            self._caches = self.rt.realize(
-                self._caches, Role.KV_CACHE, self._cache_defs()
+            self.caches = self.rt.realize(
+                self.caches, Role.KV_CACHE, self._cache_defs()
             )
             self.params = self.rt.realize(self.params, Role.PARAMS)
-        self._build_steps()
-        self._state = self._make_state()
-        self._pending: list[Request] = []
-        self._replan_band: int | None = None
-        #: serve-phase throughput counters (tokens and wall seconds)
-        self.stats = {
+        # slot extract/insert slice the batch axis; every cache family
+        # stacks layers first, batch second — verify rather than assume
+        for leaf in jax.tree.leaves(self.caches):
+            if leaf.ndim < 2 or leaf.shape[1] != cfg.batch_slots:
+                raise ValueError(
+                    "cache leaf does not carry the batch on axis 1: "
+                    f"shape {leaf.shape} with batch_slots="
+                    f"{cfg.batch_slots}"
+                )
+        #: phase counters (tokens and wall seconds) + lifecycle events
+        self.counters = {
             "prefill_tokens": 0, "prefill_s": 0.0,
             "decode_tokens": 0, "decode_s": 0.0,
             "replans": 0, "migrations": 0,
+            "decode_replay_prefills": 0,
+            "spill_s": 0.0, "restore_s": 0.0,
         }
+        self._warned_replay = False
+        self._build_steps()
 
     @property
     def policy(self) -> PlacementPolicy:
@@ -145,19 +131,45 @@ class Server:
         :meth:`replan` migrations)."""
         return self.rt.policy
 
+    @property
+    def donates_cache(self) -> bool:
+        """Whether the decode/prefill jits donate the cache pytree under
+        the current policy (RESIDENT yes, STREAM no)."""
+        return self._donate_cache
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self._prefill is not None
+
     def _cache_defs(self):
         return self.bundle.cache_defs(self.cfg.batch_slots, self.cfg.max_len)
 
+    def slot_bytes(self) -> int:
+        """Resident bytes of one cache slot row — what a preemption spill
+        moves (each way)."""
+        return sum(
+            leaf.nbytes // self.cfg.batch_slots
+            for leaf in jax.tree.leaves(self.caches)
+        )
+
+    # -- jit construction --------------------------------------------------
     def _build_steps(self) -> None:
-        """(Re)build the jitted decode/prefill steps for the current
-        policy: donation flags and pinned cache out_shardings are
-        placement-dependent, so :meth:`replan` calls this after a
-        migration."""
+        """(Re)build the jitted steps for the current policy: donation
+        flags and pinned cache out_shardings are placement-dependent, so
+        :meth:`replan` calls this after a migration."""
         bundle, cfg = self.bundle, self.cfg
         cache_specs = (
             None if self.mesh is None
             else self.rt.specs(Role.KV_CACHE, self._cache_defs())
         )
+        self._state_sharding = (
+            None if self.mesh is None
+            else NamedSharding(self.mesh, P())
+        )
+        # measured step time restarts with each jit build (a migration
+        # changes the step cost)
+        self._step_ewma: float | None = None
+        self._steps_since_build = 0
 
         # STREAM placements (kv_host & co.) keep the resident cache buffer
         # undonated — it is the source of truth the next step's staged
@@ -176,18 +188,25 @@ class Server:
                 {"tokens": state["tokens"], "lengths": state["lengths"]},
                 caches,
             )
-            next_tok = jnp.argmax(logits, -1).astype(jnp.int32)     # (B,)
+            # the sampler layer, in-jit: greedy rows (temp == 0) take the
+            # plain argmax — bit-identical to the pre-sampler engine
+            next_tok = sampling_mod.sample_tokens(logits, state)    # (B,)
+            stopped = sampling_mod.hit_stop(next_tok, state["stop"])
             active = state["active"]
-            new_state = {
+            new_state = dict(
+                state,
                 # inactive rows keep their token/length so idle slots and
                 # freshly prefilled slots ride through untouched
-                "tokens": jnp.where(
+                tokens=jnp.where(
                     active[:, None], next_tok[:, None], state["tokens"]
                 ),
-                "lengths": state["lengths"] + active.astype(jnp.int32),
-                "active": active,
-            }
-            return next_tok, new_state, new_caches
+                lengths=state["lengths"] + active.astype(jnp.int32),
+            )
+            # one packed (2, B) vector back per step: next token + stop hit
+            out = jnp.stack(
+                [next_tok, (stopped & active).astype(jnp.int32)]
+            )
+            return out, new_state, new_caches
 
         donate = (1, 2) if self._donate_cache else (1,)
         self._decode = jax.jit(
@@ -196,9 +215,14 @@ class Server:
             # pin the returned cache to its realized placement so a donor
             # or host placement survives across steps (and donation keeps
             # aliasing the same tier) instead of drifting to whatever
-            # layout XLA prefers for the first output
+            # layout XLA prefers for the first output.  The state dict is
+            # pinned replicated: several of its arrays (sampling params,
+            # stop table) pass through unchanged, and a donated
+            # pass-through must come back with the sharding it arrived
+            # with (place_state) or aliasing fails.
             **({} if cache_specs is None
-               else {"out_shardings": (None, None, cache_specs)}),
+               else {"out_shardings":
+                     (None, self._state_sharding, cache_specs)}),
         )
 
         # encoder-decoder bundles have no offset-chunk prefill (their
@@ -216,41 +240,225 @@ class Server:
                    else {"out_shardings": (None, cache_specs)}),
             )
 
-    # -- live re-placement -------------------------------------------------
-    def occupancy(self) -> float:
-        """Live cache utilization: tokens resident across all slots over
-        the cache extent — what replan pricing feeds the planner."""
-        return float(self._lengths.sum()) / float(
-            self.cfg.batch_slots * self.cfg.max_len
+        # preemption's device half: one slot row out / back in.  Extract
+        # must NOT donate (the cache lives on); insert donates like the
+        # decode step and keeps the pinned placement.
+        self._extract = jax.jit(
+            lambda caches, i: jax.tree.map(
+                lambda x: lax.dynamic_slice_in_dim(x, i, 1, axis=1), caches
+            ),
+        )
+        self._insert = jax.jit(
+            lambda caches, rows, i: jax.tree.map(
+                lambda x, r: lax.dynamic_update_slice_in_dim(
+                    x, r, i, axis=1
+                ),
+                caches, rows,
+            ),
+            donate_argnums=(0,) if self._donate_cache else (),
+            **({} if cache_specs is None
+               else {"out_shardings": cache_specs}),
         )
 
-    def replan(self, policy=None, *, force: bool = False) -> bool:
+    def place_state(self, state: dict) -> dict:
+        """Replicate a freshly uploaded state dict onto the mesh so the
+        decode step's donated pass-through arrays alias cleanly (their
+        pinned output sharding must match the input's)."""
+        if self._state_sharding is None:
+            return state
+        return jax.device_put(state, self._state_sharding)
+
+    # -- decode ------------------------------------------------------------
+    def decode(self, state: dict) -> tuple[np.ndarray, np.ndarray, dict]:
+        """One jitted decode step over every slot.
+
+        Returns ``(next_tokens (B,), stopped (B,) bool, new_state)`` with
+        the packed result fetched through a single async transfer — the
+        only per-step host↔device traffic.
+        """
+        t0 = time.perf_counter()
+        out, new_state, self.caches = self._decode(
+            self.params, state, self.caches
+        )
+        copy_async = getattr(out, "copy_to_host_async", None)
+        if copy_async is not None:
+            copy_async()
+        out_host = np.asarray(out)
+        dt = time.perf_counter() - t0
+        self.counters["decode_s"] += dt
+        # measured step-time EWMA for preemption's wait-side pricing; the
+        # first step after a (re)build is compile-dominated and skipped
+        self._steps_since_build += 1
+        if self._steps_since_build > 1:
+            self._step_ewma = (
+                dt if self._step_ewma is None
+                else 0.8 * self._step_ewma + 0.2 * dt
+            )
+        return out_host[0], out_host[1].astype(bool), new_state
+
+    @property
+    def measured_step_s(self) -> float | None:
+        """EWMA of observed decode-step wall time (None until the second
+        step after a jit (re)build) — the wait-side price the scheduler
+        prefers over the planner's analytic prediction."""
+        return self._step_ewma
+
+    # -- prefill (admission) ----------------------------------------------
+    def prefill(self, new, table) -> None:
+        """Write the newly claimed rows' prompts into the cache.
+
+        ``new`` is ``[(slot, prompt ndarray), ...]``; ``table`` is the
+        scheduler's :class:`~repro.serve.state.SlotTable`, whose
+        ``lengths`` mirror advances as chunks land.  The last prompt
+        token is withheld: the first decode step feeds it so its logits
+        produce the first generated token.  Blocks on the dispatches so
+        the prefill/decode split in the counters is honest.
+        """
+        t0 = time.perf_counter()
+        if self._prefill is None:
+            self._replay_prefill(new, table)
+        else:
+            self._chunked_prefill(new, table)
+        jax.block_until_ready(self.caches)
+        self.counters["prefill_tokens"] += sum(
+            len(prompt) - 1 for _, prompt in new
+        )
+        self.counters["prefill_s"] += time.perf_counter() - t0
+
+    def _chunked_prefill(self, new, table) -> None:
+        chunk = max(int(self.cfg.prefill_chunk), 1)
+        lens = {i: len(prompt) - 1 for i, prompt in new}
+        # at least one dispatch even when every prompt has length 1
+        # (lens all 0): recurrent (SSM) state is cumulative and a freed
+        # slot keeps integrating garbage while idle, so admission must
+        # run prefill_at once for its offsets==0 zero-state reset even
+        # with nothing to write.
+        max_len = max(max(lens.values()), 1)
+        B = self.cfg.batch_slots
+        for lo in range(0, max_len, chunk):
+            toks = np.zeros((B, chunk), np.int32)
+            new_lens = np.zeros(B, np.int32)
+            for i, prompt in new:
+                n = int(np.clip(lens[i] - lo, 0, chunk))
+                if n > 0:
+                    toks[i, :n] = prompt[lo : lo + n]
+                    new_lens[i] = n
+            _, self.caches = self._prefill(
+                self.params,
+                {
+                    # toks/new_lens are freshly built per chunk and never
+                    # mutated after the handoff; lengths is a live mirror
+                    # and goes through the race-safe upload copy.
+                    "tokens": jnp.asarray(toks),
+                    "new_lens": jnp.asarray(new_lens),
+                },
+                self.caches,
+                upload(table.lengths, np.int32),
+            )
+            for i, _ in new:
+                table.lengths[i] += int(new_lens[i])
+
+    def _replay_prefill(self, new, table) -> None:
+        """Fallback admission for bundles without ``prefill_at``
+        (encoder-decoder): replay each prompt token-by-token through the
+        full-batch decode step — O(B·L) dispatches, correctness-only.
+        Warned once and counted so the slow path is visible."""
+        if not self._warned_replay:
+            self._warned_replay = True
+            log.warning(
+                "%s has no chunked prefill (encoder-decoder bundles "
+                "re-project the cross-attention memory): admission falls "
+                "back to O(B*L) decode-step replay — correctness-only; "
+                "counted in stats()['decode_replay_prefills']",
+                self.bundle.cfg.name,
+            )
+        self.counters["decode_replay_prefills"] += len(new)
+        B = self.cfg.batch_slots
+
+        def idle_state(toks):
+            # rebuilt per dispatch: the decode jit donates the state, so
+            # these buffers are consumed by each call
+            return {
+                "tokens": jnp.asarray(toks),
+                "lengths": upload(table.lengths, np.int32),
+                "active": jnp.asarray(np.zeros(B, bool)),
+                "temp": jnp.asarray(np.zeros(B, np.float32)),
+                "top_k": jnp.asarray(np.zeros(B, np.int32)),
+                "top_p": jnp.asarray(np.ones(B, np.float32)),
+                "seed": jnp.asarray(np.zeros(B, np.uint32)),
+                "stop": jnp.asarray(np.full(
+                    (B, sampling_mod.STOP_WIDTH), -1, np.int32
+                )),
+            }
+
+        for i, prompt in new:
+            for t in range(len(prompt) - 1):
+                toks = np.zeros((B, 1), np.int32)
+                toks[i, 0] = prompt[t]
+                _, _, self.caches = self._decode(
+                    self.params, self.place_state(idle_state(toks)),
+                    self.caches,
+                )
+                table.lengths[i] += 1
+
+    # -- preemption: slot spill / restore ---------------------------------
+    def extract_slot(self, i: int, spill_to: Placement):
+        """Pull slot ``i``'s cache rows out and park them on
+        ``spill_to`` (the planner-priced spill tier).  Blocking — the
+        rows are consistent when this returns.  Counted in ``spill_s``."""
+        t0 = time.perf_counter()
+        rows = self._extract(self.caches, jnp.int32(i))
+        if self.mesh is not None:
+            park = self.rt.policy.with_placement(Role.KV_CACHE, spill_to)
+            rows = self.rt.realize(
+                rows, Role.KV_CACHE, specs=None, policy=park
+            )
+        jax.block_until_ready(rows)
+        self.counters["spill_s"] += time.perf_counter() - t0
+        return rows
+
+    def insert_slot(self, i: int, rows) -> None:
+        """Scatter parked rows back into slot ``i`` (promotion).  The
+        insert jit donates the cache like the decode step and keeps the
+        pinned placement, so the move is bit-preserving and in place."""
+        t0 = time.perf_counter()
+        self.caches = self._insert(self.caches, rows, jnp.int32(i))
+        jax.block_until_ready(self.caches)
+        self.counters["restore_s"] += time.perf_counter() - t0
+
+    # -- live re-placement -------------------------------------------------
+    def replan(
+        self, policy=None, *, force: bool = False, occupancy: float = 1.0,
+        inflight=None,
+    ) -> bool:
         """Re-place the live KV cache (and params) mid-serve.
 
         With ``policy=None``, re-runs the planner's combined serve
-        pricing against the *current* cache occupancy
-        (:meth:`occupancy` scales the KV bytes, so a near-empty cache
-        prices like a near-empty cache); with an explicit ``policy`` (any
+        pricing against the *current* cache occupancy (``occupancy``
+        scales the KV bytes, so a near-empty cache prices like a
+        near-empty cache); with an explicit ``policy`` (any
         ``parse_policy`` spelling), adopts it directly.  When the target
         differs from the policy in force, the KV cache and — if its
         placement changed — the params are migrated between tiers via
         :meth:`repro.api.Runtime.migrate` (donation-aware ``device_put``
         onto the new shardings; decode output is bit-identical across
         the move), and the jitted steps are rebuilt for the new donation
-        flags and pinned out_shardings.  Returns True iff a migration
-        happened.  No mesh -> nothing is realizable, always False.
+        flags and pinned out_shardings.  ``inflight`` is blocked on
+        before the buffers move (the scheduler passes its device state).
+        Returns True iff a migration happened.  No mesh -> nothing is
+        realizable, always False.
         """
         if self.mesh is None:
             return False
         old = self.rt.policy
-        self.stats["replans"] += 1
+        self.counters["replans"] += 1
         if policy is None:
             self.rt.plan_phase(
                 "serve",
                 batch_slots=self.cfg.batch_slots,
                 max_len=self.cfg.max_len,
                 prefill_chunk=self.cfg.prefill_chunk,
-                kv_utilization=self.occupancy(),
+                kv_utilization=occupancy,
                 log_table=False,
             )
             target = self.rt.policy
@@ -267,7 +475,9 @@ class Server:
             return False
         # drain in-flight dispatches against the old placement before the
         # buffers move out from under them
-        jax.block_until_ready((self._caches, self._state["tokens"]))
+        jax.block_until_ready(
+            (self.caches,) if inflight is None else (self.caches, inflight)
+        )
         # plan_phase may have already adopted the target into rt.policy;
         # migrate() owns the handover, and on failure rt.policy must keep
         # describing what the live buffers actually are.  Donation is
@@ -279,8 +489,8 @@ class Server:
             if force or target.placement(Role.KV_CACHE) != old.placement(
                 Role.KV_CACHE
             ):
-                self._caches = self.rt.migrate(
-                    self._caches, Role.KV_CACHE, target, self._cache_defs(),
+                self.caches = self.rt.migrate(
+                    self.caches, Role.KV_CACHE, target, self._cache_defs(),
                     donate=donation_compatible(old, Role.KV_CACHE),
                 )
                 moved_kv = True
@@ -308,262 +518,9 @@ class Server:
             raise
         self.rt.policy = target
         self._build_steps()
-        self.stats["migrations"] += 1
+        self.counters["migrations"] += 1
         log.info(
             "replan: migrated %s -> %s at occupancy %.0f%%",
-            old.name, target.name, 100 * self.occupancy(),
+            old.name, target.name, 100 * occupancy,
         )
         return True
-
-    def _maybe_auto_replan(self) -> None:
-        """Fire :meth:`replan` when occupancy crosses a band boundary —
-        only for planner-owned policies (a forced ``cfg.policy`` pins
-        placement; call :meth:`replan` explicitly to move it)."""
-        if not self.cfg.auto_replan or self.cfg.policy is not None:
-            return
-        band = int(self.occupancy() * max(self.cfg.replan_bands, 1))
-        if band != self._replan_band:
-            self._replan_band = band
-            self.replan()
-
-    # -- device-side serve state ------------------------------------------
-    @staticmethod
-    def _upload(arr: np.ndarray, dtype) -> jnp.ndarray:
-        """Device copy of a host mirror that can NEVER see later writes.
-
-        The PR 2 lesson, sharpened: ``jnp.asarray`` can zero-copy alias
-        the mirror, and even ``jnp.array`` — which copies eagerly on an
-        idle runtime — may *defer* reading the numpy buffer behind queued
-        async dispatches on the CPU backend, so a subsequent
-        ``mirror[i] += 1`` still races the device read.  Handing over a
-        fresh ``.copy()`` that nothing ever mutates is the only upload
-        that is safe under queue pressure.
-        """
-        return jnp.asarray(np.array(arr, dtype=dtype, copy=True))
-
-    def _make_state(self) -> dict:
-        """Fresh device state from the host mirrors."""
-        return {
-            "tokens": self._upload(self._last_tokens, np.int32),
-            "lengths": self._upload(self._lengths, np.int32),
-            "active": self._upload(self._active, bool),
-        }
-
-    def _sync_state(self) -> None:
-        """Re-upload the small state arrays after a slot lifecycle event
-        (admission / free).  Steady-state decode never calls this: the
-        state lives on device and the host mirror advances from the
-        *returned* token vector."""
-        self._state = self._make_state()
-
-    # -- request lifecycle -------------------------------------------------
-    def add_request(self, req: Request) -> None:
-        """Queue a request, validating it against the cache extent.
-
-        Prefill writes ``len(prompt) - 1`` cache positions and the decode
-        loop at least one more, so a prompt only fits when ``len(prompt) <
-        max_len``.  Admitting a longer one would advance lengths past the
-        cache and silently clamp/corrupt KV writes — reject it here,
-        logged, before it ever claims a slot.  Duplicate (or negative)
-        rids are rejected too: the rid is the slot-bookkeeping key, and a
-        silent overwrite would orphan the live request's slot.
-        """
-        if req.rid < 0:
-            raise ValueError(f"request rid must be >= 0, got {req.rid}")
-        if req.rid in self._requests:
-            raise ValueError(
-                f"request {req.rid}: rid already queued or being served "
-                "(rids must be unique among live requests; a duplicate "
-                "would orphan the live request's slot bookkeeping — "
-                "finished rids are evicted and may be reused)"
-            )
-        if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1, got "
-                f"{req.max_new_tokens}"
-            )
-        if len(req.prompt) == 0:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        if len(req.prompt) >= self.cfg.max_len:
-            log.warning(
-                "rejecting request %d: prompt of %d tokens needs "
-                "len(prompt)+1 cache positions but max_len=%d",
-                req.rid, len(req.prompt), self.cfg.max_len,
-            )
-            raise ValueError(
-                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
-                f"does not fit max_len={self.cfg.max_len} "
-                "(need len(prompt) < max_len)"
-            )
-        self._requests[req.rid] = req
-        self._pending.append(req)
-
-    def add_requests(self, reqs) -> None:
-        """Batched admission entry point: queue several requests at once
-        (they prefill together in the next tick's chunked dispatches)."""
-        for req in reqs:
-            self.add_request(req)
-
-    def _admit(self) -> None:
-        """Claim free slots for pending requests and prefill them batched.
-
-        Every newly claimed row's prompt is written through
-        ``bundle.prefill_at``: one dispatch per ``prefill_chunk`` tokens
-        covers *all* admitted rows (row-sliced cache scatter at per-slot
-        offsets), so admission costs O(max_prompt_len / prefill_chunk)
-        dispatches.  The last prompt token is withheld: the first decode
-        step feeds it so its logits produce the first generated token
-        (the prefill-then-decode contract).  See ``docs/serving.md``.
-        """
-        new: list[tuple[int, Request]] = []
-        for i in range(self.cfg.batch_slots):
-            if self._slots[i] is not None or not self._pending:
-                continue
-            req = self._pending.pop(0)
-            self._slots[i] = req.rid
-            new.append((i, req))
-        if not new:
-            return
-        t0 = time.perf_counter()
-        if self._prefill is None:
-            self._admit_replay(new)
-        else:
-            self._admit_chunked(new)
-        n_prefill = sum(len(req.prompt) - 1 for _, req in new)
-        for i, req in new:
-            self._last_tokens[i, 0] = req.prompt[-1]
-            self._active[i] = True
-        self._sync_state()
-        # drain the prefill dispatches themselves (the state upload has no
-        # data dependency on them) so the prefill/decode split in stats is
-        # honest — otherwise queued prefill compute would be absorbed into
-        # the next step()'s decode timing.
-        jax.block_until_ready((self._caches, self._state["tokens"]))
-        self.stats["prefill_tokens"] += n_prefill
-        self.stats["prefill_s"] += time.perf_counter() - t0
-
-    def _admit_chunked(self, new: list[tuple[int, Request]]) -> None:
-        chunk = max(int(self.cfg.prefill_chunk), 1)
-        lens = {i: len(req.prompt) - 1 for i, req in new}
-        # at least one dispatch even when every prompt has length 1
-        # (lens all 0): recurrent (SSM) state is cumulative and a freed
-        # slot keeps integrating garbage while idle, so admission must
-        # run prefill_at once for its offsets==0 zero-state reset even
-        # with nothing to write.
-        max_len = max(max(lens.values()), 1)
-        for lo in range(0, max_len, chunk):
-            toks = np.zeros((self.cfg.batch_slots, chunk), np.int32)
-            new_lens = np.zeros(self.cfg.batch_slots, np.int32)
-            for i, req in new:
-                n = int(np.clip(lens[i] - lo, 0, chunk))
-                if n > 0:
-                    toks[i, :n] = req.prompt[lo : lo + n]
-                    new_lens[i] = n
-            _, self._caches = self._prefill(
-                self.params,
-                {
-                    # toks/new_lens are freshly built per chunk and never
-                    # mutated after the handoff; _lengths is a live mirror
-                    # and goes through the race-safe _upload copy.
-                    "tokens": jnp.asarray(toks),
-                    "new_lens": jnp.asarray(new_lens),
-                },
-                self._caches,
-                self._upload(self._lengths, np.int32),
-            )
-            for i, _ in new:
-                self._lengths[i] += int(new_lens[i])
-
-    def _admit_replay(self, new: list[tuple[int, Request]]) -> None:
-        """Fallback admission for bundles without ``prefill_at``
-        (encoder-decoder): replay each prompt token-by-token through the
-        full-batch decode step — O(B·L) dispatches, correctness-only."""
-        idle = np.zeros(self.cfg.batch_slots, bool)
-        for i, req in new:
-            for t in range(len(req.prompt) - 1):
-                toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
-                toks[i, 0] = req.prompt[t]
-                state = {
-                    "tokens": jnp.asarray(toks),
-                    "lengths": self._upload(self._lengths, np.int32),
-                    "active": jnp.asarray(idle),
-                }
-                _, _, self._caches = self._decode(
-                    self.params, state, self._caches
-                )
-                self._lengths[i] += 1
-
-    def _free_slot(self, i: int) -> None:
-        """The single place a slot returns to the pool: clears the slot
-        assignment, its state mirrors, and the request-table entry
-        together (stale cache rows beyond the zeroed length are masked
-        out and overwritten by next prefill; evicting the finished rid
-        lets callers reuse it and bounds the table to live requests).
-        The caller re-syncs device state after the batch of frees."""
-        self._requests.pop(self._slots[i], None)
-        self._slots[i] = None
-        self._lengths[i] = 0
-        self._last_tokens[i, 0] = 0
-        self._active[i] = False
-
-    # -- one decode tick -----------------------------------------------------
-    def step(self) -> int:
-        """Admit + decode one token for every active slot. Returns #active.
-
-        The decode step consumes and returns the on-device state; the only
-        per-step host↔device traffic is the (B,) next-token vector coming
-        back (fetched via one async transfer, then blocked on).
-        """
-        self._admit()
-        self._maybe_auto_replan()
-        active = [i for i, s in enumerate(self._slots) if s is not None]
-        if not active:
-            return 0
-        t0 = time.perf_counter()
-        next_tok, self._state, self._caches = self._decode(
-            self.params, self._state, self._caches
-        )
-        copy_async = getattr(next_tok, "copy_to_host_async", None)
-        if copy_async is not None:
-            copy_async()
-        next_host = np.asarray(next_tok)
-        self.stats["decode_tokens"] += len(active)
-        self.stats["decode_s"] += time.perf_counter() - t0
-        freed = False
-        for i in active:
-            req = self._requests[self._slots[i]]
-            req.out_tokens.append(int(next_host[i]))
-            self._lengths[i] += 1
-            self._last_tokens[i, 0] = next_host[i]
-            if (
-                len(req.out_tokens) >= req.max_new_tokens
-                or self._lengths[i] >= self.cfg.max_len - 1
-            ):
-                req.done = True
-                self._free_slot(i)
-                freed = True
-        if freed:
-            self._sync_state()
-            self._maybe_auto_replan()
-        return len(active)
-
-    def run_until_done(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            if not self._pending and all(s is None for s in self._slots):
-                return
-            self.step()
-        raise RuntimeError("serve loop did not drain")
-
-    def throughput(self) -> dict:
-        """Prefill/decode split tokens-per-second from the stats counters."""
-        s = self.stats
-        return {
-            "prefill_tokens": s["prefill_tokens"],
-            "decode_tokens": s["decode_tokens"],
-            "prefill_tps": (
-                s["prefill_tokens"] / s["prefill_s"] if s["prefill_s"] else 0.0
-            ),
-            "decode_tps": (
-                s["decode_tokens"] / s["decode_s"] if s["decode_s"] else 0.0
-            ),
-        }

@@ -1,0 +1,190 @@
+"""Per-request token sampling, computed in-jit.
+
+The sampler layer of the serve stack: every active slot carries its own
+``temperature`` / ``top_k`` / ``top_p`` / ``seed`` / stop-token set, and
+the whole transform — filter, draw, stop detection — runs *inside* the
+jitted decode step over the batched ``(batch_slots, vocab)`` logits, so
+sampling adds zero per-step host↔device traffic beyond the packed
+next-token/stopped vector the step already returns.
+
+Determinism contract: the draw for a request at absolute position ``t``
+uses ``fold_in(PRNGKey(seed), t)`` — a function of *(seed, position)*
+only.  Tokens are therefore reproducible across admission order, slot
+assignment, preemption/promotion cycles, and devices (threefry is
+backend-deterministic), which is what lets the scheduler soak assert
+token equality under load.  ``temperature == 0`` short-circuits to
+``argmax`` — bit-identical to the pre-sampler greedy engine.
+
+The filter semantics (the part with room for off-by-one disagreement)
+have a NumPy oracle, :func:`filter_logits_ref`, tested against the jit
+path in ``tests/test_serve_sampling.py``:
+
+* **temperature** scales logits after filtering (masked entries stay
+  ``-inf``); it never changes *which* tokens are eligible, only how the
+  eligible mass is flattened.
+* **top_k** keeps every logit ``>=`` the k-th largest (ties at the
+  threshold are all kept).  ``top_k <= 0`` disables the filter.
+* **top_p** keeps the smallest prefix of the temperature-scaled,
+  probability-sorted distribution whose mass reaches ``top_p`` — a token
+  survives iff the mass *strictly before* it is ``< top_p``, so the
+  argmax always survives and ``top_p >= 1`` keeps everything.
+* **stop tokens** match in-jit against a ``-1``-padded ``(B, W)`` table;
+  the matching token is still emitted (and counted), then the scheduler
+  retires the request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: widest stop-token set a request may carry (the in-jit match table is a
+#: fixed-width, -1-padded (batch_slots, STOP_WIDTH) array).
+STOP_WIDTH = 4
+
+_NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters.
+
+    The default is greedy (``temperature=0``): ``argmax`` in-jit,
+    bit-identical to the pre-sampler engine, which keeps every greedy
+    equivalence test anchoring correctness.  ``seed`` only matters when
+    ``temperature > 0``; ``stop_tokens`` always apply.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0           # 0 -> no top-k filter
+    top_p: float = 1.0       # 1.0 -> no nucleus filter
+    seed: int = 0
+    stop_tokens: tuple[int, ...] = ()
+
+    def validate(self) -> None:
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), got "
+                f"{self.temperature}"
+            )
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}"
+            )
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0 <= self.seed < 2**32:
+            raise ValueError(f"seed must be a uint32, got {self.seed}")
+        if len(self.stop_tokens) > STOP_WIDTH:
+            raise ValueError(
+                f"at most {STOP_WIDTH} stop tokens per request, got "
+                f"{len(self.stop_tokens)}"
+            )
+        if any(int(t) < 0 for t in self.stop_tokens):
+            raise ValueError(
+                f"stop tokens must be non-negative token ids, got "
+                f"{self.stop_tokens}"
+            )
+
+    def stop_row(self) -> np.ndarray:
+        """The request's ``(STOP_WIDTH,)`` -1-padded stop-token row."""
+        row = np.full(STOP_WIDTH, -1, np.int32)
+        row[: len(self.stop_tokens)] = np.asarray(
+            self.stop_tokens, np.int32
+        )
+        return row
+
+
+GREEDY = SamplingParams()
+
+
+def filter_logits(logits, temperature, top_k, top_p):
+    """In-jit filter: ``(B, V)`` logits -> temperature-scaled logits with
+    every filtered entry at ``-inf``.  Row-wise ``temperature``/``top_k``/
+    ``top_p`` are traced ``(B,)`` arrays — the filter thresholds are
+    computed by sorting, not by static-k ``lax.top_k``, so per-request
+    values need no retrace."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    temperature = jnp.maximum(temperature.astype(jnp.float32), 1e-6)
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)   # (B, V)
+
+    # top-k: keep logits >= k-th largest; k <= 0 disables (threshold at
+    # the smallest logit keeps everything)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    thr_k = jnp.take_along_axis(
+        sorted_desc, (k_eff - 1)[:, None].astype(jnp.int32), axis=-1
+    )
+
+    # top-p on the temperature-scaled distribution: a sorted position
+    # survives iff the probability mass strictly before it is < top_p
+    probs = jax.nn.softmax(sorted_desc / temperature[:, None], axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs
+    n_keep = jnp.sum(before < top_p[:, None], axis=-1)           # >= 1
+    thr_p = jnp.take_along_axis(
+        sorted_desc, (n_keep - 1)[:, None].astype(jnp.int32), axis=-1
+    )
+    # top_p >= 1 disables the filter outright: the cumulative mass can
+    # saturate to exactly 1.0 in float32 (sharp distributions), which
+    # would spuriously drop the underflowed tail via `before < top_p`
+    thr_p = jnp.where(top_p[:, None] >= 1.0, -jnp.inf, thr_p)
+
+    keep = (logits >= thr_k) & (logits >= thr_p)
+    return jnp.where(keep, logits, _NEG_INF) / temperature[:, None]
+
+
+def filter_logits_ref(logits, temperature, top_k, top_p):
+    """NumPy oracle for :func:`filter_logits` — the executable spec the
+    equivalence tests hold the jit path to."""
+    logits = np.asarray(logits, np.float64).copy()
+    B, V = logits.shape
+    out = np.empty_like(logits, np.float32)
+    for b in range(B):
+        row = logits[b]
+        temp = max(float(temperature[b]), 1e-6)
+        order = np.argsort(-row, kind="stable")
+        sorted_desc = row[order]
+        k = int(top_k[b])
+        thr_k = sorted_desc[min(k, V) - 1] if k > 0 else sorted_desc[-1]
+        scaled = sorted_desc / temp
+        probs = np.exp(scaled - scaled.max())
+        probs /= probs.sum()
+        before = np.cumsum(probs) - probs
+        n_keep = max(int(np.sum(before < float(top_p[b]))), 1)
+        thr_p = sorted_desc[n_keep - 1] if float(top_p[b]) < 1.0 \
+            else -np.inf
+        keep = (row >= thr_k) & (row >= thr_p)
+        out[b] = np.where(keep, row, _NEG_INF) / temp
+    return out
+
+
+def sample_tokens(logits, state):
+    """In-jit next-token draw for every row of ``(B, V)`` logits.
+
+    ``state`` is the device serve state carrying the per-slot sampling
+    arrays (``temp``/``top_k``/``top_p``/``seed``) and ``lengths``.
+    Greedy rows (``temp == 0``) take the plain argmax — the exact op the
+    pre-sampler engine ran; sampled rows draw categorically from the
+    filtered logits with ``fold_in(PRNGKey(seed), position)`` so the draw
+    depends only on (seed, position)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = state["temp"]
+    filtered = filter_logits(logits, temp, state["top_k"], state["top_p"])
+
+    def draw(seed, pos, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(
+        state["seed"], state["lengths"], filtered
+    ).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)
+
+
+def hit_stop(tokens, stop_table):
+    """In-jit stop detection: ``(B,)`` bool — did this row's new token
+    match any entry of its ``(B, W)`` -1-padded stop set?"""
+    return jnp.any(tokens[:, None] == stop_table, axis=-1)

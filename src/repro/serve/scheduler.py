@@ -1,0 +1,572 @@
+"""Scheduler: the continuous-batching front end of the serve stack.
+
+This layer owns *requests*: a bounded wait queue with FIFO-by-wait-start
+admission, streaming per-token callbacks, and planner-priced preemption.
+It composes the other layers — :class:`~repro.serve.state.SlotTable`
+(host mirrors + device state), :mod:`repro.serve.sampling` (per-request
+params, computed in-jit), and the :class:`~repro.serve.engine.Executor`
+(every jitted dispatch) — behind the public :class:`Server`, plus an
+asyncio front end (:class:`Scheduler`) for callers that want
+``await submit()`` / ``async for token in stream()``.
+
+Request lifecycle::
+
+            submit/add_request          admit (FIFO by wait start)
+    new ───────────────────────▶ queued ─────────────▶ active (decode)
+             QueueFullError when            ▲                 │
+             cfg.max_queue waiting          │ promote         │ preempt
+                                            │ (slot frees)    ▼
+                                         spilled ◀──── KV rows parked on the
+                                                       planner-priced spill
+                                                       tier; re-queued FIFO
+
+    active ──▶ done: stop token (in-jit match) | max_new_tokens |
+               cache extent; slot freed, rid evicted, mirrors re-synced
+
+**Planner-priced preemption** (the paper's §IV decision made per slot at
+runtime): when the oldest waiter has starved for ``preempt_wait`` ticks
+and no slot is free, the scheduler asks the runtime what eviction
+*costs* — ``Runtime.preemption_price`` prices the round trip of one
+slot's cache rows to the cheapest realizable far tier (host DRAM, or the
+peer/remote donor pools when the mesh has the axis) through the datapath
+``copy_bound`` model — and what waiting costs — the planner-predicted
+decode step time times the fewest remaining tokens of any active
+request.  Only when spilling is cheaper than waiting does it evict, and
+the victim is the active request with the *most* remaining work
+(shortest-remaining-work-first keeps slots churning).  The victim's KV
+rows are extracted in one jitted slice, parked off-cache, and scattered
+back bit-identically when a slot frees — so greedy tokens are invariant
+under any preemption/promotion history, which the tests and the CI soak
+assert.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.placement import PlacementPolicy
+from repro.serve.engine import Executor
+from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.state import SlotTable, SpilledSequence
+
+log = logging.getLogger("repro.serve.scheduler")
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: the bounded wait queue is at ``cfg.max_queue``.
+
+    The sync surface raises so callers can shed or retry;
+    :meth:`Scheduler.submit` absorbs it by awaiting queue space instead.
+    """
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``sampling`` defaults to greedy (temperature 0 — bit-identical to
+    the pre-sampler engine); ``on_token`` streams each generated token
+    as ``on_token(request, token)`` the tick it is decoded (check
+    ``request.done`` inside the callback for end-of-stream).  The
+    ``*_s`` fields are ``time.perf_counter`` stamps the benchmarks turn
+    into queue-wait / time-to-first-token / completion latencies.
+    """
+
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = GREEDY
+    on_token: Callable[["Request", int], None] | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    preemptions: int = 0
+    submitted_s: float | None = None
+    first_token_s: float | None = None
+    finished_s: float | None = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 512
+    #: tokens per chunked-prefill dispatch during admission
+    prefill_chunk: int = 32
+    #: None -> consult the placement planner (datapath-bound model);
+    #: otherwise any ``parse_policy`` spelling: a PlacementPolicy value,
+    #: a registered name, ``"kv=host:stream,..."``, or policy JSON.
+    policy: PlacementPolicy | str | dict | None = None
+    rules: dict | None = None
+    #: re-run the planner (and migrate KV/params if the pick changes)
+    #: whenever cache occupancy crosses a band boundary — the live form
+    #: of the paper's phase-dependent placement decision.
+    auto_replan: bool = False
+    #: number of occupancy bands for auto_replan (4 -> re-price at 25%
+    #: occupancy steps)
+    replan_bands: int = 4
+    #: bound on *waiting* (not yet admitted) requests; None = unbounded.
+    #: add_request raises QueueFullError beyond it — the documented
+    #: backpressure path (spilled sequences hold progress and do not
+    #: count against it).
+    max_queue: int | None = None
+    #: enable planner-priced KV preemption (spill a victim's slot rows
+    #: to the cheapest realizable far tier when waiters starve)
+    preempt: bool = False
+    #: ticks the oldest waiter must starve before preemption is
+    #: considered — also the thrash guard: a freshly (re)admitted slot
+    #: cannot be re-evicted sooner
+    preempt_wait: int = 8
+
+
+class Server:
+    """Single-model continuous-batching server.
+
+    The public serve surface: composes the scheduler's queue/preemption
+    policy with the :class:`~repro.serve.engine.Executor` (reachable as
+    ``server.engine`` — jits, caches, params, Runtime) and the
+    :class:`~repro.serve.state.SlotTable` (``server.table``).
+    """
+
+    def __init__(self, bundle, cfg: ServeConfig, params, mesh=None):
+        self.bundle = bundle
+        self.cfg = cfg
+        self.engine = Executor(bundle, cfg, params, mesh)
+        self.table = SlotTable(cfg.batch_slots)
+        self._requests: dict[int, Request] = {}
+        #: FIFO by wait start: ("fresh", rid) never yet admitted,
+        #: ("spilled", rid) preempted and re-queued
+        self._waitq: list[tuple[str, int]] = []
+        self._spilled: dict[int, SpilledSequence] = {}
+        self._wait_since: dict[int, int] = {}
+        self._tick = 0
+        self._state = self.engine.place_state(self.table.device_state())
+        self._replan_band: int | None = None
+        self._next_rid = 0
+        self._counters = {
+            "preemptions": 0, "promotions": 0, "peak_queue": 0,
+        }
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def rt(self):
+        """The executor's :class:`repro.api.Runtime` (mesh + policy +
+        planner)."""
+        return self.engine.rt
+
+    @property
+    def policy(self) -> PlacementPolicy:
+        """The placement policy currently in force (may change across
+        :meth:`replan` migrations)."""
+        return self.engine.policy
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def queue_depth(self) -> int:
+        """Fresh (never admitted) requests waiting — what ``max_queue``
+        bounds."""
+        return sum(1 for kind, _ in self._waitq if kind == "fresh")
+
+    @property
+    def live_rids(self) -> tuple[int, ...]:
+        """rids of all live (queued, active, or spilled) requests."""
+        return tuple(self._requests)
+
+    def has_work(self) -> bool:
+        """Anything queued, spilled, or decoding?"""
+        return bool(self._waitq or self._spilled or self.table.active_slots())
+
+    def occupancy(self) -> float:
+        """Live cache utilization — what replan pricing feeds the
+        planner."""
+        return self.table.occupancy(self.cfg.max_len)
+
+    def stats(self) -> dict:
+        """Counters across all layers: executor phase tokens/seconds and
+        lifecycle events (``replans``/``migrations``/
+        ``decode_replay_prefills``/``spill_s``/``restore_s``) merged with
+        the scheduler's (``preemptions``/``promotions``/``peak_queue``)
+        plus the live ``queued``/``spilled`` depths."""
+        return {
+            **self.engine.counters,
+            **self._counters,
+            "queued": self.queue_depth,
+            "spilled": len(self._spilled),
+        }
+
+    def throughput(self) -> dict:
+        """Prefill/decode split tokens-per-second from the counters."""
+        c = self.engine.counters
+        return {
+            "prefill_tokens": c["prefill_tokens"],
+            "decode_tokens": c["decode_tokens"],
+            "prefill_tps": (
+                c["prefill_tokens"] / c["prefill_s"] if c["prefill_s"]
+                else 0.0
+            ),
+            "decode_tps": (
+                c["decode_tokens"] / c["decode_s"] if c["decode_s"]
+                else 0.0
+            ),
+        }
+
+    # -- request intake ----------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        """Queue a request, validating it against the cache extent.
+
+        Oversubscription is first-class: when every slot is busy the
+        request simply waits its turn (and may trigger a preemption once
+        it starves past ``preempt_wait``).  The only rejection paths are
+        malformed requests and the bounded-queue backpressure:
+        ``cfg.max_queue`` caps *waiting* requests, and the cap raises
+        :class:`QueueFullError` so a front end can shed load or block —
+        never a silent drop.
+        """
+        if req.rid < 0:
+            raise ValueError(f"request rid must be >= 0, got {req.rid}")
+        if req.rid in self._requests:
+            raise ValueError(
+                f"request {req.rid}: rid already queued or being served "
+                "(rids must be unique among live requests; a duplicate "
+                "would orphan the live request's slot bookkeeping — "
+                "finished rids are evicted and may be reused)"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}"
+            )
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) >= self.cfg.max_len:
+            log.warning(
+                "rejecting request %d: prompt of %d tokens needs "
+                "len(prompt)+1 cache positions but max_len=%d",
+                req.rid, len(req.prompt), self.cfg.max_len,
+            )
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"does not fit max_len={self.cfg.max_len} "
+                "(need len(prompt) < max_len)"
+            )
+        req.sampling.validate()
+        if (
+            self.cfg.max_queue is not None
+            and self.queue_depth >= self.cfg.max_queue
+        ):
+            raise QueueFullError(
+                f"request {req.rid}: wait queue is full "
+                f"({self.cfg.max_queue} waiting); retry after a slot "
+                "drains or raise ServeConfig.max_queue"
+            )
+        req.submitted_s = time.perf_counter()
+        self._requests[req.rid] = req
+        self._waitq.append(("fresh", req.rid))
+        self._wait_since[req.rid] = self._tick
+        self._counters["peak_queue"] = max(
+            self._counters["peak_queue"], self.queue_depth
+        )
+
+    def add_requests(self, reqs) -> None:
+        """Batched admission entry point: queue several requests at once
+        (they prefill together in the next tick's chunked dispatches)."""
+        for req in reqs:
+            self.add_request(req)
+
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int,
+        sampling: SamplingParams = GREEDY,
+        rid: int | None = None,
+        on_token: Callable[[Request, int], None] | None = None,
+    ) -> Request:
+        """Convenience intake: build + queue a request, auto-assigning a
+        free rid, and return it (tokens stream into ``out_tokens`` /
+        ``on_token``)."""
+        if rid is None:
+            while self._next_rid in self._requests:
+                self._next_rid += 1
+            rid = self._next_rid
+            self._next_rid += 1
+        req = Request(
+            rid=rid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            sampling=sampling,
+            on_token=on_token,
+        )
+        self.add_request(req)
+        return req
+
+    # -- admission / preemption -------------------------------------------
+    def _sync_state(self) -> None:
+        """Re-upload the small state arrays after a slot lifecycle event
+        (admission / free / spill / promote).  Steady-state decode never
+        calls this: the state lives on device and the host mirror
+        advances from the *returned* token vector."""
+        self._state = self.engine.place_state(self.table.device_state())
+
+    def _admit(self) -> None:
+        """Fill free slots from the wait queue, FIFO by wait start.
+
+        Fresh requests are claimed and prefilled *batched* (one chunked
+        dispatch set for all of them); spilled sequences are promoted —
+        their parked rows scattered back, no prefill (the KV is intact).
+        """
+        free = self.table.free_slots()
+        fresh: list[tuple[int, Request]] = []
+        changed = False
+        while free and self._waitq:
+            kind, rid = self._waitq.pop(0)
+            i = free.pop(0)
+            changed = True
+            if kind == "fresh":
+                req = self._requests[rid]
+                self.table.claim(i, rid, req.sampling, self._tick)
+                fresh.append((i, req))
+            else:
+                self._promote(i, self._spilled.pop(rid))
+        if fresh:
+            self.engine.prefill(
+                [(i, req.prompt) for i, req in fresh], self.table
+            )
+            for i, req in fresh:
+                self.table.last_tokens[i, 0] = req.prompt[-1]
+                self.table.active[i] = True
+        if changed:
+            self._sync_state()
+
+    def _promote(self, i: int, spilled: SpilledSequence) -> None:
+        """Scatter a spilled sequence's parked rows back into slot ``i``
+        and resume its mirrors — bit-identical to never having moved."""
+        self.engine.insert_slot(i, spilled.rows)
+        self.table.resume(i, spilled, self._tick)
+        self._wait_since.pop(spilled.rid, None)
+        self._counters["promotions"] += 1
+        log.info(
+            "promoted rid %d into slot %d after %d ticks spilled",
+            spilled.rid, i, self._tick - spilled.since_tick,
+        )
+
+    def _remaining(self, i: int) -> int:
+        req = self._requests[self.table.slots[i]]
+        return max(req.max_new_tokens - len(req.out_tokens), 0)
+
+    def _maybe_preempt(self) -> None:
+        """Evict one victim iff the oldest waiter has starved past
+        ``preempt_wait`` ticks AND the planner prices the spill round
+        trip below the predicted natural wait for a slot."""
+        if not self.cfg.preempt or not self._waitq:
+            return
+        if self.table.free_slots():
+            return
+        _, head = self._waitq[0]
+        if self._tick - self._wait_since.get(head, self._tick) \
+                < self.cfg.preempt_wait:
+            return
+        # thrash guard: never evict a slot that was (re)occupied within
+        # the same starvation window
+        candidates = [
+            i for i in self.table.active_slots()
+            if self._tick - int(self.table.claimed_tick[i])
+            >= self.cfg.preempt_wait
+        ]
+        if not candidates:
+            return
+        spill_to, price_s = self.rt.preemption_price(
+            self.engine.slot_bytes()
+        )
+        # wait side: measured step-time EWMA once the loop is warm (the
+        # observed cost of waiting), the planner's analytic prediction
+        # before that
+        step_s = self.engine.measured_step_s or self.rt.decode_step_seconds(
+            self.cfg.batch_slots, self.cfg.max_len
+        )
+        natural_wait_s = step_s * min(
+            self._remaining(i) for i in self.table.active_slots()
+        )
+        if price_s >= natural_wait_s:
+            log.debug(
+                "preemption not worth it: spill round trip %.3gs >= "
+                "natural slot free in %.3gs", price_s, natural_wait_s,
+            )
+            return
+        # victim: most remaining work (shortest-remaining-first keeps
+        # slots churning); deterministic tie-break on rid
+        victim = max(
+            candidates, key=lambda i: (self._remaining(i),
+                                       self.table.slots[i])
+        )
+        self._spill(victim, spill_to)
+
+    def _spill(self, i: int, spill_to) -> None:
+        rid = self.table.slots[i]
+        t0 = time.perf_counter()
+        rows = self.engine.extract_slot(i, spill_to)
+        spilled = self.table.suspend(i, self._tick)
+        spilled.rows = rows
+        spilled.spill_s = time.perf_counter() - t0
+        self._spilled[rid] = spilled
+        self._waitq.append(("spilled", rid))
+        self._wait_since[rid] = self._tick
+        self._requests[rid].preemptions += 1
+        self._counters["preemptions"] += 1
+        self._sync_state()
+        log.info(
+            "preempted rid %d (slot %d, %d tokens resident) -> %s",
+            rid, i, spilled.length, spill_to.to_str(),
+        )
+
+    # -- live re-placement -------------------------------------------------
+    def replan(self, policy=None, *, force: bool = False) -> bool:
+        """Re-place the live KV cache (and params) mid-serve — see
+        :meth:`repro.serve.engine.Executor.replan`.  Priced against the
+        live :meth:`occupancy`."""
+        return self.engine.replan(
+            policy, force=force, occupancy=self.occupancy(),
+            inflight=self._state["tokens"],
+        )
+
+    def _maybe_auto_replan(self) -> None:
+        """Fire :meth:`replan` when occupancy crosses a band boundary —
+        only for planner-owned policies (a forced ``cfg.policy`` pins
+        placement; call :meth:`replan` explicitly to move it)."""
+        if not self.cfg.auto_replan or self.cfg.policy is not None:
+            return
+        band = int(self.occupancy() * max(self.cfg.replan_bands, 1))
+        if band != self._replan_band:
+            self._replan_band = band
+            self.replan()
+
+    # -- one decode tick ---------------------------------------------------
+    def step(self) -> int:
+        """Preempt/admit/promote, then decode one token for every active
+        slot.  Returns the number of active slots.
+
+        The decode step consumes and returns the on-device state; the
+        only per-step host↔device traffic is the packed (2, B)
+        token/stopped vector coming back (one async transfer, then
+        blocked on).  Tokens stream to ``on_token`` callbacks the tick
+        they are decoded.
+        """
+        self._tick += 1
+        self._maybe_preempt()
+        self._admit()
+        self._maybe_auto_replan()
+        active = self.table.active_slots()
+        if not active:
+            return 0
+        now = time.perf_counter
+        tokens, stopped, self._state = self.engine.decode(self._state)
+        self.engine.counters["decode_tokens"] += len(active)
+        freed = False
+        for i in active:
+            req = self._requests[self.table.slots[i]]
+            tok = int(tokens[i])
+            req.out_tokens.append(tok)
+            if req.first_token_s is None:
+                req.first_token_s = now()
+            self.table.advance(i, tok)
+            if (
+                bool(stopped[i])
+                or len(req.out_tokens) >= req.max_new_tokens
+                or self.table.lengths[i] >= self.cfg.max_len - 1
+            ):
+                req.done = True
+                req.finished_s = now()
+                rid = self.table.free(i)
+                self._requests.pop(rid, None)
+                self._wait_since.pop(rid, None)
+                freed = True
+            if req.on_token is not None:
+                req.on_token(req, tok)
+        if freed:
+            self._sync_state()
+            self._maybe_auto_replan()
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.has_work():
+                return
+            self.step()
+        raise RuntimeError("serve loop did not drain")
+
+
+class Scheduler:
+    """Asyncio front end over a :class:`Server`.
+
+    ``await submit()`` absorbs :class:`QueueFullError` by waiting for
+    queue space (backpressure as flow control instead of an exception);
+    :meth:`stream` yields tokens as the driver loop decodes them; and
+    :meth:`run` drives the server until it is closed *and* drained —
+    decode steps run in a worker thread (``asyncio.to_thread``) so the
+    event loop keeps serving submissions and streams between ticks::
+
+        server = Server(bundle, ServeConfig(...), params)
+        sched = Scheduler(server)
+        async def client():
+            req = await sched.submit(prompt, max_new_tokens=32)
+            async for tok in sched.stream(req):
+                ...
+            sched.close()
+        await asyncio.gather(sched.run(), client())
+    """
+
+    def __init__(self, server: Server):
+        self.server = server
+        self._tick_ev = asyncio.Event()
+        self._closed = False
+
+    def _notify(self) -> None:
+        ev, self._tick_ev = self._tick_ev, asyncio.Event()
+        ev.set()
+
+    async def _wait_tick(self) -> None:
+        ev = self._tick_ev
+        await ev.wait()
+
+    async def submit(self, prompt, **kw) -> Request:
+        """Queue a request, awaiting queue space under backpressure."""
+        while True:
+            try:
+                return self.server.submit(prompt, **kw)
+            except QueueFullError:
+                await self._wait_tick()
+
+    async def stream(self, req: Request):
+        """Async-yield ``req``'s tokens as they are decoded."""
+        sent = 0
+        while True:
+            while sent < len(req.out_tokens):
+                yield req.out_tokens[sent]
+                sent += 1
+            if req.done:
+                return
+            await self._wait_tick()
+
+    async def run(self) -> None:
+        """Drive the server until :meth:`close` is called and every live
+        request has drained."""
+        try:
+            while not (self._closed and not self.server.has_work()):
+                if self.server.has_work():
+                    await asyncio.to_thread(self.server.step)
+                else:
+                    await asyncio.sleep(0.001)
+                self._notify()
+        finally:
+            self._notify()
+
+    def close(self) -> None:
+        """Let :meth:`run` return once the last live request drains."""
+        self._closed = True

@@ -1,0 +1,184 @@
+"""Slot/sequence state: host mirrors + device serve state + upload rules.
+
+The state layer of the serve stack.  A :class:`SlotTable` owns the
+per-slot host mirrors (length, last token, active flag, and the per-slot
+sampling parameters) and builds the device-side state dict the jitted
+decode step carries.  Host mirrors advance from the token vector the
+step *returns*; they are re-uploaded only on slot lifecycle events —
+admission, free, suspend (preemption spill), resume (promotion) — never
+per decode step.
+
+Upload discipline (:func:`upload`, the PR 2/PR 3 lesson): a numpy buffer
+handed to the device must never be mutated afterwards.  ``jnp.asarray``
+can zero-copy alias the mirror, and even ``jnp.array``'s eager copy may
+be *deferred* behind queued async dispatches on the CPU backend — so
+every mirror upload hands over a fresh copy nothing else writes.
+
+:class:`SpilledSequence` is the off-cache parking record for a preempted
+request: its KV rows (device-put to the planner-priced spill tier by the
+scheduler), its resume state, and the tick it started waiting — what
+promotion needs to put it back bit-identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import STOP_WIDTH, SamplingParams
+
+
+def upload(arr: np.ndarray, dtype) -> jnp.ndarray:
+    """Device copy of a host mirror that can NEVER see later writes."""
+    return jnp.asarray(np.array(arr, dtype=dtype, copy=True))
+
+
+@dataclasses.dataclass
+class SpilledSequence:
+    """A preempted request parked off-cache: everything promotion needs."""
+
+    rid: int
+    rows: object            # per-slot cache-row pytree, on the spill tier
+    length: int             # cache fill at spill time
+    last_token: int         # the token the next decode step feeds
+    sampling: SamplingParams
+    since_tick: int         # when it started waiting (promotion ordering)
+    spill_s: float = 0.0    # seconds the spill copy took (stats)
+
+
+class SlotTable:
+    """Host mirrors of the per-slot serve state, one row per cache slot.
+
+    The single owner of slot bookkeeping: which rid holds each slot, each
+    row's fill/last-token/active mirrors, and the per-slot sampling
+    parameter rows the device state carries.  All mutation goes through
+    :meth:`claim` / :meth:`advance` / :meth:`free` / :meth:`resume` so a
+    row can never be half-updated.
+    """
+
+    def __init__(self, batch_slots: int):
+        self.batch_slots = batch_slots
+        self.slots: list[int | None] = [None] * batch_slots
+        self.lengths = np.zeros(batch_slots, np.int32)
+        self.last_tokens = np.zeros((batch_slots, 1), np.int32)
+        self.active = np.zeros(batch_slots, bool)
+        # per-slot sampling mirrors (greedy defaults)
+        self.temp = np.zeros(batch_slots, np.float32)
+        self.top_k = np.zeros(batch_slots, np.int32)
+        self.top_p = np.ones(batch_slots, np.float32)
+        self.seed = np.zeros(batch_slots, np.uint32)
+        self.stop = np.full((batch_slots, STOP_WIDTH), -1, np.int32)
+        #: tick each slot was last (re)occupied — preemption's thrash
+        #: guard (a just-admitted victim is not immediately re-spilled)
+        self.claimed_tick = np.zeros(batch_slots, np.int64)
+
+    # -- queries -----------------------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def slot_of(self, rid: int) -> int | None:
+        try:
+            return self.slots.index(rid)
+        except ValueError:
+            return None
+
+    def occupancy(self, max_len: int) -> float:
+        """Live cache utilization: resident tokens over the cache extent —
+        what replan pricing feeds the planner."""
+        return float(self.lengths.sum()) / float(self.batch_slots * max_len)
+
+    # -- lifecycle ---------------------------------------------------------
+    def _set_sampling(self, i: int, sampling: SamplingParams) -> None:
+        self.temp[i] = sampling.temperature
+        self.top_k[i] = sampling.top_k
+        self.top_p[i] = sampling.top_p
+        self.seed[i] = np.uint32(sampling.seed)
+        self.stop[i] = sampling.stop_row()
+
+    def claim(self, i: int, rid: int, sampling: SamplingParams,
+              tick: int = 0) -> None:
+        """Assign a fresh request to a free slot (prefill fills the rest)."""
+        assert self.slots[i] is None, (i, self.slots[i])
+        self.slots[i] = rid
+        self.lengths[i] = 0
+        self._set_sampling(i, sampling)
+        self.claimed_tick[i] = tick
+
+    def resume(self, i: int, spilled: SpilledSequence, tick: int = 0) -> None:
+        """Re-occupy a free slot with a promoted (previously spilled)
+        sequence: mirrors restored to the values at spill time."""
+        assert self.slots[i] is None, (i, self.slots[i])
+        self.slots[i] = spilled.rid
+        self.lengths[i] = spilled.length
+        self.last_tokens[i, 0] = spilled.last_token
+        self.active[i] = True
+        self._set_sampling(i, spilled.sampling)
+        self.claimed_tick[i] = tick
+
+    def advance(self, i: int, token: int) -> None:
+        """Steady-state per-token mirror advance from the *returned*
+        token vector (no re-upload)."""
+        self.lengths[i] += 1
+        self.last_tokens[i, 0] = token
+
+    def free(self, i: int) -> int | None:
+        """The single place a slot returns to the pool: clears the slot
+        assignment and every mirror row together.  Stale cache content
+        beyond the zeroed length is masked out and overwritten by the
+        next prefill.  Returns the evicted rid."""
+        rid = self.slots[i]
+        self.slots[i] = None
+        self.lengths[i] = 0
+        self.last_tokens[i, 0] = 0
+        self.active[i] = False
+        self.temp[i] = 0.0
+        self.top_k[i] = 0
+        self.top_p[i] = 1.0
+        self.seed[i] = 0
+        self.stop[i] = -1
+        return rid
+
+    def suspend(self, i: int, tick: int) -> SpilledSequence:
+        """Snapshot a slot's resume state for a preemption spill, then
+        clear the row (the caches' rows are extracted by the executor).
+        The caller attaches the off-cache rows to the returned record."""
+        rid = self.slots[i]
+        spilled = SpilledSequence(
+            rid=rid,
+            rows=None,
+            length=int(self.lengths[i]),
+            last_token=int(self.last_tokens[i, 0]),
+            sampling=SamplingParams(
+                temperature=float(self.temp[i]),
+                top_k=int(self.top_k[i]),
+                top_p=float(self.top_p[i]),
+                seed=int(self.seed[i]),
+                stop_tokens=tuple(
+                    int(t) for t in self.stop[i] if t >= 0
+                ),
+            ),
+            since_tick=tick,
+        )
+        self.free(i)
+        return spilled
+
+    # -- device state ------------------------------------------------------
+    def device_state(self) -> dict:
+        """Fresh device serve state from the mirrors (lifecycle events
+        only — steady-state decode carries the device state through the
+        jit and never re-uploads)."""
+        return {
+            "tokens": upload(self.last_tokens, np.int32),
+            "lengths": upload(self.lengths, np.int32),
+            "active": upload(self.active, bool),
+            "temp": upload(self.temp, np.float32),
+            "top_k": upload(self.top_k, np.int32),
+            "top_p": upload(self.top_p, np.float32),
+            "seed": upload(self.seed, np.uint32),
+            "stop": upload(self.stop, np.int32),
+        }

@@ -201,7 +201,7 @@ class TestDonorMeshRealization:
         from repro.core.placement import resolve_memory_kind
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
-        from repro.serve.engine import Request, ServeConfig, Server
+        from repro.serve import Request, ServeConfig, Server
 
         mesh = make_donor_mesh((2,), ("data",), 2)   # (donor=2, data=2)
         b = get_smoke_bundle("olmo-1b")
@@ -216,7 +216,7 @@ class TestDonorMeshRealization:
             jax.devices()[0].default_memory().kind
         from repro.models.sharding import spec_axes
 
-        for leaf in jax.tree.leaves(srv._caches):
+        for leaf in jax.tree.leaves(srv.engine.caches):
             assert "donor" in spec_axes(leaf.sharding.spec), leaf.sharding
             assert leaf.sharding.memory_kind == want_kind, leaf.sharding
             devs = {s.device for s in leaf.addressable_shards}
@@ -230,7 +230,7 @@ class TestDonorMeshRealization:
         srv.add_request(req)
         srv.run_until_done(200)
         assert req.done
-        for leaf in jax.tree.leaves(srv._caches):
+        for leaf in jax.tree.leaves(srv.engine.caches):
             assert "donor" in spec_axes(leaf.sharding.spec), leaf.sharding
         print("OK")
         """)
@@ -242,7 +242,7 @@ class TestDonorMeshRealization:
         from repro.core.placement import DonorStream
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
-        from repro.serve.engine import Request, ServeConfig, Server
+        from repro.serve import Request, ServeConfig, Server
 
         mesh = make_donor_mesh((2,), ("data",), 2)
         b = get_smoke_bundle("olmo-1b")
@@ -304,7 +304,7 @@ class TestDonorMeshRealization:
         from repro.core.planner import plan
         from repro.launch.mesh import make_donor_mesh
         from repro.models import get_smoke_bundle
-        from repro.serve.engine import Request, ServeConfig, Server
+        from repro.serve import Request, ServeConfig, Server
 
         mesh = make_donor_mesh((2,), ("data",), 2)
         # an oversized-KV decode profile: only a peer tier both fits and
@@ -326,7 +326,7 @@ class TestDonorMeshRealization:
             params, mesh=mesh)
         from repro.models.sharding import spec_axes
         donor_devs = set(mesh.devices[1].ravel())
-        role_tree = (srv._caches if best.policy == "kv_peer_hbm"
+        role_tree = (srv.engine.caches if best.policy == "kv_peer_hbm"
                      else srv.params)
         hit = 0
         for leaf in jax.tree.leaves(role_tree):

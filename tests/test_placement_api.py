@@ -340,11 +340,11 @@ class TestMigration:
         )
         # same placements under a different (derived) name -> no-op
         assert server.replan("kv=host:stream") is False
-        assert server.stats["migrations"] == 0
+        assert server.stats()["migrations"] == 0
         assert server.policy.name == "kv_host"
         # different placements -> migrates
         assert server.replan("hbm_resident") is True
-        assert server.stats["migrations"] == 1
+        assert server.stats()["migrations"] == 1
 
     def test_custom_string_policy_serves_with_mid_run_migration(self, bundle):
         """Acceptance: a non-registered custom policy (string grammar)
@@ -373,9 +373,7 @@ class TestMigration:
             ]
             server.add_requests(reqs)
             steps = 0
-            while server._pending or any(
-                s is not None for s in server._slots
-            ):
+            while server.has_work():
                 server.step()
                 steps += 1
                 if migrate_at is not None and steps == migrate_at:
@@ -388,7 +386,7 @@ class TestMigration:
         base, _ = run(custom)
         moved, server = run(custom, migrate_at=3, target="hbm_resident")
         assert base == moved
-        assert server.stats["migrations"] == 1
+        assert server.stats()["migrations"] == 1
         assert server.policy.name == "hbm_resident"
 
 
@@ -424,9 +422,7 @@ class TestDonorMigration:
             server.add_requests(reqs)
             steps = 0
             sched = dict(migrations)
-            while server._pending or any(
-                s is not None for s in server._slots
-            ):
+            while server.has_work():
                 server.step()
                 steps += 1
                 if steps in sched:
@@ -438,7 +434,7 @@ class TestDonorMigration:
         moved, server = run(migrations=((2, "kv_peer_hbm"),
                                         (5, "hbm_resident")))
         assert base == moved
-        assert server.stats["migrations"] == 2
+        assert server.stats()["migrations"] == 2
 
         # donor landing is physical: migrate a cache tree and check the
         # donor axis + donor-slice devices appear on its shards

@@ -299,7 +299,7 @@ class TestServeIntegration:
         import jax
 
         from repro.models import get_smoke_bundle
-        from repro.serve.engine import ServeConfig, Server
+        from repro.serve import ServeConfig, Server
 
         bundle = get_smoke_bundle("olmo-1b")
         params = bundle.init_params(jax.random.PRNGKey(0), "float32")

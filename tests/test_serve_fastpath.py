@@ -332,10 +332,10 @@ class TestCacheDonation:
         """Default (resident) policy: each step consumes the previous
         cache buffer — no second cache-sized allocation ever exists."""
         server = self._server()
-        assert server._donate_cache
+        assert server.engine.donates_cache
         server.step()
         cache_nbytes = {
-            leaf.nbytes for leaf in jax.tree.leaves(server._caches)
+            leaf.nbytes for leaf in jax.tree.leaves(server.engine.caches)
         }
 
         def live_cache_arrays():
@@ -345,7 +345,7 @@ class TestCacheDonation:
             ]
 
         before = len(live_cache_arrays())
-        old_leaves = jax.tree.leaves(server._caches)
+        old_leaves = jax.tree.leaves(server.engine.caches)
         shardings = [leaf.sharding for leaf in old_leaves]
         for _ in range(3):
             server.step()
@@ -353,10 +353,10 @@ class TestCacheDonation:
         assert all(leaf.is_deleted() for leaf in old_leaves)
         # and the population of cache-sized buffers did not grow: the
         # steady state holds exactly one live copy of the cache
-        jax.block_until_ready(jax.tree.leaves(server._caches))
+        jax.block_until_ready(jax.tree.leaves(server.engine.caches))
         assert len(live_cache_arrays()) <= before
         # placements hold across steps
-        for leaf, sh in zip(jax.tree.leaves(server._caches), shardings):
+        for leaf, sh in zip(jax.tree.leaves(server.engine.caches), shardings):
             assert leaf.sharding == sh
             assert leaf.sharding.memory_kind == sh.memory_kind
 
@@ -364,9 +364,9 @@ class TestCacheDonation:
         """kv_host streams the cache: the resident buffer must survive
         the step (it is the source of the next migration)."""
         server = self._server(policy=get_policy("kv_host"))
-        assert not server._donate_cache
+        assert not server.engine.donates_cache
         server.step()
-        old_leaves = jax.tree.leaves(server._caches)
+        old_leaves = jax.tree.leaves(server.engine.caches)
         server.step()
         assert not any(leaf.is_deleted() for leaf in old_leaves)
 
@@ -400,7 +400,7 @@ class TestRequestValidation:
                 rid=7, prompt=np.arange(1, 4, dtype=np.int32),
                 max_new_tokens=2,
             ))
-        assert len(server._pending) == 1
+        assert server.queue_depth == 1
 
     def test_rid_reusable_after_completion(self):
         """Finished rids are evicted from the request table: reuse is
@@ -414,7 +414,7 @@ class TestRequestValidation:
             server.add_request(req)
             server.run_until_done(max_steps=100)
             assert req.done, round_
-            assert not server._requests   # table holds live requests only
+            assert not server.live_rids   # table holds live requests only
 
     def test_negative_rid_rejected(self):
         server = self._server()
@@ -432,7 +432,7 @@ class TestRequestValidation:
                     rid=1, prompt=np.arange(1, 4, dtype=np.int32),
                     max_new_tokens=bad,
                 ))
-        assert not server._pending and not server._requests
+        assert not server.has_work()
 
 
 class TestRecurrentStateReset:

@@ -1,0 +1,273 @@
+"""The sampler layer: in-jit filtering vs the NumPy oracle, seeded
+determinism, stop tokens, and the greedy bit-identity anchor.
+
+The contract under test (see ``repro/serve/sampling.py``):
+
+* ``filter_logits`` (traced, per-row params) computes exactly what
+  ``filter_logits_ref`` (NumPy float64, one row at a time) specifies —
+  same kept set, same scaled values.
+* a draw is a function of *(seed, position)* only: admission order, slot
+  assignment, and batch composition never change a sampled request's
+  tokens (this is what lets preemption/promotion keep token equality).
+* ``temperature == 0`` rows take the literal ``argmax`` op — the greedy
+  engine's output, bit for bit.
+* a matching stop token is still emitted, then the request retires.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_smoke_bundle
+from repro.serve import Request, SamplingParams, ServeConfig, Server
+from repro.serve.sampling import (
+    STOP_WIDTH,
+    filter_logits,
+    filter_logits_ref,
+    hit_stop,
+    sample_tokens,
+)
+
+
+def _state(B, *, temp=0.0, top_k=0, top_p=1.0, seed=0, lengths=0):
+    """A minimal device state dict for sample_tokens."""
+    as_row = lambda v, dt: jnp.full((B,), v, dt) if np.isscalar(v) \
+        else jnp.asarray(v, dt)
+    return {
+        "temp": as_row(temp, jnp.float32),
+        "top_k": as_row(top_k, jnp.int32),
+        "top_p": as_row(top_p, jnp.float32),
+        "seed": as_row(seed, jnp.uint32),
+        "lengths": as_row(lengths, jnp.int32),
+    }
+
+
+class TestFilterOracle:
+    """jit filter == NumPy oracle across the parameter grid."""
+
+    @pytest.mark.parametrize("temp", [1e-3, 0.5, 1.0, 2.5])
+    @pytest.mark.parametrize("top_k", [0, 1, 3, 17, 64, 1000])
+    @pytest.mark.parametrize("top_p", [1e-6, 0.3, 0.9, 1.0])
+    def test_matches_reference(self, temp, top_k, top_p):
+        B, V = 4, 64
+        rng = np.random.default_rng(hash((top_k, int(temp * 10))) % 2**32)
+        logits = rng.normal(size=(B, V)).astype(np.float32) * 3.0
+        t = np.full(B, temp, np.float32)
+        k = np.full(B, top_k, np.int32)
+        p = np.full(B, top_p, np.float32)
+        got = np.asarray(jax.jit(filter_logits)(
+            jnp.asarray(logits), jnp.asarray(t), jnp.asarray(k),
+            jnp.asarray(p),
+        ))
+        want = filter_logits_ref(logits, t, k, p)
+        # identical kept sets...
+        np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+        # ...and matching scaled values on the kept entries
+        m = np.isfinite(want)
+        np.testing.assert_allclose(got[m], want[m], rtol=2e-5, atol=2e-5)
+
+    def test_per_row_params_in_one_batch(self):
+        """Rows carry independent params — the traced (B,) path."""
+        B, V = 5, 32
+        rng = np.random.default_rng(0)
+        logits = rng.normal(size=(B, V)).astype(np.float32)
+        t = np.asarray([1e-3, 0.7, 1.0, 2.0, 0.9], np.float32)
+        k = np.asarray([0, 1, 5, 0, 31], np.int32)
+        p = np.asarray([1.0, 0.5, 1.0, 0.2, 0.99], np.float32)
+        got = np.asarray(filter_logits(
+            jnp.asarray(logits), jnp.asarray(t), jnp.asarray(k),
+            jnp.asarray(p),
+        ))
+        want = filter_logits_ref(logits, t, k, p)
+        np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+
+    def test_topk_ties_all_kept(self):
+        """Ties at the k-th threshold all survive (>= semantics)."""
+        logits = np.asarray([[3.0, 1.0, 3.0, 0.0, 3.0]], np.float32)
+        got = np.asarray(filter_logits(
+            jnp.asarray(logits),
+            jnp.asarray([1.0], np.float32),
+            jnp.asarray([1], np.int32),
+            jnp.asarray([1.0], np.float32),
+        ))
+        assert np.isfinite(got[0, [0, 2, 4]]).all()
+        assert not np.isfinite(got[0, [1, 3]]).any()
+
+    def test_argmax_always_survives_tiny_top_p(self):
+        """top_p -> 0 still keeps the argmax (strictly-before rule)."""
+        rng = np.random.default_rng(3)
+        logits = rng.normal(size=(3, 40)).astype(np.float32)
+        got = np.asarray(filter_logits(
+            jnp.asarray(logits),
+            jnp.asarray([0.8] * 3, np.float32),
+            jnp.asarray([0] * 3, np.int32),
+            jnp.asarray([1e-9] * 3, np.float32),
+        ))
+        assert np.isfinite(got).sum(axis=-1).min() >= 1
+        for b in range(3):
+            assert np.isfinite(got[b, logits[b].argmax()])
+
+
+class TestSampleTokens:
+    def test_temperature_zero_is_argmax(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.normal(size=(6, 50)), jnp.float32)
+        toks = sample_tokens(logits, _state(6))
+        np.testing.assert_array_equal(
+            np.asarray(toks), np.asarray(jnp.argmax(logits, -1))
+        )
+
+    def test_top_k_one_is_argmax(self):
+        """A categorical over a single surviving token is deterministic:
+        the filter+draw path collapses to argmax at top_k=1."""
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.normal(size=(4, 30)), jnp.float32)
+        toks = sample_tokens(
+            logits, _state(4, temp=1.3, top_k=1, seed=[1, 2, 3, 4])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(toks), np.asarray(jnp.argmax(logits, -1))
+        )
+
+    def test_draw_depends_only_on_seed_and_position(self):
+        """The same (seed, position, logits-row) draws the same token no
+        matter where the row sits in the batch or what rides alongside —
+        the invariant that makes preemption token-transparent."""
+        rng = np.random.default_rng(4)
+        row = rng.normal(size=(1, 64)).astype(np.float32)
+        noise = rng.normal(size=(3, 64)).astype(np.float32)
+        a = sample_tokens(
+            jnp.asarray(np.concatenate([row, noise])),
+            _state(4, temp=0.9, seed=[7, 1, 2, 3], lengths=[11, 5, 9, 2]),
+        )
+        b = sample_tokens(
+            jnp.asarray(np.concatenate([noise, row])),
+            _state(4, temp=0.9, seed=[4, 5, 6, 7], lengths=[8, 1, 3, 11]),
+        )
+        assert int(a[0]) == int(b[3])
+        # and under jit, identically
+        c = jax.jit(sample_tokens)(
+            jnp.asarray(np.concatenate([row, noise])),
+            _state(4, temp=0.9, seed=[7, 1, 2, 3], lengths=[11, 5, 9, 2]),
+        )
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_seeds_decorrelate_rows(self):
+        """Identical logits rows with different seeds should not all
+        draw the same token (temperature high enough to spread mass)."""
+        logits = jnp.zeros((16, 256), jnp.float32)  # uniform
+        toks = np.asarray(sample_tokens(
+            logits, _state(16, temp=1.0, seed=np.arange(16), lengths=3)
+        ))
+        assert len(set(toks.tolist())) > 1
+
+
+class TestStopTokens:
+    def test_hit_stop_matches_padded_table(self):
+        table = jnp.asarray(
+            [[5, 9, -1, -1], [2, -1, -1, -1], [-1, -1, -1, -1]], jnp.int32
+        )
+        got = np.asarray(hit_stop(jnp.asarray([9, 3, 0], jnp.int32), table))
+        np.testing.assert_array_equal(got, [True, False, False])
+
+    def test_negative_pad_never_matches(self):
+        table = jnp.full((2, STOP_WIDTH), -1, jnp.int32)
+        toks = jnp.asarray([0, 7], jnp.int32)
+        assert not np.asarray(hit_stop(toks, table)).any()
+
+    def test_server_truncates_at_stop_token_inclusive(self):
+        """End to end: the matching stop token is emitted, then the
+        request retires — the documented inclusive-stop convention."""
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        cfg = ServeConfig(batch_slots=1, max_len=48)
+        prompt = np.arange(1, 9, dtype=np.int32)
+
+        free = Server(bundle, cfg, params)
+        ref = Request(rid=0, prompt=prompt, max_new_tokens=10)
+        free.add_request(ref)
+        free.run_until_done(100)
+        stop_tok = ref.out_tokens[3]
+        want = ref.out_tokens[: ref.out_tokens.index(stop_tok) + 1]
+
+        srv = Server(bundle, cfg, params)
+        req = Request(
+            rid=0, prompt=prompt, max_new_tokens=10,
+            sampling=SamplingParams(stop_tokens=(stop_tok,)),
+        )
+        srv.add_request(req)
+        srv.run_until_done(100)
+        assert req.done
+        assert req.out_tokens == want
+        assert req.out_tokens[-1] == stop_tok
+
+
+class TestValidation:
+    @pytest.mark.parametrize("bad", [
+        dict(temperature=-0.1),
+        dict(top_p=0.0),
+        dict(top_p=1.5),
+        dict(top_k=-1),
+        dict(seed=-1),
+        dict(seed=2**32),
+        dict(stop_tokens=(1, 2, 3, 4, 5)),
+        dict(stop_tokens=(-2,)),
+    ])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad).validate()
+
+    def test_stop_row_padding(self):
+        row = SamplingParams(stop_tokens=(3, 8)).stop_row()
+        np.testing.assert_array_equal(row, [3, 8, -1, -1])
+
+
+class TestServeGreedyAnchor:
+    def test_mixed_sampling_batch_keeps_greedy_rows_bit_identical(self):
+        """A greedy request co-batched with sampled requests produces
+        exactly the tokens of a solo greedy run: the sampler layer only
+        redirects rows with temperature > 0."""
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        cfg = ServeConfig(batch_slots=3, max_len=32)
+        prompt = np.arange(1, 7, dtype=np.int32)
+
+        solo = Server(bundle, cfg, params)
+        ref = Request(rid=0, prompt=prompt, max_new_tokens=6)
+        solo.add_request(ref)
+        solo.run_until_done(100)
+
+        mixed = Server(bundle, cfg, params)
+        greedy = Request(rid=0, prompt=prompt, max_new_tokens=6)
+        mixed.add_requests([
+            greedy,
+            Request(rid=1, prompt=prompt + 1, max_new_tokens=6,
+                    sampling=SamplingParams(temperature=1.1, seed=5)),
+            Request(rid=2, prompt=prompt + 2, max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.6, top_k=9,
+                                            top_p=0.8, seed=9)),
+        ])
+        mixed.run_until_done(100)
+        assert greedy.out_tokens == ref.out_tokens
+
+    def test_sampled_tokens_invariant_to_admission_order(self):
+        """Submission order permutes slot assignment and batch
+        composition; sampled rows' tokens must not move (seed+position
+        determinism)."""
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        cfg = ServeConfig(batch_slots=2, max_len=32)
+        mk = lambda i: Request(
+            rid=i, prompt=np.arange(1, 6 + i, dtype=np.int32),
+            max_new_tokens=5,
+            sampling=SamplingParams(temperature=0.9, top_k=16, seed=40 + i),
+        )
+        runs = {}
+        for order in ((0, 1, 2), (2, 0, 1)):
+            srv = Server(bundle, cfg, params)
+            reqs = {i: mk(i) for i in order}
+            srv.add_requests(reqs.values())
+            srv.run_until_done(200)
+            runs[order] = {i: r.out_tokens for i, r in reqs.items()}
+        assert runs[(0, 1, 2)] == runs[(2, 0, 1)]

@@ -1,0 +1,307 @@
+"""The scheduler layer: oversubscription, backpressure, planner-priced
+preemption/promotion, streaming, and the asyncio front end.
+
+The load-bearing invariant throughout: greedy tokens are **bit-identical
+under any scheduling history** — admission order, queueing, preemption to
+an off-cache tier and promotion back never change a single token.  That
+is what makes oversubscription a first-class serving regime instead of a
+correctness hazard.
+"""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import get_smoke_bundle
+from repro.serve import (
+    QueueFullError,
+    Request,
+    SamplingParams,
+    Scheduler,
+    ServeConfig,
+    Server,
+)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return get_smoke_bundle("olmo-1b")
+
+
+@pytest.fixture(scope="module")
+def params(bundle):
+    return bundle.init_params(jax.random.PRNGKey(0), "float32")
+
+
+def _req(i, *, n=6, extra=0, sampling=None):
+    return Request(
+        rid=i, prompt=np.arange(1, 6 + extra, dtype=np.int32),
+        max_new_tokens=n,
+        **({"sampling": sampling} if sampling else {}),
+    )
+
+
+def _solo_tokens(bundle, params, req_proto):
+    """Reference: the same request served alone on a fresh server."""
+    srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+    req = Request(rid=0, prompt=req_proto.prompt,
+                  max_new_tokens=req_proto.max_new_tokens,
+                  sampling=req_proto.sampling)
+    srv.add_request(req)
+    srv.run_until_done(200)
+    return req.out_tokens
+
+
+class TestOversubscription:
+    def test_excess_requests_queue_and_drain(self, bundle, params):
+        """More requests than slots: the overflow waits in the queue (no
+        error) and every request completes in admission order."""
+        srv = Server(bundle, ServeConfig(batch_slots=2, max_len=32), params)
+        reqs = [_req(i, extra=i) for i in range(6)]
+        srv.add_requests(reqs)
+        assert srv.queue_depth == 6     # nothing admitted before a step
+        srv.run_until_done(500)
+        assert all(r.done and len(r.out_tokens) == 6 for r in reqs)
+        assert not srv.has_work()
+        assert srv.stats()["peak_queue"] == 6
+
+    def test_bounded_queue_backpressure(self, bundle, params):
+        """cfg.max_queue bounds *waiting* requests: the add that would
+        exceed it raises QueueFullError, and draining reopens intake."""
+        srv = Server(
+            bundle,
+            ServeConfig(batch_slots=1, max_len=32, max_queue=2),
+            params,
+        )
+        srv.add_request(_req(0))
+        srv.add_request(_req(1))
+        with pytest.raises(QueueFullError, match="wait queue is full"):
+            srv.add_request(_req(2))
+        # the rejected request left no trace
+        assert 2 not in srv.live_rids
+        srv.run_until_done(200)
+        srv.add_request(_req(2))        # intake reopened
+        srv.run_until_done(200)
+        assert not srv.has_work()
+
+    def test_queued_tokens_match_solo_runs(self, bundle, params):
+        """Queueing through a 1-slot server never changes greedy
+        tokens."""
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        reqs = [_req(i, extra=i) for i in range(3)]
+        srv.add_requests(reqs)
+        srv.run_until_done(300)
+        for r in reqs:
+            assert r.out_tokens == _solo_tokens(bundle, params, r)
+
+
+class TestPreemption:
+    def test_preempt_promote_keeps_greedy_tokens(self, bundle, params):
+        """The acceptance criterion: a preemption-heavy oversubscribed
+        run produces exactly the solo-run tokens for every greedy
+        request, with >= 1 spill and >= 1 promotion actually exercised."""
+        srv = Server(
+            bundle,
+            ServeConfig(batch_slots=2, max_len=32, preempt=True,
+                        preempt_wait=2),
+            params,
+        )
+        reqs = [_req(i, n=8 + 4 * i, extra=i) for i in range(4)]
+        srv.add_requests(reqs)
+        srv.run_until_done(500)
+        stats = srv.stats()
+        assert stats["preemptions"] >= 1, stats
+        assert stats["promotions"] >= 1, stats
+        assert stats["preemptions"] == stats["promotions"]  # all came back
+        assert stats["spill_s"] > 0 and stats["restore_s"] > 0
+        for r in reqs:
+            assert r.done
+            assert r.out_tokens == _solo_tokens(bundle, params, r), r.rid
+        preempted = [r for r in reqs if r.preemptions]
+        assert preempted, "no request recorded a preemption"
+
+    def test_sampled_requests_survive_preemption(self, bundle, params):
+        """Seeded sampling is (seed, position)-deterministic, so spills
+        and promotions cannot move a sampled request's tokens either."""
+        mk = lambda i: Request(
+            rid=i, prompt=np.arange(1, 6 + i, dtype=np.int32),
+            max_new_tokens=8 + 4 * i,
+            sampling=SamplingParams(temperature=0.8, top_k=12, seed=i),
+        )
+        srv = Server(
+            bundle,
+            ServeConfig(batch_slots=2, max_len=32, preempt=True,
+                        preempt_wait=2),
+            params,
+        )
+        reqs = [mk(i) for i in range(4)]
+        srv.add_requests(reqs)
+        srv.run_until_done(500)
+        assert srv.stats()["preemptions"] >= 1
+        for i, r in enumerate(reqs):
+            assert r.out_tokens == _solo_tokens(bundle, params, mk(i)), i
+
+    def test_no_preemption_when_disabled(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        srv.add_requests([_req(i, n=10) for i in range(3)])
+        srv.run_until_done(300)
+        assert srv.stats()["preemptions"] == 0
+
+    def test_thrash_guard_respects_preempt_wait(self, bundle, params):
+        """A slot (re)occupied within preempt_wait ticks is not a
+        victim: with a long window and short requests, natural drain
+        wins and nothing spills."""
+        srv = Server(
+            bundle,
+            ServeConfig(batch_slots=1, max_len=32, preempt=True,
+                        preempt_wait=64),
+            params,
+        )
+        srv.add_requests([_req(i, n=4) for i in range(3)])
+        srv.run_until_done(300)
+        assert srv.stats()["preemptions"] == 0
+
+    def test_runtime_prices_the_spill(self, bundle, params):
+        """The pricing hook surface: a placement plus a positive
+        round-trip time, consistent with the datapath copy bounds."""
+        srv = Server(bundle, ServeConfig(batch_slots=2, max_len=32), params)
+        nbytes = srv.engine.slot_bytes()
+        assert nbytes > 0
+        place, price = srv.rt.preemption_price(nbytes)
+        assert price >= 0.0
+        assert place.tier is not None
+        step_s = srv.rt.decode_step_seconds(2, 32)
+        assert step_s > 0.0
+
+
+class TestStreaming:
+    def test_on_token_streams_in_decode_order(self, bundle, params):
+        got = []
+        req = Request(
+            rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+            max_new_tokens=5,
+            on_token=lambda r, t: got.append((t, r.done)),
+        )
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        srv.add_request(req)
+        srv.run_until_done(100)
+        assert [t for t, _ in got] == req.out_tokens
+        # done flag visible exactly on the final token's callback
+        assert [d for _, d in got] == [False] * 4 + [True]
+
+    def test_latency_stamps_monotonic(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        reqs = [_req(i) for i in range(2)]
+        srv.add_requests(reqs)
+        srv.run_until_done(200)
+        for r in reqs:
+            assert r.submitted_s <= r.first_token_s <= r.finished_s
+
+
+class TestReplayFallback:
+    def test_encdec_admission_warns_once_and_counts(self, bundle, params,
+                                                    caplog):
+        """The O(B*L) decode-replay prefill fallback (encoder-decoder
+        bundles) is visible: one warning ever, a counter per admission."""
+        enc = get_smoke_bundle("seamless-m4t-medium")
+        eparams = enc.init_params(jax.random.PRNGKey(0), "float32")
+        srv = Server(enc, ServeConfig(batch_slots=2, max_len=32), eparams)
+        assert not srv.engine.supports_chunked_prefill
+        with caplog.at_level("WARNING", logger="repro.serve.engine"):
+            reqs = [_req(i, n=3, extra=i) for i in range(3)]
+            srv.add_requests(reqs)
+            srv.run_until_done(300)
+        assert all(r.done for r in reqs)
+        assert srv.stats()["decode_replay_prefills"] == 3
+        warns = [r for r in caplog.records
+                 if "decode-step replay" in r.getMessage()]
+        assert len(warns) == 1, "replay warning must fire exactly once"
+
+    def test_chunked_bundle_never_counts_replay(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        assert srv.engine.supports_chunked_prefill
+        srv.add_request(_req(0))
+        srv.run_until_done(100)
+        assert srv.stats()["decode_replay_prefills"] == 0
+
+
+class TestStatsSurface:
+    def test_stats_is_a_method_with_all_layers(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        srv.add_request(_req(0))
+        srv.run_until_done(100)
+        stats = srv.stats()
+        for key in ("prefill_tokens", "decode_tokens", "replans",
+                    "migrations", "decode_replay_prefills", "preemptions",
+                    "promotions", "peak_queue", "queued", "spilled",
+                    "spill_s", "restore_s"):
+            assert key in stats, key
+        assert stats["decode_tokens"] == 6
+        tp = srv.throughput()
+        assert tp["decode_tps"] > 0
+
+
+class TestAsyncScheduler:
+    def test_submit_stream_drain(self, bundle, params):
+        """The asyncio front end: concurrent clients submit (absorbing
+        backpressure), stream their tokens, and the driver drains —
+        tokens identical to the sync path."""
+        server = Server(
+            bundle,
+            ServeConfig(batch_slots=2, max_len=32, max_queue=2),
+            params,
+        )
+        sched = Scheduler(server)
+        prompts = [np.arange(1, 6 + i, dtype=np.int32) for i in range(5)]
+
+        async def client(i):
+            req = await sched.submit(prompts[i], max_new_tokens=4)
+            return [tok async for tok in sched.stream(req)]
+
+        async def main():
+            async def clients():
+                outs = await asyncio.gather(
+                    *(client(i) for i in range(5)))
+                sched.close()
+                return outs
+            _, outs = await asyncio.gather(sched.run(), clients())
+            return outs
+
+        outs = asyncio.run(main())
+        assert all(len(o) == 4 for o in outs)
+        assert not server.has_work()
+        # async scheduling is still just the sync engine underneath
+        for prompt, out in zip(prompts, outs):
+            proto = Request(rid=0, prompt=prompt, max_new_tokens=4)
+            assert out == _solo_tokens(bundle, params, proto)
+
+    def test_backpressure_never_raises_through_submit(self, bundle, params):
+        """max_queue=1 with many clients: submissions wait rather than
+        surface QueueFullError."""
+        server = Server(
+            bundle,
+            ServeConfig(batch_slots=1, max_len=32, max_queue=1),
+            params,
+        )
+        sched = Scheduler(server)
+
+        async def main():
+            async def client(i):
+                req = await sched.submit(
+                    np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+                async for _ in sched.stream(req):
+                    pass
+                return req
+
+            async def clients():
+                reqs = await asyncio.gather(*(client(i) for i in range(4)))
+                sched.close()
+                return reqs
+            _, reqs = await asyncio.gather(sched.run(), clients())
+            return reqs
+
+        reqs = asyncio.run(main())
+        assert all(r.done for r in reqs)
+        assert server.stats()["peak_queue"] <= 1

@@ -161,10 +161,10 @@ class TestServing:
 
 
 class TestServeAdmission:
-    """Regression: _admit used to accept prompts with len(prompt)-1 >=
-    max_len, advancing _lengths past the cache extent and silently
-    clamping/corrupting KV writes — validation now happens on
-    add_request, and freed slots clear their bookkeeping in one place."""
+    """Regression: admission used to accept prompts with len(prompt)-1 >=
+    max_len, advancing the length mirrors past the cache extent and
+    silently clamping/corrupting KV writes — validation now happens on
+    add_request, and SlotTable.free clears bookkeeping in one place."""
 
     def _server(self, max_len=16, slots=2):
         bundle = get_smoke_bundle("olmo-1b")
@@ -182,7 +182,7 @@ class TestServeAdmission:
                     prompt=np.arange(bad_len, dtype=np.int32) % bundle.cfg.vocab,
                     max_new_tokens=4,
                 ))
-        assert not server._pending and not server._requests
+        assert not server.has_work()
 
     def test_empty_prompt_rejected(self):
         _, server = self._server()
@@ -199,8 +199,8 @@ class TestServeAdmission:
         server.run_until_done(max_steps=100)
         assert req.done and len(req.out_tokens) >= 1
         # lengths never ran past the cache extent
-        assert server._lengths.max() == 0   # slot freed -> bookkeeping clear
-        assert server._slots == [None]
+        assert server.table.lengths.max() == 0  # slot freed -> bookkeeping clear
+        assert server.table.slots == [None]
         # the freed slot is reusable for a fresh request
         req2 = Request(rid=1, prompt=prompt[:4], max_new_tokens=2)
         server.add_request(req2)

@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Deprecation hygiene check: no in-repo caller uses the deprecated
-placement paths.
+placement paths or the retired monolithic serve-engine surface.
 
 The compositional placement API (ISSUE 5) deprecated three spellings in
 favor of ``repro.api`` / the policy registry:
@@ -10,12 +10,20 @@ favor of ``repro.api`` / the policy registry:
 * ``policy_specs``  -> ``Runtime.specs`` / ``Runtime.realize``
 * ``put_like``      -> ``Runtime.realize``
 
+The serve-engine split (ISSUE 6) retired the monolithic engine surface:
+
+* ``repro.serve.engine`` imports -> the ``repro.serve`` package
+  (``engine`` now holds only the jitted ``Executor``; ``Request`` /
+  ``ServeConfig`` / ``Server`` live in the scheduler layer)
+* ``.stats[...]`` dict access    -> the ``Server.stats()`` method
+
 External code keeps working through PEP 562 shims (one
-``DeprecationWarning`` per process), but nothing inside this repo may
-use them: this script greps every tracked ``*.py`` under ``src/``,
-``tests/``, ``examples/``, ``benchmarks/``, ``launch/`` and ``tools/``
-and exits 1 listing any offender.  The defining modules (where the shim
-and the private implementation live) and the facade are allowlisted.
+``DeprecationWarning`` per process) where applicable, but nothing inside
+this repo may use these spellings: this script greps every tracked
+``*.py`` under ``src/``, ``tests/``, ``examples/``, ``benchmarks/``,
+``launch/`` and ``tools/`` and exits 1 listing any offender.  The
+defining modules (where the shim and the private implementation live)
+and the facade are allowlisted.
 
 Run from the repo root:  ``python tools/check_deprecated.py``
 (CI runs it on every leg).
@@ -38,6 +46,17 @@ PATTERNS = {
     "POLICIES": re.compile(r"\bPOLICIES\b"),
     "policy_specs": re.compile(r"\bpolicy_specs\b"),
     "put_like": re.compile(r"\bput_like\b"),
+    # the monolithic engine surface: import the repro.serve package, not
+    # the engine module (which now holds only the Executor).  Matches
+    # imports and attribute access, not the logger-name string.
+    "repro.serve.engine": re.compile(
+        r"(from\s+repro\.serve\.engine\s+import"
+        r"|import\s+repro\.serve\.engine"
+        r"|\brepro\.serve\.engine\.)"
+    ),
+    # Server.stats is a method now; dict-style access marks code still
+    # written against the old stats attribute
+    ".stats[": re.compile(r"\.stats\["),
 }
 
 #: modules that define/shim the deprecated names or implement the facade
@@ -50,6 +69,12 @@ ALLOWLIST = {
     "tools/check_deprecated.py",
     # the deprecation tests exercise the shims on purpose
     "tests/test_placement_api.py",
+    # the serve package itself may reference its own engine module
+    "src/repro/serve/__init__.py",
+    "src/repro/serve/engine.py",
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/sampling.py",
+    "src/repro/serve/state.py",
 }
 
 SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")

@@ -62,7 +62,7 @@ def serve_tokens(bundle, params, mesh, policy, *, requests: int,
     ]
     server.add_requests(reqs)
     steps = 0
-    while server._pending or any(s is not None for s in server._slots):
+    while server.has_work():
         server.step()
         steps += 1
         if migrate_at is not None and steps == migrate_at:
@@ -129,9 +129,9 @@ def main() -> int:
         log.error("token mismatch across migration:\n  static:   %s\n  "
                   "migrated: %s", base, moved)
         return 1
-    if server.stats["migrations"] != 1:
+    if server.stats()["migrations"] != 1:
         log.error("expected exactly 1 migration, got %d",
-                  server.stats["migrations"])
+                  server.stats()["migrations"])
         return 1
     log.info(
         "OK: %d requests served under %s, one live migration to %s, "

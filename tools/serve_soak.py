@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""CI soak: the scheduler under sustained oversubscribed load.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python tools/serve_soak.py [--requests 64]
+
+What it asserts (ISSUE 6's scheduler acceptance criteria, as a tool the
+4-device CI leg runs on every push):
+
+1. ``--requests`` (>= 64) queued-arrival requests with mixed sampling
+   params (greedy / temperature / top-k / top-p / stop tokens) all drain
+   through an oversubscribed slot pool with planner-priced preemption
+   enabled.
+2. The run exercised **>= 1 preemption spill and >= 1 promotion** — the
+   slot-rows round trip through the spill tier actually happened (on a
+   >= 2 device runtime the mesh has a donor axis, so far tiers are
+   realizable).
+3. **No token divergence for the greedy subset**: every greedy request's
+   tokens equal an unloaded (no-preemption) reference run — scheduling
+   history is invisible in the output.
+4. Per-request completion latency and time-to-first-token p50/p99 are
+   merged into ``BENCH_serve.json`` so CI records tail latency under
+   load per commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+
+import jax
+import numpy as np
+
+from repro.models import get_smoke_bundle
+from repro.serve import Request, SamplingParams, ServeConfig, Server
+
+log = logging.getLogger("repro.tools.serve_soak")
+
+
+def make_sampling(i: int) -> SamplingParams:
+    """Mixed params: half greedy, half seeded sampling variants."""
+    if i % 2 == 0:
+        return SamplingParams()                    # greedy subset
+    variant = (i // 2) % 3
+    if variant == 0:
+        return SamplingParams(temperature=0.9, seed=i)
+    if variant == 1:
+        return SamplingParams(temperature=0.7, top_k=12, seed=i)
+    return SamplingParams(temperature=1.1, top_p=0.9, seed=i)
+
+
+def make_request(i: int, vocab: int, rng) -> Request:
+    return Request(
+        rid=i,
+        prompt=rng.integers(1, vocab, 4 + (i % 5)).astype(np.int32),
+        max_new_tokens=4 + (i % 9),
+        sampling=make_sampling(i),
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--preempt-wait", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    bundle = get_smoke_bundle(args.arch)
+    params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+    ndev = jax.device_count()
+    if ndev >= 2:
+        from repro.launch.mesh import make_donor_mesh
+        mesh = make_donor_mesh((ndev // 2,), ("data",), 2)
+    else:
+        mesh = None
+    rng = np.random.default_rng(0)
+    reqs = [make_request(i, bundle.cfg.vocab, rng)
+            for i in range(args.requests)]
+
+    server = Server(
+        bundle,
+        ServeConfig(batch_slots=args.slots, max_len=args.max_len,
+                    prefill_chunk=8, max_queue=args.requests,
+                    preempt=True, preempt_wait=args.preempt_wait),
+        params, mesh=mesh,
+    )
+    log.info("soak: %d requests -> %d slots on %d devices (policy %s, "
+             "spill tier %s)", args.requests, args.slots, ndev,
+             server.policy.name, server.rt.spill_placement().to_str())
+
+    # queued arrivals: one new request per decode tick
+    pending = list(reqs)
+    tick = 0
+    while pending or server.has_work():
+        if pending:
+            server.add_request(pending.pop(0))
+        server.step()
+        tick += 1
+        if tick > 100_000:
+            log.error("soak did not drain after %d ticks", tick)
+            return 1
+    if not all(r.done for r in reqs):
+        log.error("undrained requests: %s",
+                  [r.rid for r in reqs if not r.done])
+        return 1
+
+    stats = server.stats()
+    if stats["preemptions"] < 1 or stats["promotions"] < 1:
+        log.error("soak never exercised preemption (preemptions=%d, "
+                  "promotions=%d) — lower --preempt-wait or raise "
+                  "--requests", stats["preemptions"], stats["promotions"])
+        return 1
+
+    # greedy subset: token equality vs an unloaded (no-preemption) run
+    ref_server = Server(
+        bundle,
+        ServeConfig(batch_slots=args.slots, max_len=args.max_len,
+                    prefill_chunk=8),
+        params, mesh=mesh,
+    )
+    greedy = [r for r in reqs if r.sampling.temperature == 0.0]
+    refs = {
+        r.rid: Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+        for r in greedy
+    }
+    ref_server.add_requests(refs.values())
+    ref_server.run_until_done(100_000)
+    diverged = [
+        r.rid for r in greedy if r.out_tokens != refs[r.rid].out_tokens
+    ]
+    if diverged:
+        log.error("greedy token divergence under load for rids %s",
+                  diverged)
+        return 1
+
+    lat = np.asarray([r.finished_s - r.submitted_s for r in reqs])
+    ttft = np.asarray([r.first_token_s - r.submitted_s for r in reqs])
+    row = {
+        "arch": bundle.cfg.name,
+        "devices": ndev,
+        "requests": args.requests,
+        "batch_slots": args.slots,
+        "preemptions": stats["preemptions"],
+        "promotions": stats["promotions"],
+        "peak_queue": stats["peak_queue"],
+        "spill_s": stats["spill_s"],
+        "restore_s": stats["restore_s"],
+        "spill_tier": server.rt.spill_placement().to_str(),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        **server.throughput(),
+    }
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {}
+    results["soak"] = row
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+    log.info(
+        "OK: %d requests drained through %d preemptions / %d promotions "
+        "(spill -> %s); greedy subset (%d requests) token-identical to "
+        "unloaded run; latency p50 %.0fms p99 %.0fms, ttft p50 %.0fms "
+        "p99 %.0fms -> %s",
+        args.requests, stats["preemptions"], stats["promotions"],
+        row["spill_tier"], len(greedy),
+        row["latency_p50_s"] * 1e3, row["latency_p99_s"] * 1e3,
+        row["ttft_p50_s"] * 1e3, row["ttft_p99_s"] * 1e3, args.out,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
