@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import DEFAULT_SYSTEM, MemoryTier, read_bound
+from repro.core import MemoryTier, get_active_system, read_bound
 from repro.core.membench import measure
 from repro.kernels.blocked_matmul import best_tiling, blocked_matmul, traffic_model
 
@@ -45,7 +45,7 @@ def measured() -> None:
 
 
 def analytic() -> None:
-    c = DEFAULT_SYSTEM.chip
+    c = get_active_system().chip
     N = 16384  # paper uses 4 GB square matrices; bf16 16k^2 = 512 MB each
     flops = 2.0 * N**3
 

@@ -11,7 +11,7 @@ mesh in a subprocess.  Analytic: alpha-beta model over message size for
 from __future__ import annotations
 
 from benchmarks.common import emit, run_with_devices
-from repro.core import DEFAULT_SYSTEM, Link
+from repro.core import Link, get_active_system
 
 CODE = """
 import jax, jax.numpy as jnp, time
@@ -42,7 +42,7 @@ for log2 in (16, 20, 24):
 
 def main() -> None:
     print(run_with_devices(CODE).strip())
-    sys = DEFAULT_SYSTEM
+    sys = get_active_system()
     beta = sys.link_bandwidth(Link.DCN)
     alpha = sys.link_latency(Link.DCN)
     for streams in (1, 2, 4):

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import DEFAULT_SYSTEM, MemoryTier, read_bound
+from repro.core import MemoryTier, get_active_system, read_bound
 from repro.core.membench import measure
 
 SIZES = [2**12, 2**16, 2**20, 2**23]   # elements (x4 bytes)
@@ -42,7 +42,7 @@ def main() -> None:
     for t in MemoryTier:
         b = read_bound(t) if t != MemoryTier.VMEM else None
         lat = (
-            DEFAULT_SYSTEM.chip.vmem_latency
+            get_active_system().chip.vmem_latency
             if t == MemoryTier.VMEM
             else b.latency
         )

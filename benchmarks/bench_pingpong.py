@@ -9,7 +9,7 @@ analytic rows give the ICI-hop/DCN ladder of the hardware model."""
 from __future__ import annotations
 
 from benchmarks.common import emit, run_with_devices
-from repro.core import DEFAULT_SYSTEM, Link
+from repro.core import Link, get_active_system
 
 CODE = """
 import jax, jax.numpy as jnp, time
@@ -38,7 +38,7 @@ for dist in (1, 2, 4):
 def main() -> None:
     print(run_with_devices(CODE).strip())
     # analytic ladder: 1 ICI hop, multi-hop, cross-pod (paper's G0/H0..H3)
-    c = DEFAULT_SYSTEM
+    c = get_active_system()
     for hops in (1, 2, 4, 8):
         lat = 2 * hops * c.link_latency(Link.ICI)
         emit(f"analytic_pingpong[ici,{hops}hops]", lat * 1e6, "round-trip")

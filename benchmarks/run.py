@@ -19,6 +19,7 @@ DESIGN.md §6):
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -53,7 +54,26 @@ def main() -> None:
         help="datapath-model smoke modules only (adds the measured donor "
              "column when >= 2 devices are visible)",
     )
+    ap.add_argument(
+        "--calibration", default=None, metavar="PATH",
+        help="activate a measurement-calibrated hardware model from this "
+             "calibration.json (created by tools/calibrate.py) so every "
+             "analytic row reports both spec and calibrated bounds; "
+             "defaults to ./calibration.json when that file exists",
+    )
     args = ap.parse_args()
+
+    cal_path = args.calibration
+    if cal_path is None and os.path.exists("calibration.json"):
+        cal_path = "calibration.json"
+    if cal_path is not None:
+        from repro.core.calibration import Calibration
+        from repro.core.hardware import set_active_system
+
+        cal = Calibration.load(cal_path)
+        set_active_system(cal.apply())
+        print(f"# calibration: {cal_path} (backend={cal.backend}, "
+              f"{len(cal.terms)} measured terms)")
 
     if args.only:
         mods = [args.only]

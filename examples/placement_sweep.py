@@ -25,12 +25,20 @@ Two parts, mirroring the paper's predicted-vs-measured method:
    prediction is reported.
 
 ``--analytic`` prints the predicted tables only (the CI smoke mode).
+``--calibration calibration.json`` activates a measurement-calibrated
+hardware model: every prediction is then made under the calibrated
+constants and the measured column reports its achieved-over-bound ratio
+against **both** the spec-sheet and calibrated predictions — how much
+calibration moved each policy's number.
 """
 
 import argparse
+import os
 import time
 
+from repro.api import SPEC_SYSTEM
 from repro.configs import SHAPES, ShapeSpec, get_config, list_archs, smoke_config
+from repro.core.hardware import get_active_system
 from repro.core.placement import (
     Role,
     TIER_DONOR_AXIS,
@@ -39,6 +47,10 @@ from repro.core.placement import (
 )
 from repro.core.planner import plan, predict
 from repro.models.model_zoo import ModelBundle
+
+
+def _calibrated() -> bool:
+    return get_active_system() is not SPEC_SYSTEM
 
 
 def _mesh_axes(chips: int, data_axis: int, pod_axis: int) -> tuple[int, int]:
@@ -58,24 +70,31 @@ def predicted_tables(arch: str, chips: int, data_axis: int,
     print(f"=== {cfg.name}: {cfg.num_params()/1e9:.1f}B params, "
           f"{chips} chips (data axis {data_axis}, pod axis {pod_axis}) ===\n")
 
+    def _table(prof):
+        # plan() prices under the active system; with a calibration
+        # active, each row also shows the spec-sheet step time so the
+        # table says how much calibration moved every prediction.
+        best, preds = plan(prof)
+        spec = {}
+        if _calibrated():
+            _, sp = plan(prof, system=SPEC_SYSTEM)
+            spec = {p.policy: p for p in sp}
+        for p in preds:
+            mark = " <== planner pick" if p.policy == best.policy else ""
+            extra = (f" [spec: {spec[p.policy].step_s*1e3:.3f}ms]"
+                     if p.policy in spec else "")
+            print("  " + p.explain() + extra + mark)
+
     print("-- training (train_4k) --")
-    prof = bundle.train_workload(
+    _table(bundle.train_workload(
         SHAPES["train_4k"],
         num_chips=chips,
         data_axis_size=data_axis,
         pod_axis_size=pod_axis,
-    )
-    best, preds = plan(prof)
-    for p in preds:
-        mark = " <== planner pick" if p.policy == best.policy else ""
-        print("  " + p.explain() + mark)
+    ))
 
     print("\n-- decoding (decode_32k) --")
-    prof = bundle.decode_workload(SHAPES["decode_32k"], num_chips=chips)
-    best, preds = plan(prof)
-    for p in preds:
-        mark = " <== planner pick" if p.policy == best.policy else ""
-        print("  " + p.explain() + mark)
+    _table(bundle.decode_workload(SHAPES["decode_32k"], num_chips=chips))
 
 
 def _mesh_for_policy(policy):
@@ -146,25 +165,49 @@ def predicted_vs_measured(arch: str, slots: int, max_len: int,
     prof = bundle.decode_workload(
         ShapeSpec("local", max_len, slots, "decode"), num_chips=1
     )
+    cal = _calibrated()
     print(f"\n=== predicted vs measured: {cfg.name} decode on this host "
           f"({slots} slots x {max_len} ctx, host_available="
-          f"{host_available()}, devices={jax.device_count()}) ===")
-    print(f"{'policy':<20} {'fits':<5} {'predicted ms':>12} "
-          f"{'measured ms':>12} {'meas/pred':>10}")
+          f"{host_available()}, devices={jax.device_count()}, "
+          f"calibration={'active' if cal else 'none (spec sheet)'}) ===")
+    if cal:
+        print(f"{'policy':<20} {'fits':<5} {'pred spec ms':>12} "
+              f"{'pred cal ms':>12} {'measured ms':>12} "
+              f"{'meas/spec':>10} {'meas/cal':>9}")
+    else:
+        print(f"{'policy':<20} {'fits':<5} {'predicted ms':>12} "
+              f"{'measured ms':>12} {'meas/pred':>10}")
     starred = False
+
+    def _ratio(meas_ms, pred_s):
+        return meas_ms / (pred_s * 1e3) if pred_s else float("inf")
+
     # the registry, not a hand-written list: custom register_policy()'d
     # policies show up in the sweep automatically
     for policy in registered_policies().values():
-        pred = predict(prof, policy)
+        pred = predict(prof, policy)   # under the active (cal'd) system
+        spec_pred = predict(prof, policy, SPEC_SYSTEM) if cal else pred
         meas = _measure_decode_ms(bundle, policy, slots, max_len, iters)
         if meas is None:
             starred = True
-            print(f"{policy.name + '*':<20} {str(pred.fits):<5} "
-                  f"{pred.step_s*1e3:>12.4f} {'-':>12} {'-':>10}")
+            if cal:
+                print(f"{policy.name + '*':<20} {str(pred.fits):<5} "
+                      f"{spec_pred.step_s*1e3:>12.4f} "
+                      f"{pred.step_s*1e3:>12.4f} {'-':>12} {'-':>10} "
+                      f"{'-':>9}")
+            else:
+                print(f"{policy.name + '*':<20} {str(pred.fits):<5} "
+                      f"{pred.step_s*1e3:>12.4f} {'-':>12} {'-':>10}")
             continue
-        ratio = meas / (pred.step_s * 1e3) if pred.step_s else float("inf")
-        print(f"{policy.name:<20} {str(pred.fits):<5} "
-              f"{pred.step_s*1e3:>12.4f} {meas:>12.4f} {ratio:>10.1f}")
+        if cal:
+            print(f"{policy.name:<20} {str(pred.fits):<5} "
+                  f"{spec_pred.step_s*1e3:>12.4f} {pred.step_s*1e3:>12.4f} "
+                  f"{meas:>12.4f} {_ratio(meas, spec_pred.step_s):>10.1f} "
+                  f"{_ratio(meas, pred.step_s):>9.1f}")
+        else:
+            print(f"{policy.name:<20} {str(pred.fits):<5} "
+                  f"{pred.step_s*1e3:>12.4f} {meas:>12.4f} "
+                  f"{_ratio(meas, pred.step_s):>10.1f}")
     if starred:
         print("* not measurable here: needs a donor mesh axis (>=2 devices; "
               "set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
@@ -185,7 +228,21 @@ def main() -> None:
                     action="store_true",
                     help="predicted tables only (pure analysis; the CI "
                          "smoke mode)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="activate a calibration.json (tools/calibrate.py) "
+                         "so predictions use measured constants and the "
+                         "table reports meas/spec AND meas/cal ratios; "
+                         "defaults to ./calibration.json when it exists")
     args = ap.parse_args()
+
+    cal_path = args.calibration
+    if cal_path is None and os.path.exists("calibration.json"):
+        cal_path = "calibration.json"
+    if cal_path:
+        from repro.core.calibration import load_or_calibrate
+
+        load_or_calibrate(cal_path, activate=True)
+        print(f"(calibration active: {cal_path})\n")
 
     predicted_tables(args.arch, args.chips, args.data_axis, args.pod_axis)
     if not args.no_measure:

@@ -39,7 +39,14 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.datapath import copy_bound
-from repro.core.hardware import DEFAULT_SYSTEM, MemoryTier, SystemSpec
+from repro.core.hardware import (
+    DEFAULT_SYSTEM,
+    MemoryTier,
+    SystemSpec,
+    get_active_system,
+    set_active_system,
+)
+from repro.core.replay import ReplayLog
 from repro.core.placement import (
     DonorStream,
     Placement,
@@ -59,7 +66,16 @@ from repro.models.sharding import _policy_specs, donation_compatible
 
 log = logging.getLogger("repro.api")
 
-__all__ = ["Runtime", "PhasePlan"]
+__all__ = ["Runtime", "PhasePlan", "SPEC_SYSTEM"]
+
+#: The spec-sheet baseline, re-exported so spec-vs-calibrated comparisons
+#: (benchmarks, placement sweeps) never re-import the hardware singleton:
+#: this facade is the one sanctioned consumer of the raw constant.
+SPEC_SYSTEM = DEFAULT_SYSTEM
+
+#: decode-step EWMA weights (old, new) — matches the serve Executor's
+#: historical smoothing so pricing behavior is unchanged, just owned here.
+_EWMA_OLD, _EWMA_NEW = 0.8, 0.2
 
 
 @dataclasses.dataclass
@@ -135,12 +151,14 @@ class Runtime:
         policy: PlacementPolicy | str | Mapping | None = None,
         *,
         rules: Mapping | None = None,
-        system: SystemSpec = DEFAULT_SYSTEM,
+        system: SystemSpec | None = None,
     ):
         self.bundle = bundle
         self.mesh = mesh
         self.rules = rules
-        self.system = system
+        # the runtime owns the (possibly calibrated) system every pricing
+        # path consumes; None adopts the process-wide active system.
+        self.system = system if system is not None else get_active_system()
         self.policy = (
             get_policy("hbm_resident") if policy is None
             else parse_policy(policy)
@@ -150,6 +168,12 @@ class Runtime:
         self.plans: dict[str, PhasePlan] = {}
         self._streams: dict[Role, tuple[DonorStream, tuple]] = {}
         self._step_estimates: dict[tuple, float] = {}
+        #: measured decode-step EWMA per (batch_slots, max_len, policy)
+        self._step_observed: dict[tuple, float] = {}
+        #: the last Calibration adopted by calibrate() (None = spec)
+        self.calibration = None
+        #: predicted-vs-measured log fed by observe_decode_step()
+        self.replay = ReplayLog()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -160,7 +184,7 @@ class Runtime:
         *,
         phase: str = "decode",
         rules: Mapping | None = None,
-        system: SystemSpec = DEFAULT_SYSTEM,
+        system: SystemSpec | None = None,
         candidates: Iterable[PlacementPolicy | str] | None = None,
         require_fit: bool = False,
         **phase_kw,
@@ -505,9 +529,21 @@ class Runtime:
     def decode_step_seconds(
         self, batch_slots: int, max_len: int
     ) -> float:
-        """Planner-predicted decode-step seconds under the current policy
-        — the other side of the preemption ledger (how long until a slot
-        frees naturally)."""
+        """Decode-step seconds under the current policy — the other side
+        of the preemption ledger (how long until a slot frees naturally).
+
+        Measurement-backed: once :meth:`observe_decode_step` has fed real
+        Executor step timings for this (batch, len, policy) shape, the
+        observed EWMA is returned; before any observation the planner's
+        analytic prediction is the fallback.
+        """
+        observed = self.measured_step_s(batch_slots, max_len)
+        if observed is not None:
+            return observed
+        return self._analytic_step_seconds(batch_slots, max_len)
+
+    def _analytic_step_seconds(self, batch_slots: int, max_len: int
+                               ) -> float:
         from repro.configs import ShapeSpec
 
         key = (batch_slots, max_len, self.policy.name)
@@ -521,6 +557,82 @@ class Runtime:
         est = predict(prof, self.policy, self.system).step_s
         self._step_estimates[key] = est
         return est
+
+    def measured_step_s(self, batch_slots: int, max_len: int
+                        ) -> float | None:
+        """The observed decode-step EWMA for this shape under the current
+        policy, or None before any observation."""
+        return self._step_observed.get(
+            (batch_slots, max_len, self.policy.name)
+        )
+
+    def observe_decode_step(
+        self, batch_slots: int, max_len: int, seconds: float
+    ) -> float:
+        """Feed one measured decode-step time into the runtime.
+
+        This is the serve Executor's per-step timing becoming a
+        calibration observation: it updates the EWMA that
+        :meth:`decode_step_seconds` (and through it
+        :meth:`preemption_price` users like the scheduler's preemption
+        ledger) returns, and logs predicted-vs-measured into
+        :attr:`replay` so step-time drift shows up in the same report as
+        the link calibrations.  Returns the updated EWMA.
+        """
+        seconds = float(seconds)
+        if seconds <= 0.0:
+            return self.decode_step_seconds(batch_slots, max_len)
+        key = (batch_slots, max_len, self.policy.name)
+        prev = self._step_observed.get(key)
+        ewma = (seconds if prev is None
+                else _EWMA_OLD * prev + _EWMA_NEW * seconds)
+        self._step_observed[key] = ewma
+        self.replay.record(
+            "decode_step",
+            f"decode[{self.policy.name},b{batch_slots},l{max_len}]",
+            self._analytic_step_seconds(batch_slots, max_len),
+            seconds,
+            source="executor",
+        )
+        return ewma
+
+    # -- calibration -------------------------------------------------------
+    def calibrate(
+        self,
+        path=None,
+        *,
+        activate: bool = True,
+        **kwargs,
+    ):
+        """Adopt a measurement-calibrated system for every pricing path.
+
+        Runs :func:`repro.core.calibration.calibrate` (or loads the
+        persisted ``calibration.json`` at ``path`` — which is also where
+        a fresh run is saved), derives ``self.system`` via
+        :meth:`SystemSpec.with_measurements`, and drops cached analytic
+        step estimates so planner passes, ``price_copy``,
+        ``preemption_price`` and ``decode_step_seconds`` all re-price
+        under measured constants.  ``activate=True`` (default) also
+        installs the calibrated system process-wide
+        (:func:`repro.core.hardware.set_active_system`) so module-level
+        helpers price consistently with this runtime.
+
+        Calibration changes *pricing only* — realized placements and
+        computed values are untouched (greedy serve tokens are
+        bit-identical before/after; asserted in tests).  Returns the
+        :class:`repro.core.calibration.Calibration`.
+        """
+        from repro.core.calibration import load_or_calibrate
+
+        cal = load_or_calibrate(path, system=self.system, **kwargs)
+        self.calibration = cal
+        self.system = cal.apply(self.system)
+        if activate:
+            set_active_system(self.system)
+        self._step_estimates.clear()
+        self.replay.extend(cal.replay.records())
+        log.info("calibrated hardware model:\n%s", cal.summary())
+        return cal
 
     # -- live migration ----------------------------------------------------
     def migrate(

@@ -13,12 +13,16 @@ Layout:
 
 from repro.core.hardware import (  # noqa: F401
     AXIS_LINK,
-    DEFAULT_SYSTEM,
+    CALIBRATED_TERMS,
     ChipSpec,
     Link,
     MemoryTier,
     PodSpec,
     SystemSpec,
+    axis_bandwidth,
+    get_active_system,
+    link_for_axis,
+    set_active_system,
 )
 from repro.core.datapath import (  # noqa: F401
     Bound,
@@ -72,6 +76,11 @@ from repro.core.planner import (  # noqa: F401
     predict,
     train_profile,
 )
+from repro.core.replay import (  # noqa: F401
+    ReplayLog,
+    ReplayRecord,
+    TermError,
+)
 from repro.core.roofline import (  # noqa: F401
     RooflineReport,
     load_reports,
@@ -97,4 +106,18 @@ def __getattr__(name: str):
         from repro.core import placement
 
         return getattr(placement, name)
+    if name == "DEFAULT_SYSTEM":
+        # the spec-sheet singleton: still reachable lazily for external
+        # code, but in-repo callers must route through get_active_system()
+        # / the Runtime facade (enforced by tools/check_deprecated.py).
+        from repro.core import hardware
+
+        return hardware.DEFAULT_SYSTEM
+    if name in ("Calibration", "TermCalibration", "calibrate",
+                "load_or_calibrate"):
+        # calibration imports jax; keep `import repro.core` light for
+        # pure-analytic callers.
+        from repro.core import calibration
+
+        return getattr(calibration, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,10 +21,10 @@ from collections import Counter
 from typing import Iterable, Sequence
 
 from repro.core.hardware import (
-    DEFAULT_SYSTEM,
     Link,
     MemoryTier,
     SystemSpec,
+    get_active_system,
 )
 
 # ---------------------------------------------------------------------------
@@ -71,9 +71,10 @@ class Bound:
 
 
 def _bound_from_traversals(
-    traversals: Counter[Link], system: SystemSpec
+    traversals: Counter[Link], system: SystemSpec | None
 ) -> Bound:
     """min over links of bw/traversals — the twice-traversed-halves rule."""
+    system = system if system is not None else get_active_system()
     if not traversals:
         raise ValueError("empty datapath")
     best_bw = float("inf")
@@ -94,14 +95,14 @@ def _bound_from_traversals(
 
 
 def read_bound(
-    tier: MemoryTier, system: SystemSpec = DEFAULT_SYSTEM
+    tier: MemoryTier, system: SystemSpec | None = None
 ) -> Bound:
     """Bound for this chip reading from ``tier`` (paper Fig. 3, left)."""
     return _bound_from_traversals(Counter(path(tier)), system)
 
 
 def write_bound(
-    tier: MemoryTier, system: SystemSpec = DEFAULT_SYSTEM
+    tier: MemoryTier, system: SystemSpec | None = None
 ) -> Bound:
     """Bound for this chip writing to ``tier``.
 
@@ -115,7 +116,7 @@ def write_bound(
 def copy_bound(
     src: MemoryTier,
     dst: MemoryTier,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
 ) -> Bound:
     """Bound for a chip-driven copy ``src -> dst``.
 
@@ -134,7 +135,7 @@ def collective_bound(
     axis_size: int,
     axis_link: Link,
     kind: str,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
 ) -> float:
     """Per-chip algorithmic bandwidth bound of a ring collective.
 
@@ -142,6 +143,7 @@ def collective_bound(
     B bytes moves ``2*(N-1)/N * B`` bytes over the chip's slowest on-path
     link, etc.  Used by bench_collectives and the roofline collective term.
     """
+    system = system if system is not None else get_active_system()
     link_bw = system.link_bandwidth(axis_link)
     n = axis_size
     if n <= 1:
@@ -184,7 +186,7 @@ def wire_bytes(kind: str, payload_bytes: float, group_size: int) -> float:
 def bound_matrix(
     op: str,
     tiers: Sequence[MemoryTier] | None = None,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
 ) -> dict[str, dict[str, float]]:
     """Paper-Fig.-3-style matrix of GB/s bounds.
 
@@ -210,7 +212,7 @@ def bound_matrix(
 def streaming_time(
     nbytes: float,
     tier: MemoryTier,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
     *,
     touches: int = 1,
 ) -> float:
@@ -228,7 +230,7 @@ def streaming_time(
 
 
 def migration_crossover_touches(
-    tier: MemoryTier, system: SystemSpec = DEFAULT_SYSTEM
+    tier: MemoryTier, system: SystemSpec | None = None
 ) -> float:
     """Touches after which migrate-to-HBM beats streaming from ``tier``.
 
@@ -236,6 +238,7 @@ def migration_crossover_touches(
     ``tier -> HBM`` plus ``touches`` HBM reads; streaming costs ``touches``
     reads over the tier path.  Returns the break-even touch count.
     """
+    system = system if system is not None else get_active_system()
     hbm = system.link_bandwidth(Link.HBM_BUS)
     tier_bw = read_bound(tier, system).bandwidth
     cp = copy_bound(tier, MemoryTier.HBM, system).bandwidth

@@ -11,6 +11,24 @@ All bandwidth numbers are bytes/second, latencies in seconds, capacities in
 bytes.  Values marked ``# task-spec`` are the constants prescribed for the
 roofline analysis; the others are public v5e-class figures used only for
 secondary analyses (latency plots, VMEM tiling checks) and clearly separable.
+
+Provenance
+----------
+
+The paper's whole method is *measuring* each datapath and reporting the
+achieved fraction of the bound — a planner priced off spec-sheet numbers
+alone is exactly the "assumed placement" trap §IV warns against.  Every
+calibratable term therefore carries a provenance tag:
+
+* ``spec``     — the declarative constant below (the default);
+* ``measured`` — rewritten from a microbenchmark via
+  :meth:`SystemSpec.with_measurements` (see
+  :mod:`repro.core.calibration`);
+* ``override`` — pinned by hand via :meth:`SystemSpec.with_overrides`.
+
+Consumers resolve their system through :func:`get_active_system` (or an
+explicitly passed ``system=``); the spec-sheet baseline stays available
+as the module's default system and is what every process starts with.
 """
 
 from __future__ import annotations
@@ -18,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+import warnings
 from typing import Mapping
 
 
@@ -120,6 +139,28 @@ class PodSpec:
         return cross * wrap * self.chip.ici_link_bandwidth
 
 
+#: provenance values a calibratable term may carry
+PROVENANCES = ("spec", "measured", "override")
+
+#: Calibratable terms: name -> the :class:`ChipSpec` field it rewrites.
+#: These are exactly the bandwidth/latency/peak constants the datapath
+#: bounds are built from — the terms :mod:`repro.core.calibration`
+#: measures and :mod:`repro.core.replay` validates.
+CALIBRATED_TERMS: dict[str, str] = {
+    "peak_bf16_flops": "peak_bf16_flops",
+    "hbm_bandwidth": "hbm_bandwidth",
+    "vmem_bandwidth": "vmem_bandwidth",
+    "pcie_bandwidth": "pcie_bandwidth",
+    "ici_link_bandwidth": "ici_link_bandwidth",
+    "dcn_bandwidth": "dcn_bandwidth",
+    "hbm_latency": "hbm_latency",
+    "vmem_latency": "vmem_latency",
+    "pcie_latency": "pcie_latency",
+    "ici_hop_latency": "ici_hop_latency",
+    "dcn_latency": "dcn_latency",
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class SystemSpec:
     """The full target: ``num_pods`` pods joined by DCN.
@@ -127,10 +168,16 @@ class SystemSpec:
     The production configuration for this repo is 2 pods x 256 chips
     (the multi-pod dry-run mesh); ``num_pods`` scales to thousands of
     nodes for planner what-ifs.
+
+    ``provenance`` maps each :data:`CALIBRATED_TERMS` name to
+    ``spec | measured | override`` (absent -> ``spec``).  Instances are
+    immutable: :meth:`with_measurements` / :meth:`with_overrides` derive
+    a new spec with the terms rewritten and tagged.
     """
 
     pod: PodSpec = dataclasses.field(default_factory=PodSpec)
     num_pods: int = 2
+    provenance: Mapping[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def num_chips(self) -> int:
@@ -160,21 +207,145 @@ class SystemSpec:
             Link.DCN: c.dcn_latency,
         }[link]
 
+    # -- calibration surface ----------------------------------------------
+    def term_value(self, term: str) -> float:
+        """Current value of a calibratable term."""
+        return getattr(self.chip, _term_field(term))
 
-#: Default system used everywhere unless a config overrides it.
+    def provenance_of(self, term: str) -> str:
+        """``spec | measured | override`` for ``term`` (spec when never
+        rewritten)."""
+        _term_field(term)  # validate
+        return self.provenance.get(term, "spec")
+
+    def _derive(self, provenance: str, terms: Mapping[str, float]
+                ) -> "SystemSpec":
+        if provenance not in PROVENANCES:
+            raise ValueError(
+                f"unknown provenance {provenance!r}; one of {PROVENANCES}"
+            )
+        chip_updates = {}
+        for term, value in terms.items():
+            field = _term_field(term)
+            value = float(value)
+            if not value > 0.0:
+                raise ValueError(
+                    f"calibrated term {term} must be > 0, got {value!r}"
+                )
+            chip_updates[field] = value
+        new_chip = dataclasses.replace(self.chip, **chip_updates)
+        new_pod = dataclasses.replace(self.pod, chip=new_chip)
+        new_prov = dict(self.provenance)
+        new_prov.update({t: provenance for t in terms})
+        return dataclasses.replace(self, pod=new_pod, provenance=new_prov)
+
+    def with_measurements(self, **terms: float) -> "SystemSpec":
+        """A new spec with ``terms`` rewritten from measurements and
+        tagged ``measured`` — the derivation :func:`repro.core.
+        calibration.calibrate` applies after running the membw/pingpong/
+        collective kernels."""
+        return self._derive("measured", terms)
+
+    def with_overrides(self, **terms: float) -> "SystemSpec":
+        """A new spec with ``terms`` pinned by hand (``override``)."""
+        return self._derive("override", terms)
+
+    def describe_terms(self) -> dict[str, dict]:
+        """Per-term ``{value, provenance}`` — what ``calibration.json``
+        records for every constant the scheduler acts on."""
+        return {
+            term: {
+                "value": self.term_value(term),
+                "provenance": self.provenance_of(term),
+            }
+            for term in CALIBRATED_TERMS
+        }
+
+
+def _term_field(term: str) -> str:
+    try:
+        return CALIBRATED_TERMS[term]
+    except KeyError:
+        raise KeyError(
+            f"unknown calibratable term {term!r}; "
+            f"one of {sorted(CALIBRATED_TERMS)}"
+        ) from None
+
+
+#: Spec-sheet baseline system (every term provenance ``spec``).
 DEFAULT_SYSTEM = SystemSpec()
 
+#: The process-wide system consumers resolve through get_active_system().
+_ACTIVE_SYSTEM: SystemSpec = DEFAULT_SYSTEM
+
+
+def get_active_system() -> SystemSpec:
+    """The system every pricing path uses when no explicit ``system=`` is
+    passed: the spec-sheet baseline until :func:`set_active_system`
+    installs a calibrated one (see :meth:`repro.api.Runtime.calibrate`
+    and the launchers' ``--calibration`` flag)."""
+    return _ACTIVE_SYSTEM
+
+
+def set_active_system(system: SystemSpec) -> SystemSpec:
+    """Install ``system`` as the process-wide default; returns the
+    previous one (restore it in tests)."""
+    global _ACTIVE_SYSTEM
+    if not isinstance(system, SystemSpec):
+        raise TypeError(f"expected SystemSpec, got {type(system).__name__}")
+    prev = _ACTIVE_SYSTEM
+    _ACTIVE_SYSTEM = system
+    return prev
+
+
 #: Mesh-axis -> link map for the production meshes (see launch/mesh.py).
-#: 'model' and 'data' are intra-pod ICI axes; 'pod' crosses DCN.  This is
-#: the paper's "locality beats memory type" lesson (Fig. 19) as data: the
-#: axis you put a collective on decides its link, and therefore its bound.
+#: 'model' and 'data' are intra-pod ICI axes; 'pod' crosses DCN; the
+#: 'donor'/'donor_pod' memory-donor axes (core/placement.py) ride ICI and
+#: DCN respectively.  This is the paper's "locality beats memory type"
+#: lesson (Fig. 19) as data: the axis you put a collective on decides its
+#: link, and therefore its bound.
 AXIS_LINK: dict[str, Link] = {
     "model": Link.ICI,
     "data": Link.ICI,
     "pod": Link.DCN,
+    "donor": Link.ICI,
+    "donor_pod": Link.DCN,
 }
 
+_WARNED_AXES: set[str] = set()
 
-def axis_bandwidth(axis: str, system: SystemSpec = DEFAULT_SYSTEM) -> float:
+
+def link_for_axis(axis: str, *, strict: bool = False) -> Link:
+    """The physical link a mesh axis runs over.
+
+    Unknown axes used to default silently to ICI — which priced the
+    ``donor_pod`` DCN axis at ICI bandwidth.  Now ``strict=True`` raises
+    ``KeyError`` and the default warns once per axis name before falling
+    back to ICI, so a mispriced collective is never silent.
+    """
+    try:
+        return AXIS_LINK[axis]
+    except KeyError:
+        if strict:
+            raise KeyError(
+                f"mesh axis {axis!r} has no AXIS_LINK entry; known axes: "
+                f"{sorted(AXIS_LINK)} — register it so collectives on it "
+                "are priced at the right link"
+            ) from None
+        if axis not in _WARNED_AXES:
+            _WARNED_AXES.add(axis)
+            warnings.warn(
+                f"mesh axis {axis!r} has no AXIS_LINK entry; pricing its "
+                "collectives at ICI bandwidth (add it to "
+                "repro.core.hardware.AXIS_LINK if it crosses another link)",
+                stacklevel=2,
+            )
+        return Link.ICI
+
+
+def axis_bandwidth(
+    axis: str, system: SystemSpec | None = None, *, strict: bool = False
+) -> float:
     """Per-chip bandwidth available to a collective running on ``axis``."""
-    return system.link_bandwidth(AXIS_LINK.get(axis, Link.ICI))
+    system = system if system is not None else get_active_system()
+    return system.link_bandwidth(link_for_axis(axis, strict=strict))

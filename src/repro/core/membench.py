@@ -109,6 +109,36 @@ def dispatch_overhead(repeats: int = 50) -> float:
     return (time.perf_counter() - t0) / repeats
 
 
+def linear_fit(
+    measurements: Sequence[Measurement],
+) -> tuple[float, float]:
+    """Least-squares fit ``t = latency + nbytes / bandwidth`` over a size
+    sweep; returns ``(latency_s, bandwidth_Bps)``.
+
+    This is how calibration separates the two terms a single measurement
+    conflates (paper Figs. 11-13 vs 7-8: small buffers expose latency,
+    large buffers expose bandwidth).  Degenerate sweeps (single size, or a
+    non-positive slope from noisy timings) fall back to the largest-size
+    measurement's effective bandwidth with zero latency.
+    """
+    pts = [(float(m.nbytes), m.mean_s) for m in measurements if m.nbytes]
+    if not pts:
+        raise ValueError("linear_fit needs measurements with nbytes set")
+    big = max(measurements, key=lambda m: m.nbytes)
+    if len(pts) < 2:
+        return 0.0, big.bandwidth
+    n = len(pts)
+    mean_x = sum(x for x, _ in pts) / n
+    mean_y = sum(y for _, y in pts) / n
+    sxx = sum((x - mean_x) ** 2 for x, _ in pts)
+    sxy = sum((x - mean_x) * (y - mean_y) for x, y in pts)
+    if sxx <= 0.0 or sxy <= 0.0:
+        return 0.0, big.bandwidth
+    slope = sxy / sxx                       # s per byte
+    intercept = mean_y - slope * mean_x     # s
+    return max(intercept, 0.0), 1.0 / slope
+
+
 def sweep(
     fn_of_size: Callable[[int], Callable[[], Any]],
     sizes: Sequence[int],

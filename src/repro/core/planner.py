@@ -46,7 +46,7 @@ from repro.core.datapath import (
     copy_bound,
     read_bound,
 )
-from repro.core.hardware import DEFAULT_SYSTEM, Link, MemoryTier, SystemSpec
+from repro.core.hardware import Link, MemoryTier, SystemSpec, get_active_system
 from repro.core.placement import (
     HOST_TIERS,
     PlacementPolicy,
@@ -76,8 +76,9 @@ _LINK_BUCKET: dict[Link, str] = {
 }
 
 
-def pool_capacities(system: SystemSpec = DEFAULT_SYSTEM) -> dict[str, float]:
+def pool_capacities(system: SystemSpec | None = None) -> dict[str, float]:
     """Capacity of every memory pool the planner accounts, in bytes."""
+    system = system if system is not None else get_active_system()
     chip = system.chip
     return {
         "hbm": chip.hbm_capacity,
@@ -97,7 +98,7 @@ class CollectiveTerm:
     axis_size: int
     payload_bytes: float  # per-chip payload as collective_bound defines it
 
-    def seconds(self, system: SystemSpec = DEFAULT_SYSTEM) -> float:
+    def seconds(self, system: SystemSpec | None = None) -> float:
         bw = collective_bound(self.axis_size, self.link, self.kind, system)
         return self.payload_bytes / bw if bw != float("inf") else 0.0
 
@@ -178,7 +179,7 @@ def _touch_seconds(bound: Bound, nbytes: float, transfers: float) -> float:
 def predict(
     profile: WorkloadProfile,
     policy: PlacementPolicy,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
 ) -> PolicyPrediction:
     """Predict ``policy``'s step time for ``profile`` from datapath bounds.
 
@@ -190,6 +191,7 @@ def predict(
     ``read_bound``.  Transfer seconds are bucketed by each bound's limiting
     link; collective terms come from ``collective_bound``.
     """
+    system = system if system is not None else get_active_system()
     chip = system.chip
     compute_s = profile.flops / chip.peak_bf16_flops
 
@@ -311,7 +313,7 @@ class PlacementOOMError(RuntimeError):
     """No eligible policy fits; carries the per-pool overflow report."""
 
     def __init__(self, preds: list[PolicyPrediction],
-                 system: SystemSpec = DEFAULT_SYSTEM):
+                 system: SystemSpec | None = None):
         self.predictions = preds
         caps = pool_capacities(system)
         lines = []
@@ -330,7 +332,7 @@ class PlacementOOMError(RuntimeError):
 def plan(
     profile: WorkloadProfile,
     policies: Iterable[PlacementPolicy] | None = None,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
     *,
     allow_host: bool = True,
     allow_peer: bool = True,

@@ -25,10 +25,10 @@ import json
 from typing import Any, Mapping
 
 from repro.core.hardware import (
-    AXIS_LINK,
-    DEFAULT_SYSTEM,
     Link,
     SystemSpec,
+    get_active_system,
+    link_for_axis,
 )
 from repro.core.hlo_analysis import HloCost, analyze_hlo_text
 
@@ -86,7 +86,7 @@ def report_from_cost(
     num_chips: int,
     model_flops: float,
     model_bytes: float = 0.0,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
     notes: str = "",
 ) -> RooflineReport:
     """Build the roofline record from an :class:`HloCost`.
@@ -96,6 +96,7 @@ def report_from_cost(
     streaming the must-read bytes — active params + cache — once at full
     HBM bandwidth, the paper's bound-fraction metric verbatim).
     """
+    system = system if system is not None else get_active_system()
     chip = system.chip
     compute_s = cost.flops / chip.peak_bf16_flops
     memory_s = cost.hbm_bytes / chip.hbm_bandwidth
@@ -106,7 +107,10 @@ def report_from_cost(
     for axes, nbytes in cost.wire_bytes_by_axis_group().items():
         link = Link.ICI
         for ax in axes:
-            if AXIS_LINK.get(ax, Link.ICI) == Link.DCN:
+            # link_for_axis warns on unregistered axes instead of the old
+            # silent AXIS_LINK.get(ax, ICI) — which priced any unknown DCN
+            # axis (e.g. donor_pod before it was registered) at ICI speed.
+            if link_for_axis(ax) == Link.DCN:
                 link = Link.DCN
                 break
         key = str(link)
@@ -162,7 +166,7 @@ def report_from_compiled(
     mesh_axes: Mapping[str, int],
     model_flops: float,
     model_bytes: float = 0.0,
-    system: SystemSpec = DEFAULT_SYSTEM,
+    system: SystemSpec | None = None,
     notes: str = "",
 ) -> RooflineReport:
     """Roofline record straight from a ``jax.stages.Compiled``."""

@@ -70,9 +70,20 @@ def main() -> None:
                     help="enable planner-priced KV preemption: starved "
                          "waiters may evict a victim slot to the cheapest "
                          "realizable far tier")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="price placements from a measurement-calibrated "
+                         "hardware model: load this calibration.json, or "
+                         "run the calibration microbenchmarks and save it "
+                         "there when the file does not exist (spec-sheet "
+                         "constants otherwise)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
+    if args.calibration:
+        from repro.core.calibration import load_or_calibrate
+
+        cal = load_or_calibrate(args.calibration, activate=True)
+        log.info("calibrated hardware model active:\n%s", cal.summary())
     dims = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(dims):]
     if args.remote_donor > 1:

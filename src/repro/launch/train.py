@@ -97,9 +97,20 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="price placements from a measurement-calibrated "
+                         "hardware model: load this calibration.json, or "
+                         "run the calibration microbenchmarks and save it "
+                         "there when the file does not exist (spec-sheet "
+                         "constants otherwise)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
+    if args.calibration:
+        from repro.core.calibration import load_or_calibrate
+
+        cal = load_or_calibrate(args.calibration, activate=True)
+        log.info("calibrated hardware model active:\n%s", cal.summary())
 
     dims = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("pod", "data", "model")[-len(dims):] if len(dims) > 1 else ("data",)

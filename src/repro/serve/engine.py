@@ -166,9 +166,12 @@ class Executor:
             None if self.mesh is None
             else NamedSharding(self.mesh, P())
         )
-        # measured step time restarts with each jit build (a migration
-        # changes the step cost)
-        self._step_ewma: float | None = None
+        # warm-up counter restarts with each jit build: the first step
+        # after a (re)build is compile-dominated and must not feed the
+        # runtime's measured-step calibration.  The EWMA itself lives on
+        # the Runtime (keyed by shape + policy), so a replan migration
+        # starts a fresh observation under the new policy's key while the
+        # old policy's measurements survive a later flip back.
         self._steps_since_build = 0
 
         # STREAM placements (kv_host & co.) keep the resident cache buffer
@@ -286,22 +289,27 @@ class Executor:
         out_host = np.asarray(out)
         dt = time.perf_counter() - t0
         self.counters["decode_s"] += dt
-        # measured step-time EWMA for preemption's wait-side pricing; the
-        # first step after a (re)build is compile-dominated and skipped
+        # each warm step becomes a calibration observation on the Runtime:
+        # it updates the measured EWMA behind rt.decode_step_seconds (the
+        # preemption ledger's wait side) and logs predicted-vs-measured
+        # into rt.replay.  The first step after a (re)build is
+        # compile-dominated and skipped.
         self._steps_since_build += 1
         if self._steps_since_build > 1:
-            self._step_ewma = (
-                dt if self._step_ewma is None
-                else 0.8 * self._step_ewma + 0.2 * dt
+            self.rt.observe_decode_step(
+                self.cfg.batch_slots, self.cfg.max_len, dt
             )
         return out_host[0], out_host[1].astype(bool), new_state
 
     @property
     def measured_step_s(self) -> float | None:
-        """EWMA of observed decode-step wall time (None until the second
-        step after a jit (re)build) — the wait-side price the scheduler
-        prefers over the planner's analytic prediction."""
-        return self._step_ewma
+        """EWMA of observed decode-step wall time under the current
+        policy (None until the second step after a jit build feeds the
+        runtime) — the wait-side price preemption uses via
+        ``rt.decode_step_seconds``."""
+        return self.rt.measured_step_s(
+            self.cfg.batch_slots, self.cfg.max_len
+        )
 
     # -- prefill (admission) ----------------------------------------------
     def prefill(self, new, table) -> None:

@@ -385,10 +385,10 @@ class Server:
         spill_to, price_s = self.rt.preemption_price(
             self.engine.slot_bytes()
         )
-        # wait side: measured step-time EWMA once the loop is warm (the
-        # observed cost of waiting), the planner's analytic prediction
-        # before that
-        step_s = self.engine.measured_step_s or self.rt.decode_step_seconds(
+        # wait side: the runtime's decode-step price — the measured EWMA
+        # once the Executor's warm steps have fed it (the observed cost
+        # of waiting), the planner's analytic prediction before that.
+        step_s = self.rt.decode_step_seconds(
             self.cfg.batch_slots, self.cfg.max_len
         )
         natural_wait_s = step_s * min(

@@ -1,0 +1,345 @@
+"""The calibrated hardware model: provenance-tracked constants, the
+active-system registry, measurement fits, replay validation, and the
+drift gate.
+
+The invariant under test throughout: calibration changes *pricing only*.
+A calibrated system re-prices every planner/datapath decision, but the
+spec-sheet baseline (``repro.api.SPEC_SYSTEM``) is immutable, and
+nothing here touches computed values (the serve-layer tests assert the
+greedy-token side of that).
+"""
+
+import json
+import warnings
+
+import pytest
+
+from repro.api import SPEC_SYSTEM
+from repro.core.hardware import (
+    AXIS_LINK,
+    CALIBRATED_TERMS,
+    Link,
+    SystemSpec,
+    axis_bandwidth,
+    get_active_system,
+    link_for_axis,
+    set_active_system,
+)
+from repro.core.membench import Measurement, linear_fit
+from repro.core.replay import ReplayLog
+
+
+def _meas(nbytes, mean_s, name="m"):
+    return Measurement(name=name, mean_s=mean_s, min_s=mean_s,
+                       max_s=mean_s, std_s=0.0, repeats=1, nbytes=nbytes)
+
+
+class TestProvenance:
+    def test_every_term_defaults_to_spec(self):
+        sys_ = SystemSpec()
+        for term in CALIBRATED_TERMS:
+            assert sys_.provenance_of(term) == "spec", term
+            assert sys_.term_value(term) > 0
+
+    def test_with_measurements_marks_measured(self):
+        base = SystemSpec()
+        cal = base.with_measurements(hbm_bandwidth=100e9, hbm_latency=2e-6)
+        assert cal.provenance_of("hbm_bandwidth") == "measured"
+        assert cal.provenance_of("hbm_latency") == "measured"
+        assert cal.term_value("hbm_bandwidth") == 100e9
+        assert cal.chip.hbm_bandwidth == 100e9
+        # untouched terms keep spec provenance and spec values
+        assert cal.provenance_of("ici_link_bandwidth") == "spec"
+        assert cal.term_value("pcie_bandwidth") == base.term_value(
+            "pcie_bandwidth")
+
+    def test_with_overrides_marks_override(self):
+        cal = SystemSpec().with_overrides(dcn_bandwidth=5e9)
+        assert cal.provenance_of("dcn_bandwidth") == "override"
+        assert cal.term_value("dcn_bandwidth") == 5e9
+
+    def test_original_system_is_untouched(self):
+        base = SystemSpec()
+        before = base.term_value("hbm_bandwidth")
+        base.with_measurements(hbm_bandwidth=1e9)
+        assert base.term_value("hbm_bandwidth") == before
+        assert base.provenance_of("hbm_bandwidth") == "spec"
+
+    def test_unknown_term_raises_keyerror(self):
+        with pytest.raises(KeyError, match="unknown calibratable term"):
+            SystemSpec().with_measurements(warp_core_bandwidth=1.0)
+        with pytest.raises(KeyError):
+            SystemSpec().provenance_of("warp_core_bandwidth")
+
+    def test_non_positive_measurement_raises(self):
+        with pytest.raises(ValueError):
+            SystemSpec().with_measurements(hbm_bandwidth=0.0)
+        with pytest.raises(ValueError):
+            SystemSpec().with_measurements(hbm_latency=-1e-6)
+
+    def test_chained_derivations_accumulate(self):
+        cal = (SystemSpec()
+               .with_measurements(hbm_bandwidth=100e9)
+               .with_overrides(ici_link_bandwidth=10e9))
+        assert cal.provenance_of("hbm_bandwidth") == "measured"
+        assert cal.provenance_of("ici_link_bandwidth") == "override"
+        assert cal.term_value("hbm_bandwidth") == 100e9
+
+    def test_describe_terms_covers_every_term(self):
+        desc = SystemSpec().describe_terms()
+        assert set(desc) == set(CALIBRATED_TERMS)
+        for term, d in desc.items():
+            assert d["provenance"] == "spec"
+            assert d["value"] > 0
+
+
+class TestActiveSystemRegistry:
+    def test_default_active_system_is_the_spec_sheet(self):
+        assert get_active_system() is SPEC_SYSTEM
+
+    def test_set_returns_previous_and_installs(self):
+        cal = SPEC_SYSTEM.with_measurements(hbm_bandwidth=50e9)
+        prev = set_active_system(cal)
+        try:
+            assert prev is SPEC_SYSTEM
+            assert get_active_system() is cal
+        finally:
+            set_active_system(prev)
+        assert get_active_system() is SPEC_SYSTEM
+
+    def test_set_rejects_non_system(self):
+        with pytest.raises(TypeError):
+            set_active_system("819GB/s")
+
+    def test_datapath_defaults_resolve_to_active_system(self):
+        """A None system resolves at call time, so activating a
+        calibrated system re-prices module-level helpers."""
+        from repro.core.datapath import read_bound
+        from repro.core.hardware import MemoryTier
+
+        base = read_bound(MemoryTier.HBM).bandwidth
+        prev = set_active_system(
+            SPEC_SYSTEM.with_measurements(hbm_bandwidth=1e9))
+        try:
+            slow = read_bound(MemoryTier.HBM).bandwidth
+        finally:
+            set_active_system(prev)
+        assert slow == 1e9 and base > slow * 10
+
+
+class TestAxisLinks:
+    def test_donor_axes_are_mapped(self):
+        assert AXIS_LINK["donor"] == Link.ICI
+        assert AXIS_LINK["donor_pod"] == Link.DCN
+        assert link_for_axis("donor") == Link.ICI
+        assert link_for_axis("donor_pod") == Link.DCN
+
+    def test_unknown_axis_warns_once_then_falls_back_to_ici(self):
+        with pytest.warns(UserWarning, match="no AXIS_LINK entry"):
+            assert link_for_axis("zz_mystery_axis") == Link.ICI
+        # warn-once: the second lookup is silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert link_for_axis("zz_mystery_axis") == Link.ICI
+
+    def test_unknown_axis_raises_when_strict(self):
+        with pytest.raises(KeyError, match="zz_other_axis"):
+            link_for_axis("zz_other_axis", strict=True)
+
+    def test_axis_bandwidth_prices_under_given_system(self):
+        cal = SPEC_SYSTEM.with_measurements(dcn_bandwidth=7e9)
+        assert axis_bandwidth("pod", cal) == 7e9
+        assert axis_bandwidth("data") == SPEC_SYSTEM.link_bandwidth(Link.ICI)
+
+
+class TestLinearFit:
+    def test_recovers_latency_and_bandwidth(self):
+        lat, bw = 5e-6, 200e9
+        pts = [_meas(n, lat + n / bw) for n in (2**16, 2**20, 2**24)]
+        fit_lat, fit_bw = linear_fit(pts)
+        assert fit_lat == pytest.approx(lat, rel=1e-6)
+        assert fit_bw == pytest.approx(bw, rel=1e-6)
+
+    def test_single_point_falls_back_to_effective_bandwidth(self):
+        m = _meas(2**20, 1e-3)
+        lat, bw = linear_fit([m])
+        assert lat == 0.0
+        assert bw == pytest.approx(m.bandwidth)
+
+    def test_negative_intercept_clamped_to_zero(self):
+        # noisy sweep whose least-squares intercept would be negative
+        pts = [_meas(2**16, 1e-6), _meas(2**20, 6e-5)]
+        lat, bw = linear_fit(pts)
+        assert lat >= 0.0 and bw > 0
+
+
+class TestReplayLog:
+    def _log(self):
+        log = ReplayLog()
+        log.record("hbm_bandwidth", "read[1MB]", 1e-3, 2e-3,
+                   nbytes=2**20, limiting_link="hbm", source="test")
+        log.record("hbm_bandwidth", "read[16MB]", 1.0e-2, 1.1e-2,
+                   nbytes=2**24, limiting_link="hbm", source="test")
+        log.record("dcn_bandwidth", "permute[1MB]", 1e-3, 1e-3,
+                   nbytes=2**20, limiting_link="dcn", source="test")
+        return log
+
+    def test_rel_error_and_per_term_aggregates(self):
+        errs = self._log().per_term_error()
+        hbm = errs["hbm_bandwidth"]
+        assert hbm.count == 2
+        assert hbm.mean_rel_error == pytest.approx((0.5 + 0.1 / 1.1) / 2)
+        assert hbm.max_rel_error == pytest.approx(0.5)
+        assert hbm.worst_name == "read[1MB]"
+        assert errs["dcn_bandwidth"].mean_rel_error == pytest.approx(0.0)
+
+    def test_gate_passes_and_fails(self):
+        log = self._log()
+        assert log.gate(1.0) == []
+        violations = log.gate(0.2)
+        assert len(violations) == 1
+        assert "hbm_bandwidth" in violations[0]
+        # per-term override tightens just one term
+        assert len(log.gate(1.0, {"dcn_bandwidth": 0.0})) == 0
+        assert len(log.gate(1.0, {"hbm_bandwidth": 0.1})) == 1
+
+    def test_non_positive_measurements_are_dropped(self):
+        log = ReplayLog()
+        log.record("t", "bad", 1e-3, 0.0)
+        assert len(log) == 0
+
+    def test_json_round_trip_preserves_aggregates(self):
+        log = self._log()
+        back = ReplayLog.from_json(log.to_json())
+        assert len(back) == len(log)
+        for term, err in log.per_term_error().items():
+            b = back.per_term_error()[term]
+            assert b.count == err.count
+            assert b.mean_rel_error == pytest.approx(err.mean_rel_error)
+            assert b.worst_name == err.worst_name
+
+    def test_record_cap_keeps_aggregates_exact(self):
+        log = ReplayLog()
+        n = 300     # past the per-term verbatim cap
+        for i in range(n):
+            log.record("t", f"r{i}", 2.0, 1.0)
+        err = log.per_term_error()["t"]
+        assert err.count == n
+        assert err.mean_rel_error == pytest.approx(1.0)
+        assert len(log.records("t")) < n
+
+
+class TestCalibrationObject:
+    def _cal(self):
+        from repro.core.calibration import Calibration, TermCalibration
+
+        cal = Calibration(backend="cpu", num_devices=1,
+                          created="2026-08-08T00:00:00")
+        cal.terms["hbm_bandwidth"] = TermCalibration(
+            term="hbm_bandwidth", spec=819e9, measured=12e9,
+            unit="B/s", source="read_sweep")
+        cal.replay.record("hbm_bandwidth", "read[1MB]", 1e-4, 1.2e-4,
+                          nbytes=2**20, limiting_link="hbm",
+                          source="calibrate")
+        return cal
+
+    def test_apply_rewrites_terms_with_measured_provenance(self):
+        calibrated = self._cal().apply(SPEC_SYSTEM)
+        assert calibrated.term_value("hbm_bandwidth") == 12e9
+        assert calibrated.provenance_of("hbm_bandwidth") == "measured"
+        assert calibrated.provenance_of("ici_link_bandwidth") == "spec"
+
+    def test_json_round_trip(self, tmp_path):
+        from repro.core.calibration import Calibration
+
+        path = self._cal().save(tmp_path / "calibration.json")
+        obj = json.loads(path.read_text())
+        assert obj["format_version"] == 1
+        assert obj["provenance"] == {"hbm_bandwidth": "measured"}
+        back = Calibration.load(path)
+        assert back.backend == "cpu"
+        assert back.terms["hbm_bandwidth"].measured == 12e9
+        assert back.terms["hbm_bandwidth"].ratio == pytest.approx(
+            12e9 / 819e9)
+        assert len(back.replay) == 1
+
+    def test_newer_format_is_rejected(self):
+        from repro.core.calibration import Calibration
+
+        with pytest.raises(ValueError, match="newer"):
+            Calibration.from_json({"format_version": 99})
+
+    def test_summary_names_uncalibrated_terms(self):
+        text = self._cal().summary()
+        assert "hbm_bandwidth" in text
+        assert "spec provenance kept" in text
+        assert "ici_link_bandwidth" in text
+
+
+class TestCalibrateEndToEnd:
+    """A real (tiny) calibration run on this host's devices."""
+
+    @pytest.fixture(scope="class")
+    def cal(self):
+        from repro.core.calibration import calibrate
+
+        return calibrate(sizes=(2**14, 2**17), repeats=2)
+
+    def test_measures_hbm_and_replays(self, cal):
+        assert "hbm_bandwidth" in cal.terms
+        assert cal.terms["hbm_bandwidth"].measured > 0
+        assert len(cal.replay) > 0
+        assert "hbm_bandwidth" in cal.replay.per_term_error()
+
+    def test_calibration_moves_planner_predictions(self, cal):
+        """The acceptance criterion: the planner prices differently under
+        the calibrated system than under the spec sheet (a CPU host is
+        nowhere near 819 GB/s of HBM bandwidth)."""
+        from repro.core.planner import predict, train_profile
+        from repro.core.placement import get_policy
+
+        prof = train_profile(
+            name="cal-test", param_bytes=2 * 1e9, step_flops=6e12,
+            activation_bytes=2**28, num_chips=4,
+            data_axis_size=4, pod_axis_size=1,
+        )
+        policy = get_policy("hbm_resident")
+        spec_pred = predict(prof, policy, SPEC_SYSTEM)
+        cal_pred = predict(prof, policy, cal.apply(SPEC_SYSTEM))
+        assert cal_pred.step_s != spec_pred.step_s
+        assert cal_pred.step_s > spec_pred.step_s  # slower than the sheet
+
+    def test_load_or_calibrate_round_trip(self, cal, tmp_path):
+        from repro.core.calibration import Calibration, load_or_calibrate
+
+        path = tmp_path / "calibration.json"
+        cal.save(path)
+        loaded = load_or_calibrate(path)
+        assert isinstance(loaded, Calibration)
+        assert set(loaded.terms) == set(cal.terms)
+        # loading must not have touched the active system
+        assert get_active_system() is SPEC_SYSTEM
+
+
+class TestRuntimeCalibrate:
+    def test_runtime_calibrate_writes_json_and_reprices(self, tmp_path):
+        from repro.api import Runtime
+        from repro.models import get_smoke_bundle
+
+        bundle = get_smoke_bundle("olmo-1b")
+        rt = Runtime(bundle)
+        assert rt.system is SPEC_SYSTEM
+        analytic = rt.decode_step_seconds(2, 32)
+
+        path = tmp_path / "calibration.json"
+        cal = rt.calibrate(path, activate=False,
+                           sizes=(2**14, 2**17), repeats=2)
+        assert path.exists(), "calibrate() must persist calibration.json"
+        assert rt.calibration is cal
+        assert rt.system.provenance_of("hbm_bandwidth") == "measured"
+        # activate=False leaves the process-wide system alone
+        assert get_active_system() is SPEC_SYSTEM
+        # cached analytic estimates were dropped and re-priced
+        assert rt.decode_step_seconds(2, 32) != analytic
+        # calibration replay records flowed into the runtime's log
+        assert len(rt.replay) > 0

@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings
 
 from repro.core import (
-    DEFAULT_SYSTEM,
+    get_active_system,
     Link,
     MemoryTier,
     PlacementPolicy,
@@ -96,7 +96,7 @@ class TestDatapathInvariants:
     @given(tier_st)
     def test_migration_crossover_positive(self, tier):
         x = migration_crossover_touches(tier)
-        if read_bound(tier).bandwidth < DEFAULT_SYSTEM.chip.hbm_bandwidth:
+        if read_bound(tier).bandwidth < get_active_system().chip.hbm_bandwidth:
             assert x > 0
             # at crossover, streaming == migrate+resident (paper Fig. 4)
             nbytes = 1e9

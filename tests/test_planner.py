@@ -9,7 +9,7 @@ drift between ``predict`` and ``read_bound``/``copy_bound``/
 import pytest
 
 from repro.core import (
-    DEFAULT_SYSTEM,
+    get_active_system,
     CollectiveTerm,
     Link,
     MemoryTier,
@@ -81,8 +81,8 @@ class TestPredictMatchesDatapath:
         )
         cb = copy_bound(MemoryTier.HOST, MemoryTier.HBM)
         assert cb.bandwidth == pytest.approx(
-            min(DEFAULT_SYSTEM.link_bandwidth(Link.PCIE),
-                DEFAULT_SYSTEM.link_bandwidth(Link.HBM_BUS))
+            min(get_active_system().link_bandwidth(Link.PCIE),
+                get_active_system().link_bandwidth(Link.HBM_BUS))
         )
 
     def test_peer_policy_bounded_by_ici(self):
@@ -92,7 +92,7 @@ class TestPredictMatchesDatapath:
         assert rb.limiting_link == Link.ICI
         assert p.ici_s == pytest.approx(1.0 * GB / rb.bandwidth + rb.latency)
         # peer in-place reads never beat the ICI link
-        assert 1.0 * GB / p.ici_s <= DEFAULT_SYSTEM.link_bandwidth(Link.ICI)
+        assert 1.0 * GB / p.ici_s <= get_active_system().link_bandwidth(Link.ICI)
 
     def test_remote_policy_bounded_by_dcn(self):
         p = predict(_kv_profile(), KV_REMOTE_HBM)

@@ -243,6 +243,103 @@ class TestStatsSurface:
         assert tp["decode_tps"] > 0
 
 
+class TestCalibrationObservations:
+    """The Executor's decode-step timings as calibration observations:
+    the EWMA lives on the Runtime (keyed by batch/len/policy), the first
+    step after every executor (re)build is warm-up and never observed,
+    and pricing falls back to the analytic prediction until a real
+    measurement lands."""
+
+    def test_analytic_fallback_before_any_observation(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=2, max_len=32), params)
+        assert srv.rt.measured_step_s(2, 32) is None
+        assert srv.engine.measured_step_s is None
+        step_s = srv.rt.decode_step_seconds(2, 32)
+        assert step_s > 0.0
+        assert step_s == srv.rt._analytic_step_seconds(2, 32)
+
+    def test_first_step_after_build_is_warmup(self, bundle, params):
+        """The compile-laden first decode step never pollutes the EWMA:
+        no observation lands until the executor's second step."""
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        srv.add_request(_req(0, n=6))
+        while srv.has_work() and srv.engine._steps_since_build < 1:
+            srv.step()
+        assert srv.engine._steps_since_build == 1
+        assert srv.rt.measured_step_s(1, 32) is None
+        while srv.has_work() and srv.engine._steps_since_build < 2:
+            srv.step()
+        assert srv.rt.measured_step_s(1, 32) is not None
+        assert srv.engine.measured_step_s == srv.rt.measured_step_s(1, 32)
+
+    def test_ewma_converges_and_prices_preemption(self, bundle, params):
+        """Feeding a constant measured step time converges the EWMA to
+        it, and decode_step_seconds — the scheduler's preemption-ledger
+        wait price — returns the measured value, not the analytic one."""
+        srv = Server(bundle, ServeConfig(batch_slots=2, max_len=32), params)
+        analytic = srv.rt.decode_step_seconds(2, 32)
+        first = srv.rt.observe_decode_step(2, 32, 0.025)
+        assert first == pytest.approx(0.025)    # first observation seeds
+        for _ in range(60):
+            srv.rt.observe_decode_step(2, 32, 0.025)
+        assert srv.rt.decode_step_seconds(2, 32) == pytest.approx(
+            0.025, rel=1e-6)
+        assert srv.rt.decode_step_seconds(2, 32) != analytic
+        # observations land in the replay log under the decode_step term
+        err = srv.rt.replay.per_term_error().get("decode_step")
+        assert err is not None and err.count == 61
+        # other shapes still fall back to the analytic prediction
+        assert srv.rt.measured_step_s(1, 16) is None
+
+    def test_nonpositive_observation_is_ignored(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=2, max_len=32), params)
+        srv.rt.observe_decode_step(2, 32, 0.0)
+        srv.rt.observe_decode_step(2, 32, -1.0)
+        assert srv.rt.measured_step_s(2, 32) is None
+
+    def test_serve_run_feeds_the_runtime(self, bundle, params):
+        """End to end: a real serve run leaves a measured EWMA and
+        replay records on the runtime."""
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32), params)
+        srv.add_request(_req(0, n=8))
+        srv.run_until_done(200)
+        measured = srv.rt.measured_step_s(1, 32)
+        assert measured is not None and measured > 0
+        assert "decode_step" in srv.rt.replay.per_term_error()
+
+    def test_tokens_bit_identical_under_calibration(self, bundle, params):
+        """The acceptance criterion: activating a measurement-calibrated
+        system re-prices scheduling but cannot move a single greedy
+        token, even through a preemption-heavy oversubscribed run."""
+        from repro.core.hardware import get_active_system, set_active_system
+
+        cfg = lambda: ServeConfig(batch_slots=2, max_len=32, preempt=True,
+                                  preempt_wait=2)
+        reqs = lambda: [_req(i, n=8 + 4 * i, extra=i) for i in range(4)]
+
+        baseline = Server(bundle, cfg(), params)
+        base_reqs = reqs()
+        baseline.add_requests(base_reqs)
+        baseline.run_until_done(500)
+
+        spec = get_active_system()
+        calibrated = spec.with_measurements(
+            hbm_bandwidth=8e9, ici_link_bandwidth=1e9, pcie_bandwidth=2e9)
+        prev = set_active_system(calibrated)
+        try:
+            srv = Server(bundle, cfg(), params)
+            assert srv.rt.system is calibrated   # runtime adopted it
+            assert srv.rt.system.provenance_of("hbm_bandwidth") == "measured"
+            cal_reqs = reqs()
+            srv.add_requests(cal_reqs)
+            srv.run_until_done(500)
+        finally:
+            set_active_system(prev)
+        for b, c in zip(base_reqs, cal_reqs):
+            assert b.done and c.done
+            assert c.out_tokens == b.out_tokens, c.rid
+
+
 class TestAsyncScheduler:
     def test_submit_stream_drain(self, bundle, params):
         """The asyncio front end: concurrent clients submit (absorbing

@@ -57,12 +57,21 @@ PATTERNS = {
     # Server.stats is a method now; dict-style access marks code still
     # written against the old stats attribute
     ".stats[": re.compile(r"\.stats\["),
+    # The calibrated hardware model (ISSUE 7) retired direct use of the
+    # spec-sheet singleton: pricing must flow through the Runtime facade
+    # or get_active_system() so a --calibration run re-prices everything.
+    # repro.api re-exports the baseline as SPEC_SYSTEM for explicit
+    # spec-vs-calibrated comparisons.
+    "DEFAULT_SYSTEM": re.compile(r"\bDEFAULT_SYSTEM\b"),
 }
 
 #: modules that define/shim the deprecated names or implement the facade
 ALLOWLIST = {
     "src/repro/core/placement.py",
     "src/repro/core/__init__.py",
+    # hardware.py defines DEFAULT_SYSTEM; api.py is its one sanctioned
+    # consumer (the SPEC_SYSTEM re-export for spec-vs-calibrated reports)
+    "src/repro/core/hardware.py",
     "src/repro/models/sharding.py",
     "src/repro/models/__init__.py",
     "src/repro/api.py",

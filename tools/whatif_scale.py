@@ -14,7 +14,7 @@ import argparse
 
 from repro.configs import SHAPES, get_config
 from repro.core.datapath import wire_bytes
-from repro.core.hardware import DEFAULT_SYSTEM
+from repro.core.hardware import get_active_system
 from repro.models.model_zoo import ModelBundle
 
 
@@ -27,8 +27,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     bundle = ModelBundle(cfg)
     shape = SHAPES["train_4k"]
-    chip = DEFAULT_SYSTEM.chip
-    pod_chips = DEFAULT_SYSTEM.pod.num_chips
+    system = get_active_system()
+    chip = system.chip
+    pod_chips = system.pod.num_chips
 
     params = cfg.num_params()
     grad_bytes = params * args.grad_bytes_per_param
