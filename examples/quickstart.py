@@ -36,7 +36,8 @@ def main() -> None:
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"{args.arch} (reduced): {n_params/1e6:.2f}M params")
 
-    step = jax.jit(make_train_step(bundle, mesh, tcfg), donate_argnums=(0, 1))
+    step = jax.jit(make_train_step(bundle, mesh, tcfg),
+                   donate_argnums=(0, 1))  # repro: lint-disable=donate-without-out-shardings
     data = SyntheticLM(
         DataConfig(vocab=bundle.cfg.vocab, seq_len=32, global_batch=8,
                    structure=1.0)

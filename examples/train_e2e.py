@@ -85,7 +85,8 @@ def main() -> None:
     log.info("%s: %.1fM params, %d steps, batch %d x seq %d",
              cfg.name, n / 1e6, steps, batch, seq)
 
-    step_fn = jax.jit(make_train_step(bundle, mesh, tcfg), donate_argnums=(0, 1))
+    step_fn = jax.jit(make_train_step(bundle, mesh, tcfg),
+                      donate_argnums=(0, 1))  # repro: lint-disable=donate-without-out-shardings
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
                                   global_batch=batch, structure=0.9))
     it = Prefetcher(data)

@@ -1,0 +1,48 @@
+"""Static analysis for the data-movement discipline.
+
+Two layers, one motivation (Schieffer et al., PAPERS.md): transparent
+unified-memory access makes unintended transfers *silent* — every aliasing
+race and stray copy this repo has shipped (PR 2's ``jnp.asarray`` zero-copy
+race, PR 3's deferred-upload race, PR 7's ICI mispricing) was found at
+runtime by flaky tests.  This package checks the invariants statically:
+
+* :mod:`repro.analysis.hlo_audit` — diff the data movement XLA actually
+  compiled (``compiled.as_text()``: copies, host memory spaces, donation
+  aliasing) against the planner's expected byte plan for the policy.
+* :mod:`repro.analysis.lint` — an ``ast``-based rule registry encoding
+  the repo coding discipline (host-mirror aliasing, blocking transfers in
+  the serve hot path, donation without pinned out_shardings, deprecation
+  hygiene), with per-rule allowlists and ``# repro: lint-disable=<rule>``
+  pragmas.
+* :mod:`repro.analysis.warnings_registry` — the shared warn-once registry
+  backing every once-per-process warning in the repo, resettable so tests
+  stop depending on execution order.
+
+Only the warnings registry is imported eagerly: core modules depend on it,
+so ``hlo_audit``/``lint`` (which import core back) load lazily.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.warnings_registry import (  # noqa: F401
+    reset_warnings,
+    warn_once,
+    warned,
+)
+
+_LAZY = {
+    "hlo_audit": "repro.analysis.hlo_audit",
+    "lint": "repro.analysis.lint",
+}
+
+__all__ = ["warn_once", "warned", "reset_warnings", "hlo_audit", "lint"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name])
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

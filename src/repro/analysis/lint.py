@@ -1,0 +1,520 @@
+"""Layer 2: an ``ast`` lint framework encoding the aliasing discipline.
+
+Successor to ``tools/check_deprecated.py``: instead of one grep script,
+a registry of rules, each with its own allowlist, checked over the parsed
+AST (semantic rules) or the raw source (migrated pattern rules).
+
+Suppression:
+
+* per-line — trailing ``# repro: lint-disable=<rule>[,<rule>...]`` on the
+  offending line;
+* per-file — the same pragma alone on a comment line anywhere in the file;
+* per-rule allowlist — repo-relative paths baked into the rule (for the
+  modules that *define* a deprecated shim, say).
+
+Rule catalog (see docs/analysis.md):
+
+* ``mutated-host-mirror-alias`` — ``jnp.asarray``/``np.asarray`` zero-copy
+  construction from a buffer that the same class later mutates: the PR 2/3
+  race shape (the device view aliases host memory on CPU backends, so the
+  mutation changes data already handed to a dispatch).
+* ``blocking-transfer-in-hot-path`` — ``.item()`` / ``np.asarray`` /
+  ``np.array`` / ``jax.device_get`` inside serve step/decode code: each is
+  a synchronous host↔device round trip on the once-per-token datapath.
+* ``donate-without-out-shardings`` — ``donate_argnums`` without pinned
+  ``out_shardings``: XLA is free to move the result, silently breaking the
+  placement the planner priced.
+* ``deprecated-*`` — the migrated deprecation-hygiene patterns.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable, Iterator
+
+__all__ = [
+    "LintViolation",
+    "Rule",
+    "PatternRule",
+    "register",
+    "registered_rules",
+    "get_rule",
+    "lint_source",
+    "lint_file",
+    "lint_repo",
+    "SCAN_DIRS",
+]
+
+SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*lint-disable=([\w\-,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str          # repo-relative posix path ("<string>" for lint_source)
+    line: int
+    message: str
+    severity: str = "error"
+    snippet: str = ""
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """One lint rule.  Subclasses implement :meth:`check`."""
+
+    name: str = ""
+    description: str = ""
+    severity: str = "error"
+    #: repo-relative paths exempt from this rule
+    allow: frozenset[str] = frozenset()
+    #: if set, only paths matching this regex are checked
+    path_filter: re.Pattern | None = None
+
+    def applies(self, relpath: str) -> bool:
+        if relpath in self.allow:
+            return False
+        if self.path_filter is not None and not self.path_filter.search(relpath):
+            return False
+        return True
+
+    def check(
+        self, relpath: str, source: str, tree: ast.AST | None
+    ) -> Iterable[LintViolation]:
+        raise NotImplementedError
+
+    def _violation(
+        self, relpath: str, line: int, message: str, snippet: str = ""
+    ) -> LintViolation:
+        return LintViolation(
+            rule=self.name,
+            path=relpath,
+            line=line,
+            message=message,
+            severity=self.severity,
+            snippet=snippet,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if not rule.name:
+        raise ValueError("rule needs a name")
+    if rule.name in _RULES:
+        raise ValueError(f"duplicate lint rule {rule.name!r}")
+    _RULES[rule.name] = rule
+    return rule
+
+
+def registered_rules() -> dict[str, Rule]:
+    return dict(_RULES)
+
+
+def get_rule(name: str) -> Rule:
+    return _RULES[name]
+
+
+# ---------------------------------------------------------------------------
+# Pragma handling
+# ---------------------------------------------------------------------------
+
+def _parse_pragmas(source: str) -> tuple[set[str], dict[int, set[str]]]:
+    """(file-level disabled rules, line -> disabled rules)."""
+    file_level: set[str] = set()
+    per_line: dict[int, set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        if line.strip().startswith("#"):
+            file_level |= rules
+        else:
+            per_line.setdefault(lineno, set()).update(rules)
+    return file_level, per_line
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def lint_source(
+    source: str,
+    relpath: str = "<string>",
+    rules: Iterable[Rule] | None = None,
+) -> list[LintViolation]:
+    """Lint one source blob; pragma- and allowlist-filtered."""
+    active = list(rules) if rules is not None else list(_RULES.values())
+    file_off, line_off = _parse_pragmas(source)
+    try:
+        tree: ast.AST | None = ast.parse(source)
+    except SyntaxError:
+        tree = None
+    out: list[LintViolation] = []
+    for rule in active:
+        if not rule.applies(relpath):
+            continue
+        if rule.name in file_off:
+            continue
+        for v in rule.check(relpath, source, tree):
+            if rule.name in line_off.get(v.line, ()):
+                continue
+            out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def lint_file(
+    path: pathlib.Path,
+    root: pathlib.Path,
+    rules: Iterable[Rule] | None = None,
+) -> list[LintViolation]:
+    rel = path.resolve().relative_to(root.resolve()).as_posix()
+    return lint_source(path.read_text(), rel, rules)
+
+
+def lint_repo(
+    root: pathlib.Path,
+    dirs: Iterable[str] = SCAN_DIRS,
+    rules: Iterable[Rule] | None = None,
+) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for top in dirs:
+        base = root / top
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            out.extend(lint_file(path, root, rules))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+def _call_name(node: ast.Call) -> str:
+    """Dotted name of a call target (``jnp.asarray`` / ``float``)."""
+    f = node.func
+    parts: list[str] = []
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    return ".".join(reversed(parts))
+
+
+def _store_key(target: ast.expr) -> str | None:
+    """Key of the buffer a subscript/attr mutation writes into.
+
+    ``self.x[i] = v`` → ``self.x``; ``toks[i] = v`` → ``toks``;
+    nested subscripts peel to the base.
+    """
+    t = target
+    while isinstance(t, ast.Subscript):
+        t = t.value
+    if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+            and t.value.id == "self":
+        return f"self.{t.attr}"
+    if isinstance(t, ast.Name):
+        return t.id
+    return None
+
+
+def _walk_functions(cls: ast.ClassDef) -> Iterator[ast.FunctionDef]:
+    """Every function in the class, nested closures included."""
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``fn``'s body excluding nested function/lambda subtrees, so a
+    closure's locals aren't conflated with the enclosing scope's."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# Rule: mutated-host-mirror-alias
+# ---------------------------------------------------------------------------
+
+_ALIAS_CTORS = {"jnp.asarray", "np.asarray", "numpy.asarray", "jax.numpy.asarray"}
+
+
+class MutatedHostMirrorAlias(Rule):
+    """Zero-copy device view of a host buffer the same class mutates.
+
+    ``jnp.asarray(host_buf)`` on CPU backends aliases ``host_buf``'s
+    memory; mutating it afterwards changes data already captured by a
+    dispatch — the PR 2 serve-loop race and the PR 3 deferred-upload race.
+    Self-attribute sources are flagged on mutation anywhere in the class
+    (method call order is not statically known); local-name sources only
+    when mutated *after* the aliasing call in the same function.
+    """
+
+    name = "mutated-host-mirror-alias"
+    description = (
+        "jnp/np.asarray zero-copy view of a buffer that is later mutated "
+        "in the same class"
+    )
+
+    def check(self, relpath, source, tree):
+        if tree is None:
+            return
+        for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+            # (source key, alias lineno, enclosing function) per asarray call
+            aliases: list[tuple[str, int, str]] = []
+            # mutation key -> [(lineno, funcname)]
+            mutations: dict[str, list[tuple[int, str]]] = {}
+            for fn in _walk_functions(cls):
+                for node in _own_nodes(fn):
+                    if isinstance(node, ast.Call) and node.args:
+                        if _call_name(node) in _ALIAS_CTORS:
+                            key = _store_key(node.args[0])
+                            if key is not None and not isinstance(
+                                node.args[0], ast.Subscript
+                            ):
+                                aliases.append((key, node.lineno, fn.name))
+                    targets: list[ast.expr] = []
+                    if isinstance(node, ast.Assign):
+                        targets = [
+                            t for t in node.targets
+                            if isinstance(t, ast.Subscript)
+                        ]
+                    elif isinstance(node, ast.AugAssign) and isinstance(
+                        node.target, (ast.Subscript, ast.Attribute)
+                    ):
+                        targets = [node.target]
+                    for t in targets:
+                        key = _store_key(t)
+                        if key is not None:
+                            mutations.setdefault(key, []).append(
+                                (node.lineno, fn.name)
+                            )
+            for key, lineno, fname in aliases:
+                muts = mutations.get(key, [])
+                if key.startswith("self."):
+                    hits = muts  # any order: method call order unknown
+                else:
+                    hits = [
+                        (ln, fn) for ln, fn in muts
+                        if fn == fname and ln > lineno
+                    ]
+                if hits:
+                    mln, mfn = hits[0]
+                    yield self._violation(
+                        relpath, lineno,
+                        f"zero-copy view of {key!r} aliases host memory "
+                        f"mutated at line {mln} (in {mfn}); copy explicitly "
+                        f"or mutate before constructing the view",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# Rule: blocking-transfer-in-hot-path
+# ---------------------------------------------------------------------------
+
+_BLOCKING_CALLS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get",
+}
+#: scalar casts that synchronize when fed a device array
+_CAST_CALLS = {"float", "int"}
+#: a hot function is named (or suffixed) step/decode; builders like
+#: _build_steps are not on the per-token path
+_HOT_FN_RE = re.compile(r"(?:^|_)(?:step|decode)$")
+
+
+class BlockingTransferInHotPath(Rule):
+    """Synchronous device→host fetch on the serve per-token path.
+
+    Each ``.item()`` / ``np.asarray`` inside a step/decode function is a
+    blocking host round trip per token — the exact traffic class the
+    zero-copy serve rebuild (PR 3) removed.  The one sanctioned fetch (the
+    single (B,) token readback) carries a pragma.
+    """
+
+    name = "blocking-transfer-in-hot-path"
+    description = (
+        ".item()/float()/np.asarray/jax.device_get inside serve "
+        "step/decode code"
+    )
+    path_filter = re.compile(r"^src/repro/serve/")
+
+    def check(self, relpath, source, tree):
+        if tree is None:
+            return
+        fns = [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and _HOT_FN_RE.search(n.name)
+        ]
+        for fn in fns:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                cname = _call_name(node)
+                hit = None
+                if cname.endswith(".item"):
+                    hit = ".item()"
+                elif cname in _BLOCKING_CALLS:
+                    hit = f"{cname}()"
+                elif cname in _CAST_CALLS and node.args:
+                    hit = f"{cname}()"
+                if hit:
+                    yield self._violation(
+                        relpath, node.lineno,
+                        f"{hit} in {fn.name}() blocks on a host↔device "
+                        f"round trip on the per-token path; batch the "
+                        f"fetch or keep it on device",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# Rule: donate-without-out-shardings
+# ---------------------------------------------------------------------------
+
+class DonateWithoutOutShardings(Rule):
+    """``donate_argnums`` without pinned ``out_shardings``.
+
+    Donation lets XLA reuse input buffers for outputs — but without
+    ``out_shardings`` the output placement is XLA's choice, so the buffer
+    the planner placed deliberately can come back on a different tier.
+    The serve Executor always pins both; everyone else must too (or
+    pragma the call if the output placement is genuinely don't-care).
+    """
+
+    name = "donate-without-out-shardings"
+    description = "donate_argnums jit call missing pinned out_shardings"
+
+    def check(self, relpath, source, tree):
+        if tree is None:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kws = {k.arg for k in node.keywords if k.arg}
+            if ("donate_argnums" in kws or "donate_argnames" in kws) \
+                    and "out_shardings" not in kws:
+                # anchor to the donate_argnums keyword itself so a
+                # same-line pragma works on multi-line jit calls
+                donate_kw = next(
+                    k for k in node.keywords
+                    if k.arg in ("donate_argnums", "donate_argnames")
+                )
+                yield self._violation(
+                    relpath, donate_kw.value.lineno,
+                    "donate_argnums without out_shardings: XLA may "
+                    "re-place the donated result off the planner-chosen "
+                    "tier; pin out_shardings (or pragma if placement is "
+                    "genuinely don't-care)",
+                )
+
+
+# ---------------------------------------------------------------------------
+# Migrated pattern rules (ex tools/check_deprecated.py)
+# ---------------------------------------------------------------------------
+
+class PatternRule(Rule):
+    """Regex-over-source rule (comment text stripped per line)."""
+
+    def __init__(
+        self,
+        name: str,
+        pattern: str,
+        message: str,
+        allow: Iterable[str] = (),
+    ):
+        self.name = name
+        self.description = message
+        self.pattern = re.compile(pattern)
+        self.message = message
+        self.allow = frozenset(allow)
+
+    def check(self, relpath, source, tree):
+        for lineno, line in enumerate(source.splitlines(), start=1):
+            code = line.split("#", 1)[0]
+            if self.pattern.search(code):
+                yield self._violation(
+                    relpath, lineno, self.message, snippet=line.strip()
+                )
+
+
+#: shim-defining modules + sanctioned consumers, carried over verbatim
+#: from the old check_deprecated ALLOWLIST
+_DEPRECATION_ALLOW = frozenset({
+    "src/repro/core/placement.py",
+    "src/repro/core/__init__.py",
+    "src/repro/core/hardware.py",
+    "src/repro/models/sharding.py",
+    "src/repro/models/__init__.py",
+    "src/repro/api.py",
+    "tests/test_placement_api.py",
+    "src/repro/serve/__init__.py",
+    "src/repro/serve/engine.py",
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/sampling.py",
+    "src/repro/serve/state.py",
+    "src/repro/analysis/lint.py",
+    "tools/check_deprecated.py",
+})
+
+register(MutatedHostMirrorAlias())
+register(BlockingTransferInHotPath())
+register(DonateWithoutOutShardings())
+register(PatternRule(
+    "deprecated-policies", r"\bPOLICIES\b",
+    "POLICIES is deprecated: use registered_policies()/get_policy()/"
+    "parse_policy()", _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "deprecated-policy-specs", r"\bpolicy_specs\b",
+    "policy_specs is deprecated: use Runtime.specs / Runtime.realize",
+    _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "deprecated-put-like", r"\bput_like\b",
+    "put_like is deprecated: use Runtime.realize", _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "deprecated-engine-import",
+    r"(from\s+repro\.serve\.engine\s+import"
+    r"|import\s+repro\.serve\.engine"
+    r"|\brepro\.serve\.engine\.)",
+    "import the repro.serve package, not the engine module (Executor-only "
+    "now; Request/ServeConfig/Server live in the scheduler layer)",
+    _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "deprecated-stats-dict", r"\.stats\[",
+    "Server.stats is a method now: call .stats(), not .stats[...]",
+    _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "deprecated-default-system", r"\bDEFAULT_SYSTEM\b",
+    "DEFAULT_SYSTEM is retired: price through Runtime / "
+    "get_active_system() so --calibration re-prices everything "
+    "(repro.api re-exports SPEC_SYSTEM for explicit comparisons)",
+    _DEPRECATION_ALLOW,
+))

@@ -1,0 +1,65 @@
+"""Shared warn-once registry.
+
+Every once-per-process warning in the repo (deprecation shims, unknown
+mesh-axis link fallbacks, the encdec decode-replay slow-path notice) used
+to keep its own module-level ``set`` — so whether a test observed the
+warning depended on which test ran first.  They all register here instead:
+one keyed registry, resettable by the autouse test fixture in
+``tests/conftest.py``.
+
+Keys are namespaced strings, e.g. ``axis_link:donor``,
+``deprecated:<shim name>``, ``decode_replay:seamless-m4t``.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings as _warnings
+
+_LOCK = threading.Lock()
+_SEEN: set[str] = set()
+
+
+def warn_once(
+    key: str,
+    message: str,
+    category: type[Warning] = UserWarning,
+    stacklevel: int = 3,
+) -> bool:
+    """Emit ``message`` the first time ``key`` is seen; return whether the
+    warning fired.  Thread-safe; reset via :func:`reset_warnings`."""
+    with _LOCK:
+        if key in _SEEN:
+            return False
+        _SEEN.add(key)
+    _warnings.warn(message, category, stacklevel=stacklevel)
+    return True
+
+
+def warned(key: str) -> bool:
+    """Has ``key`` fired since the last reset?"""
+    with _LOCK:
+        return key in _SEEN
+
+
+def mark(key: str) -> bool:
+    """Register ``key`` without emitting anything (for once-only side
+    effects that aren't ``warnings.warn`` — e.g. a log line).  Returns
+    True the first time, False after."""
+    with _LOCK:
+        if key in _SEEN:
+            return False
+        _SEEN.add(key)
+        return True
+
+
+def reset_warnings(prefix: str | None = None) -> None:
+    """Forget fired keys (all, or those under ``prefix:``/exact match)."""
+    with _LOCK:
+        if prefix is None:
+            _SEEN.clear()
+        else:
+            drop = {
+                k for k in _SEEN if k == prefix or k.startswith(prefix + ":")
+            }
+            _SEEN.difference_update(drop)

@@ -466,6 +466,80 @@ class Runtime:
         policy?  (STREAM placements must keep their resident buffer.)"""
         return donation_compatible(self.policy, parse_role(role))
 
+    # -- static data-movement audit ----------------------------------------
+    def audit(
+        self,
+        target,
+        arg_roles: Mapping[str, "Role | str"],
+        *,
+        donated: Iterable[str] = (),
+        host_bytes_allowed: float = 0.0,
+        workload=None,
+        tolerance: float = 0.5,
+        label: str = "",
+    ):
+        """Diff a compiled executable's data movement against this policy.
+
+        ``target`` is a jax ``Compiled`` (anything with ``as_text()``) or
+        raw HLO text.  ``arg_roles`` maps jit argument names (the roots of
+        the ``op_name`` arg paths in the entry parameters, e.g.
+        ``{"caches": Role.KV_CACHE, "p": Role.PARAMS}``) to planner roles;
+        ``donated`` names the arguments the call actually donates.  A
+        donation-compatible donated argument must appear in the module's
+        ``input_output_alias`` header (else ``missed-donation``); an
+        argument the policy forbids donating (STREAM) must not
+        (``forbidden-donation``).  Host↔device traffic beyond
+        ``host_bytes_allowed`` is ``stray-host-transfer`` — serve decode's
+        allowance is the one (B,) token vector each way of Fig. 17.  With
+        a planner ``workload`` (:class:`~repro.core.planner.
+        WorkloadProfile`), each role's observed parameter bytes are also
+        checked against ``bytes_per_role`` within ``tolerance``
+        (warning-severity: padding and sharding legitimately skew these).
+
+        Returns a :class:`repro.analysis.hlo_audit.AuditReport`.
+        """
+        from repro.analysis.hlo_audit import (
+            ExpectedMovement,
+            RoleExpectation,
+            audit_hlo_text,
+        )
+
+        donated = set(donated)
+        plan_bytes = dict(getattr(workload, "bytes_per_role", None) or {})
+        term_by_tier = {
+            MemoryTier.HBM: "hbm",
+            MemoryTier.HOST: "pcie",
+            MemoryTier.PEER_HBM: "ici",
+            MemoryTier.PEER_HOST: "ici",
+            MemoryTier.REMOTE_HBM: "dcn",
+        }
+        roles = []
+        for root, role in arg_roles.items():
+            role = parse_role(role)
+            roles.append(RoleExpectation(
+                role=role.value,
+                arg_root=root,
+                donate=root in donated and self.donate_ok(role),
+                planner_term=term_by_tier.get(
+                    self.policy.placement(role).tier, "hbm"
+                ),
+                plan_bytes=(
+                    float(plan_bytes[role]) if role in plan_bytes else None
+                ),
+                tolerance=tolerance,
+            ))
+        expected = ExpectedMovement(
+            roles=tuple(roles),
+            host_bytes_allowed=float(host_bytes_allowed),
+            label=label or f"{self.bundle.cfg.name}:{self.policy.name}",
+        )
+        text = target if isinstance(target, str) else target.as_text()
+        mesh_axes = (
+            dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            if self.mesh is not None else None
+        )
+        return audit_hlo_text(text, expected, mesh_axes)
+
     # -- eviction pricing --------------------------------------------------
     def price_copy(
         self,

@@ -36,7 +36,6 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-import warnings
 from typing import Mapping
 
 
@@ -312,9 +311,6 @@ AXIS_LINK: dict[str, Link] = {
     "donor_pod": Link.DCN,
 }
 
-_WARNED_AXES: set[str] = set()
-
-
 def link_for_axis(axis: str, *, strict: bool = False) -> Link:
     """The physical link a mesh axis runs over.
 
@@ -332,14 +328,14 @@ def link_for_axis(axis: str, *, strict: bool = False) -> Link:
                 f"{sorted(AXIS_LINK)} — register it so collectives on it "
                 "are priced at the right link"
             ) from None
-        if axis not in _WARNED_AXES:
-            _WARNED_AXES.add(axis)
-            warnings.warn(
-                f"mesh axis {axis!r} has no AXIS_LINK entry; pricing its "
-                "collectives at ICI bandwidth (add it to "
-                "repro.core.hardware.AXIS_LINK if it crosses another link)",
-                stacklevel=2,
-            )
+        from repro.analysis.warnings_registry import warn_once
+
+        warn_once(
+            f"axis_link:{axis}",
+            f"mesh axis {axis!r} has no AXIS_LINK entry; pricing its "
+            "collectives at ICI bandwidth (add it to "
+            "repro.core.hardware.AXIS_LINK if it crosses another link)",
+        )
         return Link.ICI
 
 

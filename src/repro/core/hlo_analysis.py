@@ -48,13 +48,25 @@ _DTYPE_BYTES = {
     "token": 0, "opaque": 0,
 }
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+#: optional layout suffix captured so memory-space annotations survive:
+#: ``f32[8]{0:S(5)}`` places the buffer in XLA memory space 5 (host).
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{([^{}]*)\})?")
+
+#: XLA's host memory space id in layout annotations (``S(5)``); the
+#: default (device) space is 0 and is usually unannotated.
+HOST_MEMORY_SPACE = 5
+
+_SPACE_RE = re.compile(r"S\((\d+)\)")
 
 
 @dataclasses.dataclass(frozen=True)
 class Shape:
     dtype: str
     dims: tuple[int, ...]
+    #: XLA memory space from the layout annotation (0 = device/default,
+    #: 5 = host) — how the paper's host↔device transfers show up in the
+    #: compiled text.
+    space: int = 0
 
     @property
     def numel(self) -> int:
@@ -64,13 +76,19 @@ class Shape:
     def nbytes(self) -> int:
         return self.numel * _DTYPE_BYTES.get(self.dtype, 4)
 
+    @property
+    def on_host(self) -> bool:
+        return self.space == HOST_MEMORY_SPACE
+
 
 def parse_shapes(type_str: str) -> list[Shape]:
-    """Parse ``bf16[4,64,128]{2,1,0}`` or tuple ``(s32[], f32[2]{0})``."""
+    """Parse ``bf16[4,64,128]{2,1,0}`` or tuple ``(s32[], f32[2]{0})``,
+    keeping any ``S(n)`` memory-space layout annotation."""
     shapes = []
     for m in _SHAPE_RE.finditer(type_str):
         dims = tuple(int(d) for d in m.group(2).split(",") if d)
-        shapes.append(Shape(m.group(1), dims))
+        ms = _SPACE_RE.search(m.group(3)) if m.group(3) else None
+        shapes.append(Shape(m.group(1), dims, int(ms.group(1)) if ms else 0))
     return shapes
 
 
@@ -83,9 +101,12 @@ def total_bytes(type_str: str) -> int:
 # ---------------------------------------------------------------------------
 
 _INSTR_RE = re.compile(
-    # type is either a (possibly /*index=N*/-annotated) tuple — no nested
-    # parens in HLO tuple types — or a single array type
-    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    # type is either a (possibly /*index=N*/-annotated) tuple or a single
+    # array type.  Tuple element layouts may themselves contain parens —
+    # ``(f32[8]{0:S(5)}, f32[8]{0}, u32[])`` from an async host copy — so
+    # allow one level of nesting inside the tuple.
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
     r"(?P<opcode>[\w\-]+)\("
 )
 
@@ -344,6 +365,33 @@ def decode_permute_pairs(attrs: str) -> list[tuple[int, int]]:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class TransferStat:
+    """One ``copy``/``copy-start`` in the compiled module — the raw data-
+    movement fact the auditor diffs against the planner's byte plan.
+
+    An async pair is recorded once, at its ``copy-start``; the matching
+    ``copy-done`` is a handle resolution that moves no bytes.
+    """
+
+    opcode: str               # "copy" or "copy-start"
+    name: str                 # HLO instruction name
+    nbytes: float             # bytes moved, x trip count
+    src_space: int            # XLA memory space of the source buffer
+    dst_space: int            # XLA memory space of the destination
+    count: float              # dynamic execution count (x trip counts)
+    op_name: str = ""         # jax op_name tail (attribution)
+
+    @property
+    def crosses_host(self) -> bool:
+        """True when exactly one endpoint is in host memory — the
+        host↔device PCIe/C2C traffic the paper's Fig. 17 datapath budgets
+        per token."""
+        return (self.src_space == HOST_MEMORY_SPACE) != (
+            self.dst_space == HOST_MEMORY_SPACE
+        )
+
+
+@dataclasses.dataclass
 class CollectiveStat:
     opcode: str
     payload_bytes: float      # per-chip HLO payload, x trip count
@@ -362,6 +410,9 @@ class HloCost:
     flops: float = 0.0
     hbm_bytes: float = 0.0
     collectives: list[CollectiveStat] = dataclasses.field(default_factory=list)
+    #: every copy/copy-start, with source/destination memory spaces — the
+    #: input to the transfer audit
+    transfers: list[TransferStat] = dataclasses.field(default_factory=list)
     instruction_count: float = 0.0
     dot_flops: float = 0.0
     conv_flops: float = 0.0
@@ -381,6 +432,11 @@ class HloCost:
 
     def wire_bytes_over(self, axis: str) -> float:
         return sum(c.wire_bytes for c in self.collectives if axis in c.axes)
+
+    @property
+    def host_transfer_bytes(self) -> float:
+        """Total bytes crossing the host↔device boundary."""
+        return sum(t.nbytes for t in self.transfers if t.crosses_host)
 
 
 def _dot_flops(ins: Instruction, comp: Computation) -> float:
@@ -503,6 +559,9 @@ class HloAnalyzer:
             if base in COLLECTIVE_OPS and not op.endswith("-done"):
                 self._collective(ins, comp, mult, cost)
 
+            if charge_bytes and op in ("copy", "copy-start"):
+                self._transfer(ins, comp, mult, cost)
+
             if op == "while":
                 trip = self._trip_count(ins)
                 body = _BODY_RE.search(ins.attrs)
@@ -583,6 +642,16 @@ class HloAnalyzer:
           in dynamic-update-slice is charged the update, not the buffer.
         """
         op = ins.opcode
+        if op == "copy-done":
+            # resolves the async handle; the bytes were charged at the
+            # matching copy-start (double-count fix)
+            return 0.0
+        if op == "copy-start":
+            # output tuple is (dest, src, context): one read + one write
+            # of the payload, not 3x (tuple + operand) as the naive model
+            # would charge
+            shapes = ins.shapes
+            return 2.0 * shapes[0].nbytes if shapes else 0.0
         if op in ("dynamic-slice", "slice"):
             return float(ins.out_bytes)  # reads ~output bytes
         if op in ("dynamic-update-slice", "scatter", "scatter-add"):
@@ -680,6 +749,40 @@ class HloAnalyzer:
                 nbytes += src.out_bytes
         return nbytes
 
+    def _transfer(
+        self, ins: Instruction, comp: Computation, mult: float, cost: HloCost
+    ) -> None:
+        """Record a copy/copy-start with source/destination memory spaces."""
+        mo = re.search(r'op_name="([^"]+)"', ins.attrs)
+        op_name = _op_key(mo.group(1)) if mo else ""
+        shapes = ins.shapes
+        if ins.opcode == "copy-start":
+            # tuple type is (dest, src, context) — both spaces are right
+            # there in the layout annotations
+            dst = shapes[0] if shapes else None
+            src = shapes[1] if len(shapes) > 1 else None
+        else:
+            dst = shapes[0] if shapes else None
+            src = None
+            if ins.operands:
+                opnd = comp.instructions.get(ins.operands[0])
+                if opnd is not None and opnd.shapes:
+                    src = opnd.shapes[0]
+        if src is None:
+            src = dst
+        nbytes = float(dst.nbytes) if dst is not None else 0.0
+        cost.transfers.append(
+            TransferStat(
+                opcode=ins.opcode,
+                name=ins.name,
+                nbytes=nbytes * mult,
+                src_space=src.space if src is not None else 0,
+                dst_space=dst.space if dst is not None else 0,
+                count=mult,
+                op_name=op_name,
+            )
+        )
+
     def _collective(
         self, ins: Instruction, comp: Computation, mult: float, cost: HloCost
     ) -> None:
@@ -745,3 +848,108 @@ def analyze_hlo_text(
 ) -> HloCost:
     """Convenience wrapper: parse + walk."""
     return HloAnalyzer(text, mesh_axes, default_trip_count).analyze()
+
+
+# ---------------------------------------------------------------------------
+# Donation (input/output aliasing) + entry-parameter extraction
+# ---------------------------------------------------------------------------
+
+#: one alias entry: ``{out_idx}: (param_num, {param_idx}, may-alias)`` —
+#: the param-index tuple and the kind are both optional in XLA's printer
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+)(?:,\s*\{([0-9,\s]*)\})?(?:,\s*([a-z\-]+))?\)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AliasPair:
+    """One materialized donation: output tuple index ← parameter buffer."""
+
+    output_index: tuple[int, ...]
+    param_number: int
+    param_index: tuple[int, ...] = ()
+    kind: str = "may-alias"
+
+
+def _idx_tuple(s: str | None) -> tuple[int, ...]:
+    return tuple(int(x) for x in (s or "").replace(",", " ").split())
+
+
+def parse_input_output_alias(text: str) -> list[AliasPair]:
+    """Donation pairs from the ``input_output_alias={...}`` module header.
+
+    Presence of a pair here is the ground truth that ``donate_argnums``
+    actually materialized: a donated-but-unaliased buffer costs a silent
+    full-size device copy per dispatch, which is exactly the failure the
+    build-time Executor check and :mod:`repro.analysis.hlo_audit` exist to
+    surface.  Returns ``[]`` when the module has no alias header.
+    """
+    marker = "input_output_alias={"
+    start = text.find(marker)
+    if start < 0:
+        return []
+    i = start + len(marker) - 1  # at the opening '{'
+    depth, j = 0, i
+    while j < len(text):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    body = text[i + 1 : j]
+    return [
+        AliasPair(
+            output_index=_idx_tuple(m.group(1)),
+            param_number=int(m.group(2)),
+            param_index=_idx_tuple(m.group(3)),
+            kind=m.group(4) or "may-alias",
+        )
+        for m in _ALIAS_ENTRY_RE.finditer(body)
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryParameter:
+    """One entry-computation parameter with its jax arg-path label.
+
+    ``op_name`` is the flattened jax argument path (``caches[0]``,
+    ``state[\'tokens\']`` — quote escapes undone), which is how the auditor
+    maps HLO parameter numbers back to planner roles even after XLA prunes
+    unused arguments (numbering is the flat order of surviving leaves).
+    """
+
+    number: int
+    shapes: tuple[Shape, ...]
+    op_name: str = ""
+
+    @property
+    def arg_root(self) -> str:
+        """Leading identifier of the arg path (``caches[0]`` → ``caches``)."""
+        return re.split(r"[\[.]", self.op_name, maxsplit=1)[0]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.shapes)
+
+
+def entry_parameters(
+    text: str, comps: Mapping[str, Computation] | None = None
+) -> list[EntryParameter]:
+    """Entry-computation parameters sorted by parameter number."""
+    comps = comps if comps is not None else parse_hlo(text)
+    entry = find_entry(text, comps)
+    out: list[EntryParameter] = []
+    for ins in comps[entry].instructions.values():
+        if ins.opcode != "parameter":
+            continue
+        try:
+            num = int(ins.raw_args.strip())
+        except ValueError:
+            continue
+        mo = re.search(r'op_name="([^"]+)"', ins.attrs)
+        op_name = mo.group(1).replace("\\'", "'") if mo else ""
+        out.append(EntryParameter(num, tuple(ins.shapes), op_name))
+    out.sort(key=lambda p: p.number)
+    return out

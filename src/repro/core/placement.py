@@ -49,7 +49,6 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
-import warnings
 from typing import Mapping
 
 import jax
@@ -692,14 +691,12 @@ class _PoliciesView(Mapping):
 
 
 _POLICIES_VIEW = _PoliciesView()
-_WARNED: set[str] = set()
 
 
 def _warn_deprecated(key: str, message: str) -> None:
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
+    from repro.analysis.warnings_registry import warn_once
+
+    warn_once(f"deprecated:{key}", message, DeprecationWarning, stacklevel=4)
 
 
 def __getattr__(name: str):

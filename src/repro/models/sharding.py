@@ -413,23 +413,18 @@ def _policy_specs(
     return specs
 
 
-_WARNED_DEPRECATED: set[str] = set()
-
-
 def __getattr__(name: str):
     # PEP 562 shim: `policy_specs` keeps resolving for external callers,
     # with a one-shot DeprecationWarning pointing at the facade.
     if name == "policy_specs":
-        if name not in _WARNED_DEPRECATED:
-            _WARNED_DEPRECATED.add(name)
-            import warnings
+        from repro.analysis.warnings_registry import warn_once
 
-            warnings.warn(
-                "repro.models.sharding.policy_specs is deprecated; use "
-                "repro.api.Runtime.specs / Runtime.realize instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
+        warn_once(
+            f"deprecated:{name}",
+            "repro.models.sharding.policy_specs is deprecated; use "
+            "repro.api.Runtime.specs / Runtime.realize instead",
+            DeprecationWarning,
+        )
         return _policy_specs
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 

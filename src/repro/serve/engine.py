@@ -60,7 +60,7 @@ from repro.api import Runtime
 from repro.core.placement import Placement, PlacementPolicy, Role, parse_policy
 from repro.models.sharding import donation_compatible
 from repro.serve import sampling as sampling_mod
-from repro.serve.state import upload
+from repro.serve.state import idle_device_state, upload
 
 log = logging.getLogger("repro.serve.engine")
 
@@ -122,7 +122,6 @@ class Executor:
             "decode_replay_prefills": 0,
             "spill_s": 0.0, "restore_s": 0.0,
         }
-        self._warned_replay = False
         self._build_steps()
 
     @property
@@ -212,7 +211,7 @@ class Executor:
             return out, new_state, new_caches
 
         donate = (1, 2) if self._donate_cache else (1,)
-        self._decode = jax.jit(
+        decode_jit = jax.jit(
             _step_fn,
             donate_argnums=donate,
             # pin the returned cache to its realized placement so a donor
@@ -223,10 +222,23 @@ class Executor:
             # stop table) pass through unchanged, and a donated
             # pass-through must come back with the sharding it arrived
             # with (place_state) or aliasing fails.
-            **({} if cache_specs is None
-               else {"out_shardings":
-                     (None, self._state_sharding, cache_specs)}),
+            out_shardings=(
+                None if cache_specs is None
+                else (None, self._state_sharding, cache_specs)
+            ),
         )
+        # Ahead-of-time: lower + compile against the live params/caches
+        # and the canonical idle state NOW, so the donation contract is
+        # checked at build time (not first dispatch), and reuse the
+        # Compiled object AS the dispatch path — one compile, not two.
+        # (.lower().compile() does not warm the jit dispatch cache, so
+        # dispatching through the jit wrapper would recompile.)
+        self._proto_state = self.place_state(
+            idle_device_state(cfg.batch_slots)
+        )
+        self._decode = decode_jit.lower(
+            self.params, self._proto_state, self.caches
+        ).compile()
 
         # encoder-decoder bundles have no offset-chunk prefill (their
         # prefill also projects the cross-attention memory) — they fall
@@ -234,18 +246,32 @@ class Executor:
         if bundle.cfg.family == "audio" and bundle.cfg.n_encoder_layers:
             self._prefill = None
         else:
-            self._prefill = jax.jit(
+            prefill_jit = jax.jit(
                 lambda p, batch, caches, offsets: bundle.prefill_at(
                     p, batch, caches, offsets
                 ),
                 donate_argnums=(2,) if self._donate_cache else (),
-                **({} if cache_specs is None
-                   else {"out_shardings": (None, cache_specs)}),
+                out_shardings=(
+                    None if cache_specs is None else (None, cache_specs)
+                ),
             )
+            chunk = max(int(cfg.prefill_chunk), 1)
+            B = cfg.batch_slots
+            proto_batch = self.place_state({
+                "tokens": jnp.zeros((B, chunk), jnp.int32),
+                "new_lens": jnp.zeros((B,), jnp.int32),
+            })
+            proto_offsets = self.place_state(jnp.zeros((B,), jnp.int32))
+            self._prefill = prefill_jit.lower(
+                self.params, proto_batch, self.caches, proto_offsets
+            ).compile()
 
         # preemption's device half: one slot row out / back in.  Extract
         # must NOT donate (the cache lives on); insert donates like the
-        # decode step and keeps the pinned placement.
+        # decode step and keeps the pinned placement.  Both stay lazy
+        # jits: promoted rows arrive from whatever spill tier preemption
+        # parked them on, so insert's input shardings vary per call and
+        # an AOT executable would be too strict.
         self._extract = jax.jit(
             lambda caches, i: jax.tree.map(
                 lambda x: lax.dynamic_slice_in_dim(x, i, 1, axis=1), caches
@@ -259,9 +285,63 @@ class Executor:
                 caches, rows,
             ),
             donate_argnums=(0,) if self._donate_cache else (),
-            **({} if cache_specs is None
-               else {"out_shardings": cache_specs}),
+            out_shardings=cache_specs,
         )
+        self._audit_builds()
+
+    # -- build-time movement audit ----------------------------------------
+    def _audit_builds(self) -> None:
+        """Audit every donation path's compiled module at build time.
+
+        The compiled text's ``input_output_alias`` header is the ground
+        truth for whether ``donate_argnums`` materialized; a donation the
+        policy requires that did NOT alias is a silent cache-sized copy
+        per dispatch — raised here as
+        :class:`repro.analysis.hlo_audit.DonationAliasError` (gated by
+        ``cfg.verify_donation``).  Reports land in ``self.audit_reports``
+        for ``tools/audit.py`` and the tests.
+        """
+        cfg = self.cfg
+        arg_roles = {"p": Role.PARAMS, "caches": Role.KV_CACHE}
+        donated = {"caches"} if self._donate_cache else set()
+        # Fig. 17 allowance: one (B,1) token upload + one packed (2,B)
+        # readback per step — nothing else may cross host<->device
+        host_allow = 3 * cfg.batch_slots * 4
+        self.audit_reports = {
+            "decode": self.rt.audit(
+                self._decode, arg_roles, donated=donated,
+                host_bytes_allowed=host_allow,
+                label=f"decode:{self.bundle.cfg.name}:{self.policy.name}",
+            ),
+        }
+        if self._prefill is not None:
+            self.audit_reports["prefill"] = self.rt.audit(
+                self._prefill, arg_roles, donated=donated,
+                host_bytes_allowed=host_allow,
+                label=f"prefill:{self.bundle.cfg.name}:{self.policy.name}",
+            )
+        verify = getattr(cfg, "verify_donation", True)
+        if verify and self._donate_cache:
+            # the insert jit stays lazy (spill-tier inputs vary), so
+            # verify its donation on a one-off compile against the
+            # resident placement
+            proto_rows = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    (x.shape[0], 1) + x.shape[2:], x.dtype
+                ),
+                self.caches,
+            )
+            insert_compiled = self._insert.lower(
+                self.caches, proto_rows, jnp.int32(0)
+            ).compile()
+            self.audit_reports["insert"] = self.rt.audit(
+                insert_compiled, {"caches": Role.KV_CACHE},
+                donated=donated, host_bytes_allowed=0.0,
+                label=f"insert:{self.bundle.cfg.name}:{self.policy.name}",
+            )
+        if verify:
+            for report in self.audit_reports.values():
+                report.raise_on_donation_errors()
 
     def place_state(self, state: dict) -> dict:
         """Replicate a freshly uploaded state dict onto the mesh so the
@@ -286,7 +366,8 @@ class Executor:
         copy_async = getattr(out, "copy_to_host_async", None)
         if copy_async is not None:
             copy_async()
-        out_host = np.asarray(out)
+        # the sanctioned once-per-step fetch: the packed (2, B) vector
+        out_host = np.asarray(out)  # repro: lint-disable=blocking-transfer-in-hot-path
         dt = time.perf_counter() - t0
         self.counters["decode_s"] += dt
         # each warm step becomes a calibration observation on the Runtime:
@@ -353,15 +434,17 @@ class Executor:
                     new_lens[i] = n
             _, self.caches = self._prefill(
                 self.params,
-                {
-                    # toks/new_lens are freshly built per chunk and never
-                    # mutated after the handoff; lengths is a live mirror
-                    # and goes through the race-safe upload copy.
+                # toks/new_lens are freshly built per chunk and never
+                # mutated after the handoff; lengths is a live mirror
+                # and goes through the race-safe upload copy.  place_state
+                # commits them to the replicated sharding the AOT
+                # executable was lowered against.
+                self.place_state({
                     "tokens": jnp.asarray(toks),
                     "new_lens": jnp.asarray(new_lens),
-                },
+                }),
                 self.caches,
-                upload(table.lengths, np.int32),
+                self.place_state(upload(table.lengths, np.int32)),
             )
             for i, _ in new:
                 table.lengths[i] += int(new_lens[i])
@@ -371,8 +454,9 @@ class Executor:
         (encoder-decoder): replay each prompt token-by-token through the
         full-batch decode step — O(B·L) dispatches, correctness-only.
         Warned once and counted so the slow path is visible."""
-        if not self._warned_replay:
-            self._warned_replay = True
+        from repro.analysis.warnings_registry import mark
+
+        if mark(f"decode_replay:{self.bundle.cfg.name}"):
             log.warning(
                 "%s has no chunked prefill (encoder-decoder bundles "
                 "re-project the cross-attention memory): admission falls "
@@ -384,20 +468,14 @@ class Executor:
         B = self.cfg.batch_slots
 
         def idle_state(toks):
-            # rebuilt per dispatch: the decode jit donates the state, so
-            # these buffers are consumed by each call
-            return {
-                "tokens": jnp.asarray(toks),
-                "lengths": upload(table.lengths, np.int32),
-                "active": jnp.asarray(np.zeros(B, bool)),
-                "temp": jnp.asarray(np.zeros(B, np.float32)),
-                "top_k": jnp.asarray(np.zeros(B, np.int32)),
-                "top_p": jnp.asarray(np.ones(B, np.float32)),
-                "seed": jnp.asarray(np.zeros(B, np.uint32)),
-                "stop": jnp.asarray(np.full(
-                    (B, sampling_mod.STOP_WIDTH), -1, np.int32
-                )),
-            }
+            # rebuilt per dispatch from the canonical schema: the decode
+            # jit donates the state, so these buffers are consumed by
+            # each call
+            return dict(
+                idle_device_state(B),
+                tokens=jnp.asarray(toks),
+                lengths=upload(table.lengths, np.int32),
+            )
 
         for i, prompt in new:
             for t in range(len(prompt) - 1):

@@ -121,6 +121,11 @@ class ServeConfig:
     #: considered — also the thrash guard: a freshly (re)admitted slot
     #: cannot be re-evicted sooner
     preempt_wait: int = 8
+    #: assert at Executor build time that every donation the policy
+    #: requires actually materialized as input/output aliasing in the
+    #: compiled module (repro.analysis.hlo_audit.DonationAliasError
+    #: instead of a silent cache-sized copy per dispatch)
+    verify_donation: bool = True
 
 
 class Server:
@@ -471,7 +476,8 @@ class Server:
         freed = False
         for i in active:
             req = self._requests[self.table.slots[i]]
-            tok = int(tokens[i])
+            # host numpy already (the engine's one sanctioned fetch)
+            tok = int(tokens[i])  # repro: lint-disable=blocking-transfer-in-hot-path
             req.out_tokens.append(tok)
             if req.first_token_s is None:
                 req.first_token_s = now()

@@ -35,6 +35,27 @@ def upload(arr: np.ndarray, dtype) -> jnp.ndarray:
     return jnp.asarray(np.array(arr, dtype=dtype, copy=True))
 
 
+def idle_device_state(batch_slots: int) -> dict:
+    """All-idle device state with the canonical schema — same keys,
+    shapes and dtypes as :meth:`SlotTable.device_state`.
+
+    The Executor lowers its ahead-of-time decode step against this, so
+    a schema drift between the two breaks loudly at build time instead
+    of shape-erroring mid-serve.
+    """
+    B = batch_slots
+    return {
+        "tokens": jnp.zeros((B, 1), jnp.int32),
+        "lengths": jnp.zeros((B,), jnp.int32),
+        "active": jnp.zeros((B,), jnp.bool_),
+        "temp": jnp.zeros((B,), jnp.float32),
+        "top_k": jnp.zeros((B,), jnp.int32),
+        "top_p": jnp.ones((B,), jnp.float32),
+        "seed": jnp.zeros((B,), jnp.uint32),
+        "stop": jnp.full((B, STOP_WIDTH), -1, jnp.int32),
+    }
+
+
 @dataclasses.dataclass
 class SpilledSequence:
     """A preempted request parked off-cache: everything promotion needs."""

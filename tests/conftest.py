@@ -1,4 +1,4 @@
-"""Test-collection guards.
+"""Test-collection guards + per-test warn-once reset.
 
 The property-test modules need ``hypothesis`` (see requirements-dev.txt).
 When it is absent — e.g. a minimal container image — skip those modules
@@ -7,6 +7,18 @@ command must always be able to collect and run everything else.
 """
 
 import importlib.util
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_warn_once_registry():
+    """Every warn-once in the repo fires per-*test*, not per-process, so
+    warn-once assertions don't depend on test execution order."""
+    from repro.analysis.warnings_registry import reset_warnings
+
+    reset_warnings()
+    yield
 
 #: test modules whose import requires hypothesis
 _HYPOTHESIS_MODULES = [

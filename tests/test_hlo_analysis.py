@@ -6,10 +6,13 @@ import numpy as np
 import pytest
 
 from repro.core.hlo_analysis import (
+    HOST_MEMORY_SPACE,
     analyze_hlo_text,
     decode_replica_groups,
+    entry_parameters,
     group_axes,
     parse_hlo,
+    parse_input_output_alias,
     parse_shapes,
     total_bytes,
 )
@@ -98,6 +101,82 @@ class TestSyntheticModule:
         assert group_axes([[0, 2]], axes) == ("data",)
         assert group_axes([[0, 4]], axes) == ("pod",)
         assert group_axes([[0, 1, 2, 3]], axes) == ("data", "model")
+
+
+TRANSFER_MODULE = """\
+HloModule xfer, input_output_alias={ {0}: (1, {}, may-alias), {1,0}: (2, {0}, must-alias) }
+
+ENTRY %main (p0: f32[16], p1: f32[1024], p2: (f32[8], f32[8])) -> (f32[1024], f32[8]) {
+  %p0 = f32[16]{0} parameter(0), metadata={op_name="p[\\'blocks\\'][0][\\'w\\']"}
+  %p1 = f32[1024]{0} parameter(1), metadata={op_name="caches[0]"}
+  %p2 = (f32[8]{0}, f32[8]{0}) parameter(2), metadata={op_name="state.tokens"}
+  %cs = (f32[1024]{0:S(5)}, f32[1024]{0}, u32[]) copy-start(%p1)
+  %cd = f32[1024]{0:S(5)} copy-done(%cs)
+  %g = f32[8]{0} get-tuple-element(%p2), index=0
+  %c = f32[8]{0} copy(%g)
+  ROOT %t = (f32[1024]{0:S(5)}, f32[8]{0}) tuple(%cd, %c)
+}
+"""
+
+
+class TestMemorySpaces:
+    def test_space_suffix_parsed(self):
+        (s,) = parse_shapes("f32[1024]{0:S(5)}")
+        assert s.space == HOST_MEMORY_SPACE and s.on_host
+        (d,) = parse_shapes("f32[1024]{0}")
+        assert d.space == 0 and not d.on_host
+
+    def test_paren_tuple_instruction_parsed(self):
+        # the copy-start tuple type contains parens (S(5)) — the
+        # instruction regex must not stop at the first ')'
+        comps = parse_hlo(TRANSFER_MODULE)
+        ins = comps["main"].instructions["cs"]
+        assert ins.opcode == "copy-start"
+        assert [s.space for s in ins.shapes] == [5, 0, 0]
+
+
+class TestTransferAccounting:
+    def test_copy_start_done_not_double_counted(self):
+        cost = analyze_hlo_text(TRANSFER_MODULE)
+        # copy-start: 1 read + 1 write of the 4096 B payload; copy-done:
+        # handle resolution, zero; small copy: 2 x 32 B
+        assert cost.hbm_bytes == pytest.approx(2 * 4096 + 0 + 2 * 32)
+
+    def test_transfer_stats_and_host_bytes(self):
+        cost = analyze_hlo_text(TRANSFER_MODULE)
+        by_op = {t.name: t for t in cost.transfers}
+        assert set(by_op) == {"cs", "c"}
+        cs = by_op["cs"]
+        assert cs.opcode == "copy-start" and cs.nbytes == 4096
+        assert cs.src_space == 0 and cs.dst_space == HOST_MEMORY_SPACE
+        assert cs.crosses_host
+        c = by_op["c"]
+        assert c.nbytes == 32 and not c.crosses_host
+        # only the host-crossing transfer counts toward the budget
+        assert cost.host_transfer_bytes == 4096
+
+
+class TestAliasHeader:
+    def test_alias_entries_parsed(self):
+        pairs = parse_input_output_alias(TRANSFER_MODULE)
+        assert len(pairs) == 2
+        flat, nested = pairs
+        assert flat.output_index == (0,) and flat.param_number == 1
+        assert flat.param_index == () and flat.kind == "may-alias"
+        assert nested.output_index == (1, 0) and nested.param_number == 2
+        assert nested.param_index == (0,) and nested.kind == "must-alias"
+
+    def test_no_header_is_empty(self):
+        assert parse_input_output_alias(SYNTHETIC) == []
+
+    def test_entry_parameters(self):
+        params = entry_parameters(TRANSFER_MODULE)
+        assert [p.number for p in params] == [0, 1, 2]
+        p0, p1, p2 = params
+        # \\' escapes unquoted; arg_root splits at the first [ or .
+        assert p0.op_name == "p['blocks'][0]['w']" and p0.arg_root == "p"
+        assert p1.arg_root == "caches" and p1.nbytes == 4096
+        assert p2.arg_root == "state" and p2.nbytes == 64
 
 
 class TestRealModule:

@@ -145,9 +145,8 @@ class TestSerialization:
 
 class TestDeprecatedPaths:
     def test_policies_view_warns_and_forwards(self):
-        import repro.core.placement as placement_mod
-
-        placement_mod._WARNED.discard("POLICIES")
+        # the autouse warn-once reset (conftest) makes this first access
+        # warn regardless of test order
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
             from repro.core.placement import POLICIES
@@ -184,7 +183,6 @@ class TestDeprecatedPaths:
     def test_policy_specs_import_warns(self):
         import repro.models.sharding as sharding_mod
 
-        sharding_mod._WARNED_DEPRECATED.discard("policy_specs")
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
             fn = sharding_mod.policy_specs
@@ -198,7 +196,6 @@ class TestDeprecatedPaths:
     def test_put_like_import_warns(self):
         import repro.core.placement as placement_mod
 
-        placement_mod._WARNED.discard("put_like")
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
             fn = placement_mod.put_like

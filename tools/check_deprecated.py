@@ -1,118 +1,22 @@
 #!/usr/bin/env python
-"""Deprecation hygiene check: no in-repo caller uses the deprecated
-placement paths or the retired monolithic serve-engine surface.
+"""RETIRED — the deprecation patterns moved into the lint framework.
 
-The compositional placement API (ISSUE 5) deprecated three spellings in
-favor of ``repro.api`` / the policy registry:
+This script's checks now live in :mod:`repro.analysis.lint` as registered
+``deprecated-*`` rules (with per-rule allowlists and ``# repro:
+lint-disable=<rule>`` pragmas), run by ``tools/audit.py`` alongside the
+aliasing-discipline rules and the compiled-HLO transfer audit.
 
-* ``POLICIES``      -> ``registered_policies()`` / ``get_policy()`` /
-                       ``parse_policy()``
-* ``policy_specs``  -> ``Runtime.specs`` / ``Runtime.realize``
-* ``put_like``      -> ``Runtime.realize``
-
-The serve-engine split (ISSUE 6) retired the monolithic engine surface:
-
-* ``repro.serve.engine`` imports -> the ``repro.serve`` package
-  (``engine`` now holds only the jitted ``Executor``; ``Request`` /
-  ``ServeConfig`` / ``Server`` live in the scheduler layer)
-* ``.stats[...]`` dict access    -> the ``Server.stats()`` method
-
-External code keeps working through PEP 562 shims (one
-``DeprecationWarning`` per process) where applicable, but nothing inside
-this repo may use these spellings: this script greps every tracked
-``*.py`` under ``src/``, ``tests/``, ``examples/``, ``benchmarks/``,
-``launch/`` and ``tools/`` and exits 1 listing any offender.  The
-defining modules (where the shim and the private implementation live)
-and the facade are allowlisted.
-
-Run from the repo root:  ``python tools/check_deprecated.py``
-(CI runs it on every leg).
+Run instead:  ``PYTHONPATH=src python tools/audit.py --lint``
 """
 
 from __future__ import annotations
 
-import pathlib
-import re
 import sys
-
-REPO = pathlib.Path(__file__).resolve().parent.parent
-
-#: deprecated public names.  \b-delimited so attribute access
-#: (``sharding.policy_specs``) IS matched — that path hits the shim at
-#: runtime too — while the private implementations (``_put_like``,
-#: ``_policy_specs``, ``_POLICIES_VIEW``) are not (no word boundary
-#: after a leading underscore).
-PATTERNS = {
-    "POLICIES": re.compile(r"\bPOLICIES\b"),
-    "policy_specs": re.compile(r"\bpolicy_specs\b"),
-    "put_like": re.compile(r"\bput_like\b"),
-    # the monolithic engine surface: import the repro.serve package, not
-    # the engine module (which now holds only the Executor).  Matches
-    # imports and attribute access, not the logger-name string.
-    "repro.serve.engine": re.compile(
-        r"(from\s+repro\.serve\.engine\s+import"
-        r"|import\s+repro\.serve\.engine"
-        r"|\brepro\.serve\.engine\.)"
-    ),
-    # Server.stats is a method now; dict-style access marks code still
-    # written against the old stats attribute
-    ".stats[": re.compile(r"\.stats\["),
-    # The calibrated hardware model (ISSUE 7) retired direct use of the
-    # spec-sheet singleton: pricing must flow through the Runtime facade
-    # or get_active_system() so a --calibration run re-prices everything.
-    # repro.api re-exports the baseline as SPEC_SYSTEM for explicit
-    # spec-vs-calibrated comparisons.
-    "DEFAULT_SYSTEM": re.compile(r"\bDEFAULT_SYSTEM\b"),
-}
-
-#: modules that define/shim the deprecated names or implement the facade
-ALLOWLIST = {
-    "src/repro/core/placement.py",
-    "src/repro/core/__init__.py",
-    # hardware.py defines DEFAULT_SYSTEM; api.py is its one sanctioned
-    # consumer (the SPEC_SYSTEM re-export for spec-vs-calibrated reports)
-    "src/repro/core/hardware.py",
-    "src/repro/models/sharding.py",
-    "src/repro/models/__init__.py",
-    "src/repro/api.py",
-    "tools/check_deprecated.py",
-    # the deprecation tests exercise the shims on purpose
-    "tests/test_placement_api.py",
-    # the serve package itself may reference its own engine module
-    "src/repro/serve/__init__.py",
-    "src/repro/serve/engine.py",
-    "src/repro/serve/scheduler.py",
-    "src/repro/serve/sampling.py",
-    "src/repro/serve/state.py",
-}
-
-SCAN_DIRS = ("src", "tests", "examples", "benchmarks", "tools")
 
 
 def main() -> int:
-    offenders: list[str] = []
-    for top in SCAN_DIRS:
-        for path in sorted((REPO / top).rglob("*.py")):
-            rel = path.relative_to(REPO).as_posix()
-            if rel in ALLOWLIST:
-                continue
-            for lineno, line in enumerate(
-                path.read_text().splitlines(), start=1
-            ):
-                stripped = line.split("#", 1)[0]
-                for name, pat in PATTERNS.items():
-                    if pat.search(stripped):
-                        offenders.append(f"{rel}:{lineno}: {name}: {line.strip()}")
-    if offenders:
-        print(
-            "deprecated placement paths used in-repo (use repro.api / the "
-            "policy registry instead):"
-        )
-        print("\n".join(f"  {o}" for o in offenders))
-        return 1
-    print("deprecation hygiene OK: no in-repo use of "
-          + "/".join(PATTERNS))
-    return 0
+    print(__doc__.strip(), file=sys.stderr)
+    return 2
 
 
 if __name__ == "__main__":
