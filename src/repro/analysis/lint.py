@@ -24,6 +24,11 @@ Rule catalog (see docs/analysis.md):
 * ``donate-without-out-shardings`` — ``donate_argnums`` without pinned
   ``out_shardings``: XLA is free to move the result, silently breaking the
   placement the planner priced.
+* ``injected-fault-raise`` — raising the fault-injection harness's
+  exception types (``TierLossError`` & co.) outside ``core/faults.py``:
+  production control flow must not impersonate injected faults — the
+  allowlist is the harness module itself, and ``tools/audit.py
+  --selftest`` asserts it stays that narrow.
 * ``deprecated-*`` — the migrated deprecation-hygiene patterns.
 """
 
@@ -510,6 +515,15 @@ register(PatternRule(
     "deprecated-stats-dict", r"\.stats\[",
     "Server.stats is a method now: call .stats(), not .stats[...]",
     _DEPRECATION_ALLOW,
+))
+register(PatternRule(
+    "injected-fault-raise",
+    r"\braise\s+(?:faults\.)?(?:InjectedFault|TransientFault|TierLossError|"
+    r"MigrationFault|SpillCorruptionError)\b",
+    "injected fault types may only be raised by the harness "
+    "(core/faults.py): production code must signal failures with its own "
+    "error types, never impersonate an injected fault",
+    frozenset({"src/repro/core/faults.py"}),
 ))
 register(PatternRule(
     "deprecated-default-system", r"\bDEFAULT_SYSTEM\b",

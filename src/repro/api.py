@@ -46,8 +46,12 @@ from repro.core.hardware import (
     get_active_system,
     set_active_system,
 )
+from repro.core.faults import NO_FAULTS, FaultPlan
 from repro.core.replay import ReplayLog
 from repro.core.placement import (
+    HOST_TIERS,
+    PEER_TIERS,
+    REMOTE_TIERS,
     DonorStream,
     Placement,
     PlacementPolicy,
@@ -174,6 +178,13 @@ class Runtime:
         self.calibration = None
         #: predicted-vs-measured log fed by observe_decode_step()
         self.replay = ReplayLog()
+        #: injected-fault schedule; the falsy NO_FAULTS default means
+        #: production paths pay one truthiness test (see core/faults.py)
+        self.faults: FaultPlan = NO_FAULTS
+        #: tiers declared unusable by mark_tier_lost()/evacuate();
+        #: _allow_flags() masks them out of every subsequent planner
+        #: pass, spill-placement pick and migration target
+        self.lost_tiers: set[MemoryTier] = set()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -212,6 +223,44 @@ class Runtime:
     def num_chips(self) -> int:
         return int(self.mesh.devices.size) if self.mesh is not None else 1
 
+    # -- degraded-tier bookkeeping -----------------------------------------
+    def mark_tier_lost(self, tier: "MemoryTier | str") -> MemoryTier:
+        """Declare ``tier`` unusable for the rest of this runtime's life.
+
+        Tier loss happens at donor-axis granularity — losing the peer
+        link takes peer HBM *and* peer DRAM with it (same ``donor``
+        axis), so the sibling tier on the same axis is marked too.
+        Planner passes, :meth:`spill_placement` and :meth:`evacuate`
+        all consult :attr:`lost_tiers` via :meth:`_allow_flags`.
+        """
+        tier = parse_tier(tier)
+        self.lost_tiers.add(tier)
+        if tier in PEER_TIERS:
+            self.lost_tiers |= PEER_TIERS
+        if tier in REMOTE_TIERS:
+            self.lost_tiers |= REMOTE_TIERS
+        log.warning(
+            "tier %s marked lost (now excluded: %s)",
+            tier.value, sorted(t.value for t in self.lost_tiers),
+        )
+        return tier
+
+    def _allow_flags(self) -> dict:
+        """``donor_allow_flags(mesh)`` masked by :attr:`lost_tiers` — the
+        one place every planning/spill/migration path gets its tier
+        eligibility, so a lost tier disappears from all of them at once."""
+        allow = donor_allow_flags(self.mesh)
+        if not self.lost_tiers:
+            return allow
+        allow = dict(allow)
+        if MemoryTier.HOST in self.lost_tiers:
+            allow["allow_host"] = False
+        if self.lost_tiers & PEER_TIERS:
+            allow["allow_peer"] = False
+        if self.lost_tiers & REMOTE_TIERS:
+            allow["allow_remote"] = False
+        return allow
+
     # -- planning ----------------------------------------------------------
     def plan_phase(
         self,
@@ -248,7 +297,7 @@ class Runtime:
             # the auto pick to the default placement so the planner never
             # adopts a policy this runtime would silently fail to realize.
             cand = [get_policy("hbm_resident")]
-        allow = donor_allow_flags(self.mesh)
+        allow = self._allow_flags()
         num_chips = self.num_chips
 
         if phase == "train":
@@ -333,7 +382,7 @@ class Runtime:
             ),
             kv_utilization,
         )
-        allow = donor_allow_flags(self.mesh)
+        allow = self._allow_flags()
         _, dec_preds = plan(dec_prof, cand, self.system, **allow)
         by_name = _candidate_index(cand)
         pre_preds = {
@@ -449,6 +498,8 @@ class Runtime:
         """
         if self.mesh is None:
             return tree
+        if self.faults:
+            self.faults.check("realize")
         role = parse_role(role)
         pol = policy or self.policy
         if defs is None and specs is None and role is Role.PARAMS:
@@ -569,7 +620,7 @@ class Runtime:
         (a placement-neutral parking copy: the slot is still freed, just
         without relieving HBM capacity) when no far tier is realizable.
         """
-        allow = donor_allow_flags(self.mesh)
+        allow = self._allow_flags()
         tiers: list[MemoryTier] = []
         if allow["allow_host"]:
             tiers.append(MemoryTier.HOST)
@@ -755,6 +806,11 @@ class Runtime:
                 "realizes no placements, so there is nothing to move "
                 "between"
             )
+        # pre-dispatch injection: before validation and before any
+        # device_put, so a faulted migrate adopts nothing and donates
+        # nothing — a retry sees the exact pre-call state.
+        if self.faults:
+            self.faults.check("migrate")
         role = parse_role(role)
         if isinstance(to_policy, Placement):
             new_policy = self.policy.with_placement(role, to_policy)
@@ -795,6 +851,131 @@ class Runtime:
             new_policy.placement(role).to_str(), new_policy.name,
         )
         return moved
+
+    def migrate_roles(
+        self,
+        trees: dict,
+        target: "PlacementPolicy | str | Mapping",
+        defs: Mapping | None = None,
+        *,
+        force: bool = False,
+    ) -> list[Role]:
+        """Migrate several roles' live trees to ``target`` in one pass.
+
+        ``trees`` maps :class:`Role` to its live pytree and is mutated
+        **in place** as each role lands — deliberately: a migrated role's
+        old buffers may have been donated (freed), so the moved tree must
+        survive a later role's failure.  Roles whose placement is
+        unchanged are skipped unless ``force``.  ``defs`` maps roles to
+        def pytrees (PARAMS defaults to the bundle's).
+
+        On partial failure the adopted policy is the *old* policy with
+        the already-moved placements swapped in — it always describes
+        what the live buffers actually are — and the error re-raises.
+        On success adopts ``target``.  Returns the roles moved.
+        """
+        if self.mesh is None:
+            return []
+        target = parse_policy(target)
+        validate_policy_for_mesh(target, self.mesh)
+        old = self.policy
+        defs = defs or {}
+        moved: list[Role] = []
+        try:
+            for role in list(trees):
+                role = parse_role(role)
+                if not force and target.placement(role) == old.placement(role):
+                    continue
+                trees[role] = self.migrate(
+                    trees[role], role, target, defs.get(role),
+                    donate=donation_compatible(old, role),
+                )
+                # migrate() adopted target; hold the handover until every
+                # role lands so a failure can report the true partial state
+                self.policy = old
+                moved.append(role)
+        except BaseException:
+            partial = old
+            for r in moved:
+                partial = partial.with_placement(r, target.placement(r))
+            if moved:
+                partial = partial.renamed(
+                    old.name + "+" + ",".join(
+                        f"{r.value}={target.placement(r).to_str()}"
+                        for r in moved
+                    )
+                )
+            self.policy = partial
+            raise
+        self.policy = target
+        return moved
+
+    def evacuate(
+        self,
+        tier: "MemoryTier | str",
+        trees: dict,
+        defs: Mapping | None = None,
+        *,
+        phase: str | None = None,
+        **phase_kw,
+    ) -> tuple[PlacementPolicy, list[Role]]:
+        """Abandon ``tier`` and re-place every affected role off it.
+
+        The graceful-degradation primitive: :meth:`mark_tier_lost`
+        excludes the tier (and its donor-axis siblings) from every
+        future planner pass and spill pick, then the roles in ``trees``
+        whose current placement sits on a lost tier are migrated to a
+        realizable target — the planner's re-pick for ``phase`` when
+        given (priced by the same ``migrate`` cost model as any replan),
+        else the current policy with each lost placement swapped to
+        local HBM (the placement that always exists).  Reuses
+        :meth:`migrate_roles`' adopt-nothing-on-failure semantics.
+
+        Tier loss is a *degradation notice*, not a crash: the lost
+        tier's buffers are assumed still readable (the GH200 failure
+        mode is an order-of-magnitude slowdown, not data loss), so the
+        evacuation copy itself may read from them one last time.
+        Returns ``(adopted policy, roles moved)``.
+        """
+        tier = self.mark_tier_lost(tier)
+        old = self.policy
+        affected = [
+            r for r in trees if old.placement(parse_role(r)).tier
+            in self.lost_tiers
+        ]
+        if self.mesh is None or not affected:
+            return old, []
+        if phase is not None:
+            try:
+                self.plan_phase(phase, log_table=False, **phase_kw)
+                target = self.policy
+            finally:
+                self.policy = old
+            # the planner minimizes step time, not realizability of the
+            # degraded set: guard against a pick that still touches a
+            # lost tier (possible only with explicit candidates)
+            if any(
+                target.placement(parse_role(r)).tier in self.lost_tiers
+                for r in trees
+            ):
+                target = None
+        else:
+            target = None
+        if target is None:
+            target = old
+            for r, p in old.placements.items():
+                if p.tier in self.lost_tiers:
+                    target = target.with_placement(
+                        r, Placement(MemoryTier.HBM)
+                    )
+            target = target.renamed(f"{old.name}-evac-{tier.value}")
+        moved = self.migrate_roles(trees, target, defs)
+        log.warning(
+            "evacuated %s off %s: policy %s -> %s",
+            ",".join(r.value for r in moved) or "nothing",
+            tier.value, old.name, self.policy.name,
+        )
+        return self.policy, moved
 
     # -- streaming ---------------------------------------------------------
     def open_stream(

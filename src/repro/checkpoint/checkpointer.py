@@ -27,6 +27,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.runtime.retry import CHECKPOINT_RETRY, retry_call
+
 
 def _flatten_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -73,7 +75,7 @@ class Checkpointer:
             ],
         }
 
-        def write():
+        def write_once():
             tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
             final = os.path.join(self.directory, f"step_{step:08d}")
             os.makedirs(tmp, exist_ok=True)
@@ -88,10 +90,31 @@ class Checkpointer:
             os.rename(tmp, final)            # atomicity point
             self._gc()
 
+        def write():
+            # transient filesystem errors (a flaky network mount, a full
+            # disk being reaped) retry under the checkpoint budget; the
+            # .tmp/ staging makes re-running the whole write idempotent
+            retry_call(
+                write_once, retry_on=(OSError,), policy=CHECKPOINT_RETRY,
+                label=f"checkpoint step {step}", seed=step,
+            )
+
+        def write_background():
+            # the thread must capture failures for wait() to re-raise:
+            # an exception dying with the thread would turn a failed
+            # checkpoint into a silently missing one
+            try:
+                write()
+            except Exception as e:
+                self._error = e
+
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._error = None
+            self._thread = threading.Thread(
+                target=write_background, daemon=True
+            )
             self._thread.start()
 
     def wait(self) -> None:

@@ -1,0 +1,277 @@
+"""Deterministic fault injection: the harness behind the self-healing runtime.
+
+The paper's placement results assume the links behave; its successors show
+what happens when they do not — same-class links varying >2x by physical
+route (Pearson, arxiv 2302.14827) and GH200 access-path faults surfacing
+as order-of-magnitude *slowdowns* rather than errors (arxiv 2407.07850).
+A placement-aware serve runtime therefore needs recovery paths, and
+recovery paths need a way to be exercised deterministically.  This module
+is that way: a :class:`FaultPlan` is a seeded, step-indexed schedule of
+:class:`FaultEvent`\\ s that fire at named injection *sites* — the
+dispatch and migration entry points of :class:`repro.api.Runtime` and the
+serve :class:`~repro.serve.Executor` — and either raise a typed
+fault, stall the caller, or hand back a data-corruption token the caller
+applies to the bytes in flight.
+
+Fault taxonomy (see ``docs/robustness.md``):
+
+* :class:`TierLossError` — a donor tier (peer HBM/DRAM over the ``donor``
+  axis, remote HBM over ``donor_pod``, or host DRAM) became unusable.
+  The serve layer catches it, evacuates every affected role
+  (:meth:`repro.api.Runtime.evacuate`), and continues degraded.
+* :class:`MigrationFault` — a *transient* migrate/realize failure
+  (retryable: :func:`repro.runtime.retry.retry_call` wraps migrations).
+* ``stall`` — the dispatch takes far longer than its deadline; not an
+  exception at all (the GH200 lesson: path faults often manifest as
+  latency).  The :class:`repro.runtime.supervisor.Watchdog` catches it.
+* :class:`SpillCorruptionError` — a preemption spill round trip returned
+  different bytes than it parked (detected by checksum at promotion).
+  The scheduler drops the parked rows and re-queues the request as a
+  ``"fresh"`` waiter whose prompt replays everything generated so far —
+  bit-identical continuation, because prefill ≡ decode replay.
+
+Production paths pay nothing: every site guard is
+``if plan: plan.check(site)`` against the falsy :data:`NO_FAULTS`
+default.  Only this module may *raise* the injected fault types — the
+``injected-fault-raise`` lint rule (allowlist scoped to this file,
+verified by ``tools/audit.py --selftest``) keeps the harness from
+leaking into production control flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement import DonorAxisError, parse_tier
+
+__all__ = [
+    "FaultKind",
+    "FaultEvent",
+    "FaultPlan",
+    "InjectedFault",
+    "TransientFault",
+    "TierLossError",
+    "MigrationFault",
+    "SpillCorruptionError",
+    "NO_FAULTS",
+    "checksum_tree",
+    "corrupt_tree",
+    "verify_spill",
+]
+
+
+class FaultKind(str, enum.Enum):
+    """What an event does when it fires."""
+
+    TIER_LOSS = "tier_loss"          # drop a donor/host tier mid-run
+    MIGRATE_FAIL = "migrate_fail"    # fail a migrate()/realize() call
+    STALL = "stall"                  # stall a dispatch past its deadline
+    SPILL_CORRUPT = "spill_corrupt"  # corrupt a spill round trip
+
+
+class InjectedFault(RuntimeError):
+    """Base class of every fault the harness raises."""
+
+
+class TransientFault(InjectedFault):
+    """A fault that may succeed on retry — what retry policies wrap."""
+
+
+class TierLossError(InjectedFault):
+    """A memory tier (and everything parked on it) became unusable.
+
+    Carries the lost :class:`~repro.core.hardware.MemoryTier`; the serve
+    layer's recovery path (`Server._recover_tier_loss`) marks it lost on
+    the runtime, evacuates affected roles, and re-queues spilled
+    sequences whose parked rows lived there.
+    """
+
+    def __init__(self, tier, message: str = ""):
+        self.tier = parse_tier(tier)
+        super().__init__(
+            message or f"tier {self.tier.value} lost: donor axis dropped"
+        )
+
+
+class MigrationFault(TransientFault):
+    """A transient migrate/realize failure (link hiccup surrogate)."""
+
+
+class SpillCorruptionError(InjectedFault):
+    """A promoted spill's bytes differ from what was parked."""
+
+    def __init__(self, rid: int, expected: float, got: float):
+        self.rid = rid
+        self.expected = expected
+        self.got = got
+        super().__init__(
+            f"spilled rows for rid {rid} failed their integrity check "
+            f"(checksum {got!r} != {expected!r} at spill time); dropping "
+            "the parked rows and replaying the sequence"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    ``site`` names the injection point (``decode`` / ``prefill`` /
+    ``migrate`` / ``realize`` / ``extract`` / ``spill`` /
+    ``checkpoint``); ``at`` is the 0-indexed pass through that site on
+    which the event fires, and ``times`` how many *consecutive* passes it
+    keeps firing for (>1 models a fault that outlives one retry).
+    """
+
+    site: str
+    at: int
+    kind: FaultKind
+    #: TIER_LOSS target, any ``parse_tier`` spelling ("peer_hbm", "host")
+    tier: str | None = None
+    #: STALL duration
+    seconds: float = 0.0
+    times: int = 1
+    #: MIGRATE_FAIL flavor: "transient" raises the retryable
+    #: MigrationFault; "donor" raises DonorAxisError (permanent — what a
+    #: real donor-axis validation failure looks like mid-replan)
+    error: str = "transient"
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["kind"] = self.kind.value
+        return d
+
+
+class FaultPlan:
+    """A deterministic, step-indexed schedule of injected faults.
+
+    Sites call :meth:`check` once per pass; the plan counts passes per
+    site and fires the events whose ``[at, at + times)`` window covers
+    the current index.  Everything is decided by construction — no
+    randomness at fire time — so a seeded schedule replays exactly.
+
+    The falsy :data:`NO_FAULTS` (an empty plan) is the production
+    default; guards read ``if plan: plan.check(site)`` so the no-fault
+    hot path costs one attribute truthiness test.
+    """
+
+    def __init__(self, events: Iterable[FaultEvent] = (), seed: int = 0):
+        self.events = tuple(events)
+        self.seed = int(seed)
+        self._counts: dict[str, int] = {}
+        #: every fired (site, index, event), in firing order — what the
+        #: chaos soak records next to its results
+        self.fired: list[tuple[str, int, FaultEvent]] = []
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def __repr__(self) -> str:
+        return (
+            f"FaultPlan(seed={self.seed}, events={len(self.events)}, "
+            f"fired={len(self.fired)})"
+        )
+
+    def site_count(self, site: str) -> int:
+        """Passes through ``site`` so far."""
+        return self._counts.get(site, 0)
+
+    def check(self, site: str) -> FaultEvent | None:
+        """Count one pass through ``site`` and fire any matching event.
+
+        TIER_LOSS and MIGRATE_FAIL raise; STALL sleeps and returns the
+        event; SPILL_CORRUPT returns the event for the caller to apply
+        (the harness cannot reach the bytes being parked).  Returns
+        ``None`` when nothing fires.
+        """
+        idx = self._counts.get(site, 0)
+        self._counts[site] = idx + 1
+        hit: FaultEvent | None = None
+        for ev in self.events:
+            if ev.site != site or not ev.at <= idx < ev.at + ev.times:
+                continue
+            self.fired.append((site, idx, ev))
+            if ev.kind is FaultKind.STALL:
+                time.sleep(ev.seconds)
+                hit = ev
+            elif ev.kind is FaultKind.TIER_LOSS:
+                raise TierLossError(ev.tier or "peer_hbm")
+            elif ev.kind is FaultKind.MIGRATE_FAIL:
+                if ev.error == "donor":
+                    raise DonorAxisError(
+                        f"injected donor-axis failure at {site}[{idx}]"
+                    )
+                raise MigrationFault(
+                    f"injected transient {site} failure at pass {idx}"
+                )
+            else:  # SPILL_CORRUPT: data fault, applied by the caller
+                hit = ev
+        return hit
+
+    def to_json(self) -> dict:
+        """Schedule + firing record, for the chaos soak's artifact."""
+        return {
+            "seed": self.seed,
+            "events": [ev.to_json() for ev in self.events],
+            "fired": [
+                {"site": site, "index": idx, **ev.to_json()}
+                for site, idx, ev in self.fired
+            ],
+        }
+
+    def summary(self) -> str:
+        return json.dumps(self.to_json(), indent=2, sort_keys=True)
+
+
+#: the production default: no events, falsy, check() never fires.
+NO_FAULTS = FaultPlan()
+
+
+# ---------------------------------------------------------------------------
+# Spill-integrity helpers (checksum at park time, verify at promotion)
+# ---------------------------------------------------------------------------
+
+def checksum_tree(tree) -> float:
+    """Cheap order-deterministic checksum of a pytree's values.
+
+    One f32 reduction per leaf (the sum order inside a leaf is fixed per
+    compilation, and the same bytes re-summed give the same float), so a
+    parked spill can be verified at promotion without holding a second
+    copy.  Off the per-token path — only spill/promote lifecycle events
+    pay for it, and only when spill verification is on.
+    """
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        total += float(jnp.sum(jnp.asarray(leaf, jnp.float32)))
+    return total
+
+
+def corrupt_tree(tree):
+    """Perturb one element of the first leaf — the SPILL_CORRUPT payload.
+
+    Deterministic and minimal: enough to trip :func:`checksum_tree`
+    verification without masking bookkeeping bugs behind large damage.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if leaves:
+        x = leaves[0]
+        leaves = [x.at[(0,) * x.ndim].add(jnp.asarray(1, x.dtype))] \
+            + list(leaves[1:])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def verify_spill(rows, checksum: float | None, rid: int) -> None:
+    """Raise :class:`SpillCorruptionError` when ``rows`` no longer match
+    the checksum taken at spill time (``checksum=None`` skips — spills
+    are only checksummed when verification is enabled)."""
+    if checksum is None:
+        return
+    got = checksum_tree(rows)
+    if got != checksum:
+        raise SpillCorruptionError(rid, checksum, got)

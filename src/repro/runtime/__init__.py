@@ -1,2 +1,15 @@
+from repro.runtime.retry import (  # noqa: F401
+    CHECKPOINT_RETRY,
+    DEFAULT_RETRY,
+    MIGRATION_RETRY,
+    RetryBudgetExceeded,
+    RetryPolicy,
+    retry_call,
+)
 from repro.runtime.straggler import StepTimeMonitor, StragglerConfig  # noqa: F401
-from repro.runtime.supervisor import Supervisor, SupervisorConfig  # noqa: F401
+from repro.runtime.supervisor import (  # noqa: F401
+    Supervisor,
+    SupervisorConfig,
+    Watchdog,
+    WatchdogConfig,
+)

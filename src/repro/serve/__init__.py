@@ -20,7 +20,9 @@ from repro.serve.scheduler import (  # noqa: F401
     QueueFullError,
     Request,
     Scheduler,
+    SchedulerClosed,
     ServeConfig,
+    ServeHangError,
     Server,
 )
 from repro.serve.state import SlotTable, SpilledSequence  # noqa: F401

@@ -57,8 +57,9 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api import Runtime
+from repro.core.faults import TransientFault
 from repro.core.placement import Placement, PlacementPolicy, Role, parse_policy
-from repro.models.sharding import donation_compatible
+from repro.runtime.retry import MIGRATION_RETRY, retry_call
 from repro.serve import sampling as sampling_mod
 from repro.serve.state import idle_device_state, upload
 
@@ -96,6 +97,13 @@ class Executor:
                 "chunk %d)", self.rt.policy.name, bundle.cfg.name,
                 cfg.batch_slots, cfg.max_len, cfg.prefill_chunk,
             )
+        # injected-fault schedule (ServeConfig.faults): lives on the
+        # Runtime so migrate()/realize() sites and the executor's
+        # dispatch sites consult one plan; NO_FAULTS default costs one
+        # truthiness test per site
+        faults = getattr(cfg, "faults", None)
+        if faults:
+            self.rt.faults = faults
         self.caches = bundle.init_cache(cfg.batch_slots, cfg.max_len)
         if mesh is not None:
             # realize the policy for every role the executor owns: the KV
@@ -121,6 +129,7 @@ class Executor:
             "replans": 0, "migrations": 0,
             "decode_replay_prefills": 0,
             "spill_s": 0.0, "restore_s": 0.0,
+            "migration_retries": 0, "evacuations": 0,
         }
         self._build_steps()
 
@@ -359,6 +368,11 @@ class Executor:
         the packed result fetched through a single async transfer — the
         only per-step host↔device traffic.
         """
+        # pre-dispatch injection: the decode jit donates state + caches,
+        # so a fault must fire before the call consumes the buffers — a
+        # recovery path then sees intact pre-step state
+        if self.rt.faults:
+            self.rt.faults.check("decode")
         t0 = time.perf_counter()
         out, new_state, self.caches = self._decode(
             self.params, state, self.caches
@@ -403,6 +417,8 @@ class Executor:
         produce the first generated token.  Blocks on the dispatches so
         the prefill/decode split in the counters is honest.
         """
+        if self.rt.faults:
+            self.rt.faults.check("prefill")
         t0 = time.perf_counter()
         if self._prefill is None:
             self._replay_prefill(new, table)
@@ -492,6 +508,8 @@ class Executor:
         """Pull slot ``i``'s cache rows out and park them on
         ``spill_to`` (the planner-priced spill tier).  Blocking — the
         rows are consistent when this returns.  Counted in ``spill_s``."""
+        if self.rt.faults:
+            self.rt.faults.check("extract")
         t0 = time.perf_counter()
         rows = self._extract(self.caches, jnp.int32(i))
         if self.mesh is not None:
@@ -565,48 +583,99 @@ class Executor:
             (self.caches,) if inflight is None else (self.caches, inflight)
         )
         # plan_phase may have already adopted the target into rt.policy;
-        # migrate() owns the handover, and on failure rt.policy must keep
-        # describing what the live buffers actually are.  Donation is
-        # decided by the SOURCE placement (a STREAM source keeps its
-        # resident buffer undonated) — pass it explicitly.
+        # migrate_roles() owns the handover: it mutates the trees dict in
+        # place as each role lands, and on partial failure sets rt.policy
+        # to what the live buffers actually are.  Transient faults (link
+        # hiccups, injected MigrationFault) are retried under the
+        # migration budget — the retry re-reads the partial policy, so
+        # only the unfinished roles move again.
         self.rt.policy = old
-        moved_kv = False
+        trees = {Role.KV_CACHE: self.caches, Role.PARAMS: self.params}
+        defs = {Role.KV_CACHE: self._cache_defs()}
+
+        def _on_retry(attempt, err, delay):
+            self.counters["migration_retries"] += 1
+
         try:
-            if force or target.placement(Role.KV_CACHE) != old.placement(
-                Role.KV_CACHE
-            ):
-                self.caches = self.rt.migrate(
-                    self.caches, Role.KV_CACHE, target, self._cache_defs(),
-                    donate=donation_compatible(old, Role.KV_CACHE),
-                )
-                moved_kv = True
-            if force or target.placement(Role.PARAMS) != old.placement(
-                Role.PARAMS
-            ):
-                self.params = self.rt.migrate(
-                    self.params, Role.PARAMS, target,
-                    donate=donation_compatible(old, Role.PARAMS),
-                )
-        except Exception:
-            # a half-done replan must not lie about the live placement:
-            # nothing moved -> the old policy; KV moved but params did
-            # not -> old with the KV placement swapped in
-            self.rt.policy = (
-                old.with_placement(
-                    Role.KV_CACHE, target.placement(Role.KV_CACHE)
-                ).renamed(
-                    f"{old.name}+kv_cache="
-                    f"{target.placement(Role.KV_CACHE).to_str()}"
-                )
-                if moved_kv else old
+            moved = retry_call(
+                lambda: self.rt.migrate_roles(
+                    trees, target, defs, force=force
+                ),
+                retry_on=(TransientFault,),
+                policy=MIGRATION_RETRY,
+                label=f"replan {old.name}->{target.name}",
+                seed=self.counters["replans"],
+                on_retry=_on_retry,
             )
-            self._build_steps()
+        except BaseException:
+            # migrated roles' old buffers were donated (freed): adopt
+            # whatever landed before re-raising, or the executor would
+            # dispatch against dead buffers.  Rebuild the jits only if
+            # something actually moved — a clean adopt-nothing failure
+            # leaves the compiled steps valid as-is.
+            self.caches = trees[Role.KV_CACHE]
+            self.params = trees[Role.PARAMS]
+            if self.rt.policy is not old:
+                self._build_steps()
             raise
-        self.rt.policy = target
+        self.caches = trees[Role.KV_CACHE]
+        self.params = trees[Role.PARAMS]
         self._build_steps()
         self.counters["migrations"] += 1
         log.info(
-            "replan: migrated %s -> %s at occupancy %.0f%%",
-            old.name, target.name, 100 * occupancy,
+            "replan: migrated %s -> %s (%s) at occupancy %.0f%%",
+            old.name, target.name,
+            ",".join(r.value for r in moved) or "forced no-op",
+            100 * occupancy,
         )
         return True
+
+    def evacuate(
+        self, tier, *, occupancy: float = 1.0, inflight=None
+    ) -> list[Role]:
+        """Serve-side tier loss: drain in-flight work, delegate to
+        :meth:`repro.api.Runtime.evacuate` (planner re-pick with the
+        lost tier excluded, transient faults retried under the
+        migration budget), adopt the moved trees and rebuild the jits.
+        Returns the roles that moved."""
+        if self.mesh is None:
+            self.rt.mark_tier_lost(tier)
+            return []
+        old = self.rt.policy
+        jax.block_until_ready(
+            (self.caches,) if inflight is None else (self.caches, inflight)
+        )
+        trees = {Role.KV_CACHE: self.caches, Role.PARAMS: self.params}
+        defs = {Role.KV_CACHE: self._cache_defs()}
+
+        def _on_retry(attempt, err, delay):
+            self.counters["migration_retries"] += 1
+
+        try:
+            _, moved = retry_call(
+                lambda: self.rt.evacuate(
+                    tier, trees, defs, phase="serve",
+                    batch_slots=self.cfg.batch_slots,
+                    max_len=self.cfg.max_len,
+                    prefill_chunk=self.cfg.prefill_chunk,
+                    kv_utilization=occupancy,
+                ),
+                retry_on=(TransientFault,),
+                policy=MIGRATION_RETRY,
+                label=f"evacuate {tier}",
+                seed=self.counters["evacuations"],
+                on_retry=_on_retry,
+            )
+        except BaseException:
+            self.caches = trees[Role.KV_CACHE]
+            self.params = trees[Role.PARAMS]
+            if self.rt.policy is not old:
+                self._build_steps()
+            raise
+        self.caches = trees[Role.KV_CACHE]
+        self.params = trees[Role.PARAMS]
+        self.counters["evacuations"] += 1
+        if moved:
+            self._build_steps()
+            self.counters["migrations"] += 1
+        return moved

@@ -50,7 +50,18 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.placement import PlacementPolicy
+from repro.core.faults import (
+    FaultKind,
+    FaultPlan,
+    SpillCorruptionError,
+    TierLossError,
+    checksum_tree,
+    corrupt_tree,
+    verify_spill,
+)
+from repro.core.hardware import MemoryTier
+from repro.core.placement import PlacementPolicy, Role
+from repro.runtime.supervisor import Watchdog, WatchdogConfig
 from repro.serve.engine import Executor
 from repro.serve.sampling import GREEDY, SamplingParams
 from repro.serve.state import SlotTable, SpilledSequence
@@ -66,6 +77,36 @@ class QueueFullError(RuntimeError):
     """
 
 
+class ServeHangError(RuntimeError):
+    """The serve loop failed to make progress: ``run_until_done``
+    exhausted its step budget with live requests still queued, or the
+    watchdog escalated past its last rung.  Carries the diagnostics a
+    post-mortem needs: queue depth, the live rids, and the last stats
+    snapshot."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        queue_depth: int = 0,
+        live_rids=(),
+        stats: dict | None = None,
+    ):
+        self.queue_depth = int(queue_depth)
+        self.live_rids = tuple(live_rids)
+        self.stats = dict(stats or {})
+        super().__init__(
+            f"{message} [queue_depth={self.queue_depth} "
+            f"live_rids={list(self.live_rids)} stats={self.stats}]"
+        )
+
+
+class SchedulerClosed(RuntimeError):
+    """:meth:`Scheduler.close` was called: pending ``submit()`` waiters
+    (and streams that can no longer finish) are cancelled with this
+    instead of waiting forever."""
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.
@@ -73,9 +114,14 @@ class Request:
     ``sampling`` defaults to greedy (temperature 0 — bit-identical to
     the pre-sampler engine); ``on_token`` streams each generated token
     as ``on_token(request, token)`` the tick it is decoded (check
-    ``request.done`` inside the callback for end-of-stream).  The
-    ``*_s`` fields are ``time.perf_counter`` stamps the benchmarks turn
-    into queue-wait / time-to-first-token / completion latencies.
+    ``request.done`` inside the callback for end-of-stream; a cancelled
+    or expired request streams one terminal ``-1`` sentinel with
+    ``done`` already set).  The ``*_s`` fields are
+    ``time.perf_counter`` stamps the benchmarks turn into queue-wait /
+    time-to-first-token / completion latencies.  ``deadline_s`` bounds
+    the request's *total* wall time from submission: past it the server
+    expires the request at the next tick (slot freed, counted in
+    ``stats()["expired"]``).
     """
 
     rid: int
@@ -89,6 +135,16 @@ class Request:
     submitted_s: float | None = None
     first_token_s: float | None = None
     finished_s: float | None = None
+    #: total wall-time budget from submission (None = unbounded)
+    deadline_s: float | None = None
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Cooperative cancellation: the server finalizes the request on
+        its next tick — slot freed through ``_free_slot``, terminal
+        ``-1`` sentinel streamed to ``on_token``, counted in
+        ``stats()["cancelled"]``.  Idempotent; a no-op once done."""
+        self.cancelled = True
 
 
 @dataclasses.dataclass
@@ -126,6 +182,19 @@ class ServeConfig:
     #: compiled module (repro.analysis.hlo_audit.DonationAliasError
     #: instead of a silent cache-sized copy per dispatch)
     verify_donation: bool = True
+    #: injected-fault schedule (core.faults.FaultPlan); None = NO_FAULTS.
+    #: Lives on the executor's Runtime so every site consults one plan.
+    faults: FaultPlan | None = None
+    #: checksum spilled rows at park time and verify at promotion; a
+    #: mismatch drops the parked rows and replays the request
+    #: (bit-identical continuation).  Always on while faults are active.
+    verify_spills: bool = False
+    #: step watchdog (stall -> retry -> evacuate -> ServeHangError);
+    #: None disables it.  The deadline follows the runtime's
+    #: measured-else-analytic decode-step price.
+    watchdog: WatchdogConfig | None = dataclasses.field(
+        default_factory=WatchdogConfig
+    )
 
 
 class Server:
@@ -152,9 +221,30 @@ class Server:
         self._state = self.engine.place_state(self.table.device_state())
         self._replan_band: int | None = None
         self._next_rid = 0
+        #: rid -> replacement prompt for the next "fresh" admission: a
+        #: replayed request (corrupted spill, tier loss mid-flight)
+        #: prefills prompt + everything generated so far instead of its
+        #: original prompt — bit-identical continuation
+        self._replay_prompts: dict[int, np.ndarray] = {}
         self._counters = {
             "preemptions": 0, "promotions": 0, "peak_queue": 0,
+            "cancelled": 0, "expired": 0,
+            "tier_losses": 0, "spill_corruptions": 0, "requeued_fresh": 0,
+            "watchdog_stalls": 0, "watchdog_retries": 0,
+            "watchdog_evacuations": 0,
         }
+        #: serve-step watchdog: deadlines each decode against the
+        #: runtime's measured-else-analytic step price (see
+        #: repro.runtime.supervisor.Watchdog); None = disabled
+        self.watchdog = (
+            None if cfg.watchdog is None
+            else Watchdog(
+                lambda: self.rt.decode_step_seconds(
+                    cfg.batch_slots, cfg.max_len
+                ),
+                cfg.watchdog,
+            )
+        )
 
     # -- introspection -----------------------------------------------------
     @property
@@ -195,10 +285,14 @@ class Server:
 
     def stats(self) -> dict:
         """Counters across all layers: executor phase tokens/seconds and
-        lifecycle events (``replans``/``migrations``/
-        ``decode_replay_prefills``/``spill_s``/``restore_s``) merged with
-        the scheduler's (``preemptions``/``promotions``/``peak_queue``)
-        plus the live ``queued``/``spilled`` depths."""
+        lifecycle events (``replans``/``migrations``/``evacuations``/
+        ``migration_retries``/``decode_replay_prefills``/``spill_s``/
+        ``restore_s``) merged with the scheduler's (``preemptions``/
+        ``promotions``/``peak_queue``, plus the robustness set:
+        ``cancelled``/``expired``/``tier_losses``/``spill_corruptions``/
+        ``requeued_fresh``/``watchdog_stalls``/``watchdog_retries``/
+        ``watchdog_evacuations``) and the live ``queued``/``spilled``
+        depths."""
         return {
             **self.engine.counters,
             **self._counters,
@@ -320,15 +414,92 @@ class Server:
         advances from the *returned* token vector."""
         self._state = self.engine.place_state(self.table.device_state())
 
+    def _free_slot(self, i: int) -> int | None:
+        """The one place an *occupied* slot returns to the pool: clears
+        the table row and evicts the rid's request bookkeeping together
+        (requests map, wait-start stamp).  Returns the evicted rid."""
+        rid = self.table.free(i)
+        if rid is not None:
+            self._requests.pop(rid, None)
+            self._wait_since.pop(rid, None)
+            self._replay_prompts.pop(rid, None)
+        return rid
+
+    def _requeue_fresh(self, rid: int) -> None:
+        """Re-queue a live request as a ``"fresh"`` waiter whose next
+        admission replays prompt + everything generated so far.
+
+        The recovery primitive behind corrupted spills and lost spill
+        tiers: chunked prefill ≡ decode replay and sampling draws are
+        (seed, position)-deterministic, so the replayed continuation is
+        bit-identical to never having been interrupted.  Inserted at
+        the queue head — the request already waited its turn once."""
+        req = self._requests[rid]
+        if req.out_tokens:
+            self._replay_prompts[rid] = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens, np.int32)]
+            )
+        self._waitq = [(k, r) for k, r in self._waitq if r != rid]
+        self._waitq.insert(0, ("fresh", rid))
+        self._wait_since[rid] = self._tick
+        self._counters["requeued_fresh"] += 1
+
+    def _reap_cancelled_expired(self) -> None:
+        """Finalize cancelled and deadline-expired requests (start of
+        every tick): slot freed via :meth:`_free_slot`, queue/spill
+        entries dropped, terminal ``-1`` sentinel streamed, counted in
+        ``stats()["cancelled"]`` / ``["expired"]``."""
+        now = time.perf_counter()
+        freed = False
+        for req in list(self._requests.values()):
+            if req.done:
+                continue
+            expired = (
+                req.deadline_s is not None
+                and req.submitted_s is not None
+                and now - req.submitted_s > req.deadline_s
+            )
+            if not (req.cancelled or expired):
+                continue
+            why = "cancelled" if req.cancelled else "expired"
+            i = self.table.slot_of(req.rid)
+            if i is not None:
+                self._free_slot(i)
+                freed = True
+            else:
+                self._waitq = [
+                    (k, r) for k, r in self._waitq if r != req.rid
+                ]
+                self._spilled.pop(req.rid, None)
+                self._requests.pop(req.rid, None)
+                self._wait_since.pop(req.rid, None)
+                self._replay_prompts.pop(req.rid, None)
+            req.done = True
+            req.finished_s = time.perf_counter()
+            self._counters[why] += 1
+            log.info(
+                "request %d %s after %d generated token(s)",
+                req.rid, why, len(req.out_tokens),
+            )
+            if req.on_token is not None:
+                req.on_token(req, -1)
+        if freed:
+            self._sync_state()
+
     def _admit(self) -> None:
         """Fill free slots from the wait queue, FIFO by wait start.
 
         Fresh requests are claimed and prefilled *batched* (one chunked
         dispatch set for all of them); spilled sequences are promoted —
-        their parked rows scattered back, no prefill (the KV is intact).
+        their parked rows verified (when spill verification is on) and
+        scattered back, no prefill (the KV is intact).  A promotion
+        whose rows fail their integrity check does not consume the
+        slot: the rows are dropped and the request replays as a fresh
+        waiter.
         """
         free = self.table.free_slots()
-        fresh: list[tuple[int, Request]] = []
+        fresh: list[tuple[int, Request, np.ndarray]] = []
         changed = False
         while free and self._waitq:
             kind, rid = self._waitq.pop(0)
@@ -337,22 +508,35 @@ class Server:
             if kind == "fresh":
                 req = self._requests[rid]
                 self.table.claim(i, rid, req.sampling, self._tick)
-                fresh.append((i, req))
+                fresh.append(
+                    (i, req, self._replay_prompts.pop(rid, req.prompt))
+                )
             else:
-                self._promote(i, self._spilled.pop(rid))
+                spilled = self._spilled.pop(rid)
+                try:
+                    self._promote(i, spilled)
+                except SpillCorruptionError as e:
+                    log.warning("%s", e)
+                    self._counters["spill_corruptions"] += 1
+                    free.insert(0, i)       # verify-first: slot untouched
+                    self._requeue_fresh(rid)
         if fresh:
             self.engine.prefill(
-                [(i, req.prompt) for i, req in fresh], self.table
+                [(i, prompt) for i, _, prompt in fresh], self.table
             )
-            for i, req in fresh:
-                self.table.last_tokens[i, 0] = req.prompt[-1]
+            for i, req, prompt in fresh:
+                self.table.last_tokens[i, 0] = prompt[-1]
                 self.table.active[i] = True
         if changed:
             self._sync_state()
 
     def _promote(self, i: int, spilled: SpilledSequence) -> None:
         """Scatter a spilled sequence's parked rows back into slot ``i``
-        and resume its mirrors — bit-identical to never having moved."""
+        and resume its mirrors — bit-identical to never having moved.
+        Verifies the rows against their park-time checksum first
+        (:class:`~repro.core.faults.SpillCorruptionError` on mismatch,
+        before anything is touched)."""
+        verify_spill(spilled.rows, spilled.checksum, spilled.rid)
         self.engine.insert_slot(i, spilled.rows)
         self.table.resume(i, spilled, self._tick)
         self._wait_since.pop(spilled.rid, None)
@@ -419,6 +603,17 @@ class Server:
         rows = self.engine.extract_slot(i, spill_to)
         spilled = self.table.suspend(i, self._tick)
         spilled.rows = rows
+        spilled.tier = spill_to.tier
+        faults = self.rt.faults
+        if self.cfg.verify_spills or faults:
+            # park-time checksum, verified at promotion; off the
+            # per-token path (spill lifecycle events only) and off
+            # entirely unless verification or fault injection is on
+            spilled.checksum = checksum_tree(rows)
+        if faults:
+            ev = faults.check("spill")
+            if ev is not None and ev.kind is FaultKind.SPILL_CORRUPT:
+                spilled.rows = corrupt_tree(spilled.rows)
         spilled.spill_s = time.perf_counter() - t0
         self._spilled[rid] = spilled
         self._waitq.append(("spilled", rid))
@@ -452,6 +647,85 @@ class Server:
             self._replan_band = band
             self.replan()
 
+    # -- tier-loss recovery ------------------------------------------------
+    def _lose_tier(self, tier) -> None:
+        """Degrade off ``tier`` and keep serving: evacuate the live
+        KV/params roles (planner re-pick excluding the lost tier, jits
+        rebuilt), replay any spilled sequence whose parked rows lived
+        there, and re-sync the device state."""
+        # un-claim any slot caught mid-admission (claimed, prefill never
+        # completed): free the row and put its request back at the queue
+        # head — _requeue_fresh rebuilds the replay prompt if it had
+        # already generated tokens
+        for i in range(self.table.batch_slots):
+            rid = self.table.slots[i]
+            if rid is not None and not bool(self.table.active[i]):
+                self.table.free(i)
+                self._requeue_fresh(rid)
+        self.engine.evacuate(
+            tier, occupancy=self.occupancy(),
+            inflight=self._state["tokens"],
+        )
+        # parked rows on a lost tier: drop them and replay the request
+        # from its prompt + generated tokens (bit-identical continuation)
+        for rid, sp in list(self._spilled.items()):
+            if sp.tier is not None and sp.tier in self.rt.lost_tiers:
+                self._spilled.pop(rid)
+                self._requeue_fresh(rid)
+        self._sync_state()
+
+    def _recover_tier_loss(self, e: TierLossError) -> None:
+        self._counters["tier_losses"] += 1
+        log.warning(
+            "tier loss at tick %d: %s — evacuating and continuing "
+            "degraded", self._tick, e,
+        )
+        self._lose_tier(e.tier)
+
+    def _escalate(self, action: str) -> None:
+        """Act on a watchdog verdict: ``stall`` warns and counts;
+        ``retry`` rebuilds the jitted dispatch path; ``evacuate``
+        degrades off the presumed-slow far tier (the GH200 failure
+        mode: an access-path fault showing up as a slowdown, not an
+        error); ``hang`` raises :class:`ServeHangError`."""
+        if action == "stall":
+            self._counters["watchdog_stalls"] += 1
+            return
+        if action == "retry":
+            self._counters["watchdog_retries"] += 1
+            log.warning(
+                "watchdog retry: rebuilding the jitted dispatch path"
+            )
+            self.engine._build_steps()
+            return
+        if action == "evacuate":
+            far = [
+                self.policy.placement(r).tier
+                for r in (Role.KV_CACHE, Role.PARAMS)
+                if self.policy.placement(r).tier is not MemoryTier.HBM
+                and self.policy.placement(r).tier not in self.rt.lost_tiers
+            ]
+            if not far:
+                # nothing left to degrade; the ladder continues to hang
+                self._counters["watchdog_stalls"] += 1
+                return
+            self._counters["watchdog_evacuations"] += 1
+            log.warning(
+                "watchdog evacuate: abandoning presumed-degraded tier %s",
+                far[0].value,
+            )
+            self._lose_tier(far[0])
+            return
+        if action == "hang":
+            raise ServeHangError(
+                f"watchdog: {self.watchdog.breaches} consecutive steps "
+                f"over the {self.watchdog.deadline_s():.3g}s deadline "
+                f"(last step {self.watchdog.last_step_s:.3g}s)",
+                queue_depth=self.queue_depth,
+                live_rids=self.live_rids,
+                stats=self.stats(),
+            )
+
     # -- one decode tick ---------------------------------------------------
     def step(self) -> int:
         """Preempt/admit/promote, then decode one token for every active
@@ -462,8 +736,24 @@ class Server:
         token/stopped vector coming back (one async transfer, then
         blocked on).  Tokens stream to ``on_token`` callbacks the tick
         they are decoded.
+
+        Self-healing: a :class:`~repro.core.faults.TierLossError` from
+        any dispatch is caught here — the server evacuates the lost
+        tier, rebuilds its jits, replays what was parked there, and
+        continues degraded (greedy tokens bit-identical for requests
+        untouched by the fault).  The watchdog deadlines the decode
+        against the runtime's step price and escalates consecutive
+        breaches stall → retry → evacuate → :class:`ServeHangError`.
         """
         self._tick += 1
+        self._reap_cancelled_expired()
+        try:
+            return self._step_inner()
+        except TierLossError as e:
+            self._recover_tier_loss(e)
+            return 0
+
+    def _step_inner(self) -> int:
         self._maybe_preempt()
         self._admit()
         self._maybe_auto_replan()
@@ -471,7 +761,9 @@ class Server:
         if not active:
             return 0
         now = time.perf_counter
+        t0 = now()
         tokens, stopped, self._state = self.engine.decode(self._state)
+        decode_dt = now() - t0
         self.engine.counters["decode_tokens"] += len(active)
         freed = False
         for i in active:
@@ -489,23 +781,37 @@ class Server:
             ):
                 req.done = True
                 req.finished_s = now()
-                rid = self.table.free(i)
-                self._requests.pop(rid, None)
-                self._wait_since.pop(rid, None)
+                self._free_slot(i)
                 freed = True
             if req.on_token is not None:
                 req.on_token(req, tok)
         if freed:
             self._sync_state()
             self._maybe_auto_replan()
+        # feed the watchdog the decode wall time (admission/compile
+        # excluded — the first step after a jit build is compile-
+        # dominated and skipped, same warm-up rule as the step EWMA)
+        if self.watchdog is not None and self.engine._steps_since_build > 1:
+            self._escalate(self.watchdog.observe(decode_dt))
         return len(active)
 
     def run_until_done(self, max_steps: int = 10_000) -> None:
+        """Drive :meth:`step` until nothing is live.  Exhausting
+        ``max_steps`` with work still queued raises
+        :class:`ServeHangError` with full queue/slot diagnostics —
+        never a silent return with requests stranded."""
         for _ in range(max_steps):
             if not self.has_work():
                 return
             self.step()
-        raise RuntimeError("serve loop did not drain")
+        if not self.has_work():
+            return
+        raise ServeHangError(
+            f"serve loop did not drain within max_steps={max_steps}",
+            queue_depth=self.queue_depth,
+            live_rids=self.live_rids,
+            stats=self.stats(),
+        )
 
 
 class Scheduler:
@@ -528,8 +834,12 @@ class Scheduler:
         await asyncio.gather(sched.run(), client())
     """
 
-    def __init__(self, server: Server):
+    def __init__(self, server: Server, *, step_timeout_s: float | None = 60.0):
         self.server = server
+        #: off-thread bound on one server.step(); a step that outlives it
+        #: surfaces as ServeHangError instead of wedging the event loop's
+        #: driver task forever.  None = unbounded.
+        self.step_timeout_s = step_timeout_s
         self._tick_ev = asyncio.Event()
         self._closed = False
 
@@ -542,15 +852,24 @@ class Scheduler:
         await ev.wait()
 
     async def submit(self, prompt, **kw) -> Request:
-        """Queue a request, awaiting queue space under backpressure."""
+        """Queue a request, awaiting queue space under backpressure.
+        Raises :class:`SchedulerClosed` (immediately, or on wake while
+        waiting for space) once :meth:`close` has been called."""
         while True:
+            if self._closed:
+                raise SchedulerClosed(
+                    "scheduler closed; submission cancelled"
+                )
             try:
                 return self.server.submit(prompt, **kw)
             except QueueFullError:
                 await self._wait_tick()
 
     async def stream(self, req: Request):
-        """Async-yield ``req``'s tokens as they are decoded."""
+        """Async-yield ``req``'s tokens as they are decoded.  A stream
+        that can no longer finish — the scheduler closed and the server
+        drained without completing ``req`` — raises
+        :class:`SchedulerClosed` instead of waiting forever."""
         sent = 0
         while True:
             while sent < len(req.out_tokens):
@@ -558,15 +877,38 @@ class Scheduler:
                 sent += 1
             if req.done:
                 return
+            if self._closed and not self.server.has_work():
+                raise SchedulerClosed(
+                    f"scheduler closed with request {req.rid} unfinished"
+                )
             await self._wait_tick()
 
     async def run(self) -> None:
         """Drive the server until :meth:`close` is called and every live
-        request has drained."""
+        request has drained.  Each off-thread step is bounded by
+        ``step_timeout_s``: a wedged dispatch raises
+        :class:`ServeHangError` with the server's diagnostics instead of
+        blocking the driver task indefinitely."""
         try:
             while not (self._closed and not self.server.has_work()):
                 if self.server.has_work():
-                    await asyncio.to_thread(self.server.step)
+                    step = asyncio.to_thread(self.server.step)
+                    if self.step_timeout_s is None:
+                        await step
+                    else:
+                        try:
+                            await asyncio.wait_for(
+                                step, self.step_timeout_s
+                            )
+                        except asyncio.TimeoutError:
+                            raise ServeHangError(
+                                "serve step exceeded the scheduler's "
+                                f"{self.step_timeout_s:.3g}s off-thread "
+                                "bound",
+                                queue_depth=self.server.queue_depth,
+                                live_rids=self.server.live_rids,
+                                stats=self.server.stats(),
+                            ) from None
                 else:
                     await asyncio.sleep(0.001)
                 self._notify()
@@ -574,5 +916,8 @@ class Scheduler:
             self._notify()
 
     def close(self) -> None:
-        """Let :meth:`run` return once the last live request drains."""
+        """Let :meth:`run` return once the last live request drains, and
+        wake every ``submit()``/``stream()`` waiter so those that can no
+        longer complete fail fast with :class:`SchedulerClosed`."""
         self._closed = True
+        self._notify()

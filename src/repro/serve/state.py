@@ -67,6 +67,12 @@ class SpilledSequence:
     sampling: SamplingParams
     since_tick: int         # when it started waiting (promotion ordering)
     spill_s: float = 0.0    # seconds the spill copy took (stats)
+    #: MemoryTier the rows are parked on (tier-loss recovery re-queues
+    #: sequences parked on a lost tier as fresh replays)
+    tier: object = None
+    #: checksum_tree() of rows at park time; None = verification off.
+    #: Promotion verifies against it and a mismatch replays the request.
+    checksum: float | None = None
 
 
 class SlotTable:

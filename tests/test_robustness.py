@@ -1,0 +1,551 @@
+"""Fault injection and graceful degradation: the self-healing serve
+runtime.
+
+The load-bearing invariants: an injected failure adopts nothing (a
+failed migration leaves policy, jits, and tokens untouched), every
+recovery path replays bit-identically (prefill ≡ decode replay +
+(seed, position)-deterministic sampling), and the serve loop never
+hangs silently — it drains, degrades, or raises ``ServeHangError`` with
+diagnostics.  Multi-device paths (tier loss, evacuation, migration
+rollback) run in subprocesses with a forced device count, same pattern
+as ``test_distributed.py``.
+"""
+
+import asyncio
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    NO_FAULTS,
+    FaultEvent,
+    FaultKind,
+    FaultPlan,
+    InjectedFault,
+    MigrationFault,
+    SpillCorruptionError,
+    TierLossError,
+    TransientFault,
+    checksum_tree,
+    corrupt_tree,
+    verify_spill,
+)
+from repro.core.hardware import MemoryTier
+from repro.models import get_smoke_bundle
+from repro.runtime.retry import (
+    DEFAULT_RETRY,
+    RetryBudgetExceeded,
+    RetryPolicy,
+    retry_call,
+)
+from repro.runtime.supervisor import Watchdog, WatchdogConfig
+from repro.serve import (
+    Request,
+    Scheduler,
+    SchedulerClosed,
+    ServeConfig,
+    ServeHangError,
+    Server,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n: int = 4, timeout: int = 600):
+    script = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={n}"\n'
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, (
+        f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    )
+    return r.stdout
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return get_smoke_bundle("olmo-1b")
+
+
+@pytest.fixture(scope="module")
+def params(bundle):
+    return bundle.init_params(jax.random.PRNGKey(0), "float32")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_no_faults_is_falsy_and_inert(self):
+        assert not NO_FAULTS
+        assert NO_FAULTS.check("decode") is None
+        assert bool(FaultPlan([FaultEvent("decode", 0, FaultKind.STALL)]))
+
+    def test_window_indexing_per_site(self):
+        plan = FaultPlan([
+            FaultEvent("decode", at=2, kind=FaultKind.STALL,
+                       seconds=0.0, times=2),
+        ])
+        fired = [plan.check("decode") is not None for _ in range(5)]
+        assert fired == [False, False, True, True, False]
+        # counters are per site: another site never fires this event
+        assert plan.check("migrate") is None
+        assert plan.site_count("decode") == 5
+        assert plan.site_count("migrate") == 1
+
+    def test_tier_loss_raises_with_parsed_tier(self):
+        plan = FaultPlan([
+            FaultEvent("decode", 0, FaultKind.TIER_LOSS, tier="peer_hbm"),
+        ])
+        with pytest.raises(TierLossError) as ei:
+            plan.check("decode")
+        assert ei.value.tier is MemoryTier.PEER_HBM
+        assert isinstance(ei.value, InjectedFault)
+
+    def test_migrate_fail_flavors(self):
+        from repro.core.placement import DonorAxisError
+        transient = FaultPlan([
+            FaultEvent("migrate", 0, FaultKind.MIGRATE_FAIL),
+        ])
+        with pytest.raises(MigrationFault):
+            transient.check("migrate")
+        assert issubclass(MigrationFault, TransientFault)
+        donor = FaultPlan([
+            FaultEvent("migrate", 0, FaultKind.MIGRATE_FAIL,
+                       error="donor"),
+        ])
+        with pytest.raises(DonorAxisError):
+            donor.check("migrate")
+
+    def test_stall_sleeps_and_returns_event(self):
+        plan = FaultPlan([
+            FaultEvent("decode", 0, FaultKind.STALL, seconds=0.05),
+        ])
+        t0 = time.perf_counter()
+        ev = plan.check("decode")
+        assert ev is not None and ev.kind is FaultKind.STALL
+        assert time.perf_counter() - t0 >= 0.05
+
+    def test_firing_record_serializes(self):
+        plan = FaultPlan([
+            FaultEvent("spill", 0, FaultKind.SPILL_CORRUPT),
+        ], seed=7)
+        plan.check("spill")
+        d = plan.to_json()
+        assert d["seed"] == 7
+        assert d["fired"][0]["site"] == "spill"
+        assert d["fired"][0]["kind"] == "spill_corrupt"
+
+
+class TestSpillIntegrity:
+    def test_checksum_detects_corruption(self):
+        tree = {"a": jax.numpy.arange(12, dtype=jax.numpy.float32)
+                .reshape(3, 4)}
+        good = checksum_tree(tree)
+        verify_spill(tree, good, rid=1)            # clean passes
+        verify_spill(tree, None, rid=1)            # None skips
+        bad = corrupt_tree(tree)
+        assert checksum_tree(bad) != good
+        with pytest.raises(SpillCorruptionError) as ei:
+            verify_spill(bad, good, rid=3)
+        assert ei.value.rid == 3
+
+
+# ---------------------------------------------------------------------------
+# Retry policy
+# ---------------------------------------------------------------------------
+
+class Flaky(Exception):
+    """A test-local transient error (injected fault types may only be
+    raised by the harness — the lint rule enforces it)."""
+
+
+class TestRetry:
+    def test_jitter_is_deterministic_per_seed(self):
+        p = RetryPolicy(base_delay_s=0.1, max_delay_s=1.0, jitter=0.5)
+        assert p.delay_s(2, seed=3) == p.delay_s(2, seed=3)
+        assert p.delay_s(2, seed=3) != p.delay_s(2, seed=4)
+        # capped exponential under the jitter band
+        assert p.delay_s(5, seed=0) <= 1.0 * 1.5
+
+    def test_succeeds_after_transient_failures(self):
+        calls = {"n": 0}
+        retried = []
+
+        def fn():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise Flaky(f"attempt {calls['n']}")
+            return "done"
+
+        out = retry_call(
+            fn, retry_on=(Flaky,), policy=RetryPolicy(max_attempts=3),
+            on_retry=lambda a, e, d: retried.append(a), sleep=lambda d: None,
+        )
+        assert out == "done" and calls["n"] == 3 and retried == [0, 1]
+
+    def test_non_retryable_propagates_immediately(self):
+        calls = {"n": 0}
+
+        def fn():
+            calls["n"] += 1
+            raise ValueError("deterministic bug")
+
+        with pytest.raises(ValueError):
+            retry_call(fn, retry_on=(Flaky,), sleep=lambda d: None)
+        assert calls["n"] == 1
+
+    def test_exhaustion_raises_budget_exceeded_with_cause(self):
+        def fn():
+            raise Flaky("always")
+
+        with pytest.raises(RetryBudgetExceeded) as ei:
+            retry_call(fn, retry_on=(Flaky,), label="op",
+                       policy=RetryPolicy(max_attempts=2),
+                       sleep=lambda d: None)
+        assert ei.value.attempts == 2
+        assert isinstance(ei.value.__cause__, Flaky)
+
+    def test_time_budget_cuts_retries_short(self):
+        calls = {"n": 0}
+
+        def fn():
+            calls["n"] += 1
+            raise Flaky("always")
+
+        with pytest.raises(RetryBudgetExceeded):
+            retry_call(
+                fn, retry_on=(Flaky,),
+                policy=RetryPolicy(max_attempts=10, base_delay_s=1.0,
+                                   jitter=0.0, budget_s=0.5),
+                sleep=lambda d: None,
+            )
+        assert calls["n"] == 1   # first backoff would already overrun
+
+    def test_default_policy_is_sane(self):
+        assert DEFAULT_RETRY.max_attempts >= 2
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+class TestWatchdog:
+    def test_escalation_ladder_and_reset(self):
+        wd = Watchdog(lambda: 0.01,
+                      WatchdogConfig(budget_factor=10.0,
+                                     min_deadline_s=0.1))
+        assert wd.deadline_s() == pytest.approx(0.1)   # floored
+        assert wd.observe(0.05) == "ok"
+        assert [wd.observe(1.0) for _ in range(4)] == \
+            ["stall", "retry", "evacuate", "hang"]
+        assert wd.observe(0.05) == "ok" and wd.breaches == 0
+        assert wd.observe(1.0) == "stall"              # ladder restarts
+        assert wd.actions["hang"] == 1
+
+    def test_deadline_follows_expected(self):
+        t = {"s": 1.0}
+        wd = Watchdog(lambda: t["s"], WatchdogConfig(budget_factor=2.0))
+        assert wd.deadline_s() == pytest.approx(2.0)
+        t["s"] = 4.0
+        assert wd.deadline_s() == pytest.approx(8.0)
+
+    def test_config_validates_thresholds(self):
+        with pytest.raises(ValueError):
+            WatchdogConfig(stall_after=3, retry_after=2).validate()
+        with pytest.raises(ValueError):
+            WatchdogConfig(stall_after=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle: deadlines and cancellation
+# ---------------------------------------------------------------------------
+
+class TestCancelAndDeadline:
+    def test_cancel_mid_generation_frees_slot(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                     params)
+        seen = []
+        req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=20,
+                      on_token=lambda r, t: seen.append(t))
+        srv.add_request(req)
+        srv.step()
+        srv.step()
+        n = len(req.out_tokens)
+        assert n >= 1 and not req.done
+        req.cancel()
+        srv.step()
+        assert req.done and req.finished_s is not None
+        assert len(req.out_tokens) == n          # nothing decoded after
+        assert seen[-1] == -1                    # terminal sentinel
+        assert srv.stats()["cancelled"] == 1
+        assert not srv.has_work()
+
+    def test_deadline_expires_queued_request(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                     params)
+        seen = []
+        req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=4, deadline_s=0.0,
+                      on_token=lambda r, t: seen.append(t))
+        srv.add_request(req)
+        time.sleep(0.01)
+        srv.step()
+        assert req.done and req.out_tokens == []
+        assert seen == [-1]
+        assert srv.stats()["expired"] == 1
+        assert not srv.has_work()
+
+    def test_unbounded_requests_unaffected(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                     params)
+        req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                      max_new_tokens=4)
+        srv.add_request(req)
+        srv.run_until_done(200)
+        assert req.done and len(req.out_tokens) == 4
+        assert srv.stats()["cancelled"] == 0
+        assert srv.stats()["expired"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Hang diagnostics
+# ---------------------------------------------------------------------------
+
+class TestRunUntilDone:
+    def test_exhausted_steps_raise_serve_hang_error(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                     params)
+        srv.add_request(Request(rid=0,
+                                prompt=np.arange(1, 6, dtype=np.int32),
+                                max_new_tokens=25))
+        with pytest.raises(ServeHangError) as ei:
+            srv.run_until_done(max_steps=2)
+        assert ei.value.live_rids == (0,)
+        assert "max_steps=2" in str(ei.value)
+        assert "decode_tokens" in ei.value.stats
+        srv.run_until_done(200)                  # still drainable after
+
+    def test_drained_loop_returns_cleanly(self, bundle, params):
+        srv = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                     params)
+        srv.run_until_done(max_steps=1)          # no work: no raise
+
+
+class TestSchedulerClose:
+    def test_close_cancels_pending_submit(self, bundle, params):
+        server = Server(
+            bundle,
+            ServeConfig(batch_slots=1, max_len=32, max_queue=1),
+            params,
+        )
+        sched = Scheduler(server)
+
+        async def main():
+            # fill the bounded queue so the next submit blocks on space
+            await sched.submit(np.arange(1, 6), max_new_tokens=8)
+            blocked = asyncio.ensure_future(
+                sched.submit(np.arange(1, 6), max_new_tokens=4)
+            )
+            await asyncio.sleep(0)     # let it hit QueueFullError + wait
+            assert not blocked.done()
+            sched.close()
+            with pytest.raises(SchedulerClosed):
+                await blocked
+            # drain what was admitted so run() exits
+            await sched.run()
+
+        asyncio.run(main())
+
+    def test_close_after_submit_raises_immediately(self, bundle, params):
+        server = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                        params)
+        sched = Scheduler(server)
+
+        async def main():
+            sched.close()
+            with pytest.raises(SchedulerClosed):
+                await sched.submit(np.arange(1, 6), max_new_tokens=4)
+
+        asyncio.run(main())
+
+    def test_step_timeout_configurable(self, bundle, params):
+        server = Server(bundle, ServeConfig(batch_slots=1, max_len=32),
+                        params)
+        assert Scheduler(server).step_timeout_s == 60.0
+        assert Scheduler(server,
+                         step_timeout_s=None).step_timeout_s is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint writes: retry + background error capture
+# ---------------------------------------------------------------------------
+
+class TestCheckpointRetry:
+    def test_transient_write_failure_retries(self, tmp_path, monkeypatch):
+        from repro.checkpoint.checkpointer import Checkpointer
+        real_rename = os.rename
+        fails = {"n": 1}
+
+        def flaky_rename(src, dst):
+            if fails["n"] > 0:
+                fails["n"] -= 1
+                raise OSError("transient mount hiccup")
+            return real_rename(src, dst)
+
+        monkeypatch.setattr(os, "rename", flaky_rename)
+        ck = Checkpointer(str(tmp_path / "ck"))
+        ck.save(3, {"w": np.ones(4, np.float32)}, blocking=True)
+        assert ck.latest_step() == 3
+
+    def test_background_failure_surfaces_on_wait(self, tmp_path,
+                                                 monkeypatch):
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        def always_fail(src, dst):
+            raise OSError("disk gone")
+
+        monkeypatch.setattr(os, "rename", always_fail)
+        monkeypatch.setattr(
+            "repro.checkpoint.checkpointer.CHECKPOINT_RETRY",
+            RetryPolicy(max_attempts=2, base_delay_s=0.0, jitter=0.0),
+        )
+        ck = Checkpointer(str(tmp_path / "ck"))
+        ck.save(1, {"w": np.ones(2, np.float32)}, blocking=False)
+        with pytest.raises(RetryBudgetExceeded):
+            ck.wait()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: migration rollback, tier loss -> evacuation
+# ---------------------------------------------------------------------------
+
+class TestMigrationRollback:
+    def test_failed_replan_adopts_nothing(self):
+        """An injected donor-axis failure mid-replan leaves the policy
+        object, the compiled jits, and the greedy tokens untouched."""
+        run_with_devices("""
+        import jax, numpy as np
+        from repro.core.faults import FaultEvent, FaultKind, FaultPlan
+        from repro.core.placement import DonorAxisError
+        from repro.launch.mesh import make_donor_mesh
+        from repro.models import get_smoke_bundle
+        from repro.serve import Request, ServeConfig, Server
+
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        mesh = make_donor_mesh((2,), ("data",), 2)
+
+        def serve(faults=None, interrupt=False):
+            srv = Server(
+                bundle,
+                ServeConfig(batch_slots=2, max_len=32,
+                            policy="kv_peer_hbm", faults=faults),
+                params, mesh=mesh,
+            )
+            req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                          max_new_tokens=8)
+            srv.add_request(req)
+            srv.step(); srv.step()
+            if interrupt:
+                old_policy = srv.policy
+                decode_fn = srv.engine._decode
+                try:
+                    srv.replan("hbm_resident")
+                    raise SystemExit("expected DonorAxisError")
+                except DonorAxisError:
+                    pass
+                assert srv.policy is old_policy, srv.policy.name
+                assert srv.engine._decode is decode_fn, "jits rebuilt"
+                assert srv.stats()["migrations"] == 0
+            srv.run_until_done(400)
+            assert req.done
+            return req.out_tokens
+
+        plan = FaultPlan([FaultEvent("migrate", at=0,
+                                     kind=FaultKind.MIGRATE_FAIL,
+                                     error="donor")])
+        faulted = serve(faults=plan, interrupt=True)
+        assert len(plan.fired) == 1
+        reference = serve()
+        assert faulted == reference, (faulted, reference)
+        print("OK")
+        """)
+
+
+class TestTierLossRecovery:
+    def test_tier_loss_evacuates_and_tokens_match(self):
+        """Losing the donor tier mid-decode (with a corrupted spill for
+        good measure): the server evacuates KV off peer HBM, replays
+        what was parked, finishes every request, and the greedy tokens
+        match a fault-free run."""
+        run_with_devices("""
+        import jax, numpy as np
+        from repro.core.faults import FaultEvent, FaultKind, FaultPlan
+        from repro.core.hardware import MemoryTier
+        from repro.launch.mesh import make_donor_mesh
+        from repro.models import get_smoke_bundle
+        from repro.serve import Request, ServeConfig, Server
+
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        mesh = make_donor_mesh((2,), ("data",), 2)
+
+        def reqs():
+            return [Request(rid=i,
+                            prompt=np.arange(1, 6 + i % 3, dtype=np.int32),
+                            max_new_tokens=6 + i % 4)
+                    for i in range(8)]
+
+        def serve(faults=None, preempt=True):
+            rs = reqs()
+            srv = Server(
+                bundle,
+                ServeConfig(batch_slots=2, max_len=32,
+                            policy="kv_peer_hbm", preempt=preempt,
+                            preempt_wait=3, faults=faults,
+                            verify_spills=True),
+                params, mesh=mesh,
+            )
+            srv.add_requests(rs)
+            srv.run_until_done(2000)
+            assert all(r.done for r in rs)
+            return [r.out_tokens for r in rs], srv
+
+        plan = FaultPlan([
+            FaultEvent("decode", at=6, kind=FaultKind.TIER_LOSS,
+                       tier="peer_hbm"),
+            FaultEvent("spill", at=0, kind=FaultKind.SPILL_CORRUPT),
+        ])
+        faulted, srv = serve(faults=plan)
+        stats = srv.stats()
+        assert stats["tier_losses"] == 1, stats
+        assert stats["evacuations"] >= 1, stats
+        assert MemoryTier.PEER_HBM in srv.rt.lost_tiers
+        assert MemoryTier.PEER_HOST in srv.rt.lost_tiers  # same axis
+        from repro.core.placement import Role
+        assert srv.policy.placement(Role.KV_CACHE).tier \\
+            not in srv.rt.lost_tiers
+        # spill tier re-picked off the lost axis too
+        assert srv.rt.spill_placement().tier not in srv.rt.lost_tiers
+
+        reference, _ = serve(preempt=False)
+        assert faulted == reference
+        print("OK")
+        """)

@@ -179,6 +179,26 @@ def run_selftest() -> dict:
     results["lint:deprecated-pattern"] = "deprecated-policies" in {
         v.rule for v in lint.lint_source("x = POLI" + "CIES['kv_host']\n", "y.py")
     } and bool(dep_src)
+    # 4. the injected-fault-raise gate: fires outside the harness module
+    #    (string assembled so this file does not trip its own gate),
+    #    stays quiet inside it, and its allowlist stays scoped to
+    #    core/faults.py alone — the harness must not leak into
+    #    production control flow through a quietly widened allowlist
+    fault_src = "raise " + "TierLossError" + "('peer_hbm')\n"
+    results["lint:injected-fault-raise"] = "injected-fault-raise" in {
+        v.rule for v in lint.lint_source(fault_src, "src/repro/serve/x.py")
+    }
+    results["lint:injected-fault-allow-in-harness"] = (
+        "injected-fault-raise"
+        not in {
+            v.rule
+            for v in lint.lint_source(fault_src, "src/repro/core/faults.py")
+        }
+    )
+    results["lint:injected-fault-allowlist-scoped"] = (
+        lint.get_rule("injected-fault-raise").allow
+        == frozenset({"src/repro/core/faults.py"})
+    )
 
     kv_must_donate = ExpectedMovement(
         roles=(RoleExpectation("kv_cache", "caches", donate=True),),

@@ -1,0 +1,228 @@
+#!/usr/bin/env python
+"""CI chaos soak: the serve loop must self-heal under a seeded fault plan.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python tools/serve_chaos.py [--requests 64] [--seed 0]
+
+The robustness acceptance criteria, as a tool the 4-device CI leg runs on
+every push:
+
+1. ``--requests`` (>= 64) queued-arrival requests drain under a seeded
+   :class:`repro.core.faults.FaultPlan` carrying >= 1 donor-tier loss,
+   >= 1 failed (transient) migration, >= 1 stalled dispatch, and one
+   corrupted spill round trip.  Every request reaches a terminal state;
+   the loop is bounded, so a hang is a hard failure, not a timeout.
+2. The tier loss triggered **>= 1 successful evacuation** that actually
+   re-placed a role off the lost tier, and the injected migration
+   failure was retried (``migration_retries >= 1``).
+3. **Greedy tokens are bit-identical to a no-fault reference run** — the
+   recovery paths (bit-preserving evacuation migrate, replay-as-fresh
+   after spill corruption or tier loss) are invisible in the output.
+4. Completion rate, evacuations, retries, and tail latency under faults
+   are merged into ``BENCH_chaos.json`` together with the full fault
+   schedule and its firing record.
+
+On a single-device runtime no donor tier is realizable, so the plan
+degrades to stall + spill corruption and the evacuation assertions are
+skipped (the CI chaos leg always runs with 4 host devices).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.faults import FaultEvent, FaultKind, FaultPlan
+from repro.models import get_smoke_bundle
+from repro.serve import Request, ServeConfig, Server
+
+from serve_soak import make_request
+
+log = logging.getLogger("repro.tools.serve_chaos")
+
+
+def build_plan(seed: int, multi_device: bool) -> FaultPlan:
+    """Seeded schedule: the rng picks *when*, the structure is fixed.
+
+    The transient MIGRATE_FAIL sits at migrate pass 0 — the serve loop's
+    only ``migrate()`` calls are the evacuation's ``migrate_roles``, so
+    the first migration attempt after the tier loss fails and must be
+    retried.  The SPILL_CORRUPT hits the first preemption spill, early
+    enough that its promotion (and checksum verification) lands before
+    the tier loss does.
+    """
+    rng = np.random.default_rng(seed)
+    events = [
+        FaultEvent("decode", at=int(rng.integers(8, 16)),
+                   kind=FaultKind.STALL, seconds=1.0),
+        FaultEvent("spill", at=0, kind=FaultKind.SPILL_CORRUPT),
+    ]
+    if multi_device:
+        events += [
+            FaultEvent("decode", at=int(rng.integers(28, 44)),
+                       kind=FaultKind.TIER_LOSS, tier="peer_hbm"),
+            FaultEvent("migrate", at=0, kind=FaultKind.MIGRATE_FAIL,
+                       error="transient"),
+        ]
+    return FaultPlan(events, seed=seed)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--preempt-wait", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    bundle = get_smoke_bundle(args.arch)
+    params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+    ndev = jax.device_count()
+    if ndev >= 2:
+        from repro.launch.mesh import make_donor_mesh
+        mesh = make_donor_mesh((ndev // 2,), ("data",), 2)
+        # pin KV onto the donor tier the plan is about to lose, so the
+        # evacuation has something real to move
+        policy = "kv_peer_hbm"
+    else:
+        mesh, policy = None, None
+    plan = build_plan(args.seed, multi_device=mesh is not None)
+    rng = np.random.default_rng(args.seed)
+    reqs = [make_request(i, bundle.cfg.vocab, rng)
+            for i in range(args.requests)]
+
+    server = Server(
+        bundle,
+        ServeConfig(batch_slots=args.slots, max_len=args.max_len,
+                    prefill_chunk=8, max_queue=args.requests,
+                    preempt=True, preempt_wait=args.preempt_wait,
+                    policy=policy, faults=plan, verify_spills=True),
+        params, mesh=mesh,
+    )
+    log.info("chaos: %d requests -> %d slots on %d devices (policy %s), "
+             "%d scheduled faults (seed %d)", args.requests, args.slots,
+             ndev, server.policy.name, len(plan.events), args.seed)
+
+    # queued arrivals: one new request per tick; the loop is bounded so
+    # a hang under faults fails loudly instead of wedging CI
+    pending = list(reqs)
+    tick = 0
+    while pending or server.has_work():
+        if pending:
+            server.add_request(pending.pop(0))
+        server.step()
+        tick += 1
+        if tick > 100_000:
+            log.error("chaos soak did not drain after %d ticks", tick)
+            return 1
+    undrained = [r.rid for r in reqs if not r.done]
+    if undrained:
+        log.error("non-terminal requests after drain: %s", undrained)
+        return 1
+
+    stats = server.stats()
+    fired_kinds = {ev.kind for _site, _idx, ev in plan.fired}
+    want = {FaultKind.STALL, FaultKind.SPILL_CORRUPT}
+    if mesh is not None:
+        want |= {FaultKind.TIER_LOSS, FaultKind.MIGRATE_FAIL}
+    missing = want - fired_kinds
+    if missing:
+        log.error("scheduled fault kinds never fired: %s "
+                  "(fired: %s) — re-tune the plan windows",
+                  sorted(k.value for k in missing), plan.to_json()["fired"])
+        return 1
+    if mesh is not None:
+        if stats["tier_losses"] < 1 or stats["evacuations"] < 1:
+            log.error("tier loss did not drive an evacuation "
+                      "(tier_losses=%d, evacuations=%d)",
+                      stats["tier_losses"], stats["evacuations"])
+            return 1
+        if stats["migration_retries"] < 1:
+            log.error("injected migration failure was never retried")
+            return 1
+    if stats["preemptions"] < 1 or stats["requeued_fresh"] < 1:
+        log.error("spill corruption path not exercised (preemptions=%d, "
+                  "requeued_fresh=%d) — raise --requests or lower "
+                  "--preempt-wait", stats["preemptions"],
+                  stats["requeued_fresh"])
+        return 1
+
+    # greedy subset: bit-identity vs a fault-free, preemption-free run
+    ref_server = Server(
+        bundle,
+        ServeConfig(batch_slots=args.slots, max_len=args.max_len,
+                    prefill_chunk=8, policy=policy),
+        params, mesh=mesh,
+    )
+    greedy = [r for r in reqs if r.sampling.temperature == 0.0]
+    refs = {
+        r.rid: Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+        for r in greedy
+    }
+    ref_server.add_requests(refs.values())
+    ref_server.run_until_done(100_000)
+    diverged = [
+        r.rid for r in greedy if r.out_tokens != refs[r.rid].out_tokens
+    ]
+    if diverged:
+        log.error("greedy token divergence under faults for rids %s",
+                  diverged)
+        return 1
+
+    lat = np.asarray([r.finished_s - r.submitted_s for r in reqs])
+    row = {
+        "arch": bundle.cfg.name,
+        "devices": ndev,
+        "requests": args.requests,
+        "completed": sum(r.done for r in reqs),
+        "completion_rate": sum(r.done for r in reqs) / len(reqs),
+        "policy": server.policy.name,
+        "tier_losses": stats["tier_losses"],
+        "evacuations": stats["evacuations"],
+        "migration_retries": stats["migration_retries"],
+        "spill_corruptions": stats["spill_corruptions"],
+        "requeued_fresh": stats["requeued_fresh"],
+        "watchdog_stalls": stats["watchdog_stalls"],
+        "watchdog_retries": stats["watchdog_retries"],
+        "watchdog_evacuations": stats["watchdog_evacuations"],
+        "preemptions": stats["preemptions"],
+        "promotions": stats["promotions"],
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "fault_plan": plan.to_json(),
+        **server.throughput(),
+    }
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {}
+    results["chaos"] = row
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+    log.info(
+        "OK: %d/%d requests terminal under %d fired faults (%d tier "
+        "losses -> %d evacuations, %d migration retries, %d requeued "
+        "fresh); greedy subset (%d requests) bit-identical to no-fault "
+        "run; latency p50 %.0fms p99 %.0fms -> %s",
+        row["completed"], args.requests, len(plan.fired),
+        row["tier_losses"], row["evacuations"], row["migration_retries"],
+        row["requeued_fresh"], len(greedy),
+        row["latency_p50_s"] * 1e3, row["latency_p99_s"] * 1e3, args.out,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
