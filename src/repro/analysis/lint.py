@@ -29,6 +29,11 @@ Rule catalog (see docs/analysis.md):
   production control flow must not impersonate injected faults — the
   allowlist is the harness module itself, and ``tools/audit.py
   --selftest`` asserts it stays that narrow.
+* ``cross-pool-device-put`` — raw ``device_put`` in a serve module:
+  the disaggregated cluster's pools may only exchange data through the
+  :mod:`repro.serve.handoff` bridge (which owns the ``donor_pod`` mesh
+  and the crossing ledger); an ad-hoc ``device_put`` onto another
+  pool's mesh would move KV without accounting or checksum coverage.
 * ``deprecated-*`` — the migrated deprecation-hygiene patterns.
 """
 
@@ -450,12 +455,15 @@ class PatternRule(Rule):
         pattern: str,
         message: str,
         allow: Iterable[str] = (),
+        path_filter: str | None = None,
     ):
         self.name = name
         self.description = message
         self.pattern = re.compile(pattern)
         self.message = message
         self.allow = frozenset(allow)
+        if path_filter is not None:
+            self.path_filter = re.compile(path_filter)
 
     def check(self, relpath, source, tree):
         for lineno, line in enumerate(source.splitlines(), start=1):
@@ -479,6 +487,7 @@ _DEPRECATION_ALLOW = frozenset({
     "src/repro/serve/__init__.py",
     "src/repro/serve/engine.py",
     "src/repro/serve/scheduler.py",
+    "src/repro/serve/disagg.py",
     "src/repro/serve/sampling.py",
     "src/repro/serve/state.py",
     "src/repro/analysis/lint.py",
@@ -519,11 +528,26 @@ register(PatternRule(
 register(PatternRule(
     "injected-fault-raise",
     r"\braise\s+(?:faults\.)?(?:InjectedFault|TransientFault|TierLossError|"
-    r"MigrationFault|SpillCorruptionError)\b",
+    r"MigrationFault|SpillCorruptionError|TicketLossError)\b",
     "injected fault types may only be raised by the harness "
     "(core/faults.py): production code must signal failures with its own "
     "error types, never impersonate an injected fault",
     frozenset({"src/repro/core/faults.py"}),
+))
+register(PatternRule(
+    "cross-pool-device-put",
+    r"\b(?:jax\s*\.\s*)?device_put\s*\(",
+    "raw device_put in a serve module: cross-pool data movement must go "
+    "through the Handoff (serve/handoff.py owns the bridge mesh and the "
+    "crossing ledger); pool-local placement goes through Runtime.realize "
+    "or Executor.place_state",
+    frozenset({
+        # the one sanctioned crossing site
+        "src/repro/serve/handoff.py",
+        # pool-local: place_state commits onto the executor's own mesh
+        "src/repro/serve/engine.py",
+    }),
+    path_filter=r"^src/repro/serve/",
 ))
 register(PatternRule(
     "deprecated-default-system", r"\bDEFAULT_SYSTEM\b",

@@ -612,15 +612,21 @@ class Runtime:
         dst_t = dst.tier if isinstance(dst, Placement) else parse_tier(dst)
         return copy_bound(src_t, dst_t, self.system).time(nbytes)
 
-    def spill_placement(self) -> Placement:
+    def spill_placement(self, allow: dict | None = None) -> Placement:
         """The cheapest *realizable* far-tier parking spot for evicted KV
         rows: host DRAM when the backend exposes it, the peer/remote
         donor pools when the mesh has the donor axis — whichever round
         trip the datapath model prices lowest.  Falls back to local HBM
         (a placement-neutral parking copy: the slot is still freed, just
         without relieving HBM capacity) when no far tier is realizable.
+
+        ``allow`` lets a caller pin one ``_allow_flags()`` snapshot
+        across the pick *and* whatever pricing it derives from the pick
+        (:meth:`preemption_price` does) — :meth:`mark_tier_lost` racing a
+        concurrent evacuation must not let the two disagree.
         """
-        allow = self._allow_flags()
+        if allow is None:
+            allow = self._allow_flags()
         tiers: list[MemoryTier] = []
         if allow["allow_host"]:
             tiers.append(MemoryTier.HOST)
@@ -643,8 +649,16 @@ class Runtime:
         """(spill placement, round-trip seconds) for parking ``nbytes``
         of KV rows off-cache and bringing them back — what the scheduler
         weighs against the planner-predicted natural slot-free time
-        before evicting a victim."""
-        spill = self.spill_placement()
+        before evicting a victim.
+
+        The spill-target pick and the price read the *same*
+        ``_allow_flags()`` snapshot: a ``mark_tier_lost`` landing between
+        them (tier-loss recovery runs concurrently with the scheduler's
+        preemption scan) must not price a tier the pick no longer
+        considers realizable, or vice versa.
+        """
+        allow = self._allow_flags()
+        spill = self.spill_placement(allow=allow)
         kv = self.policy.placement(Role.KV_CACHE)
         return spill, (
             self.price_copy(nbytes, spill)

@@ -29,6 +29,11 @@ Fault taxonomy (see ``docs/robustness.md``):
   The scheduler drops the parked rows and re-queues the request as a
   ``"fresh"`` waiter whose prompt replays everything generated so far —
   bit-identical continuation, because prefill ≡ decode replay.
+* :class:`TicketLossError` — a disaggregated handoff ticket (the KV a
+  prefill pool published for a decode pool to adopt, see
+  ``repro.serve.handoff``) vanished on the DCN path.  The decode-side
+  admission adopts nothing and replays the request as fresh through the
+  prefill pool — the same ladder as a corrupted spill.
 
 Production paths pay nothing: every site guard is
 ``if plan: plan.check(site)`` against the falsy :data:`NO_FAULTS`
@@ -60,6 +65,7 @@ __all__ = [
     "TierLossError",
     "MigrationFault",
     "SpillCorruptionError",
+    "TicketLossError",
     "NO_FAULTS",
     "checksum_tree",
     "corrupt_tree",
@@ -74,6 +80,7 @@ class FaultKind(str, enum.Enum):
     MIGRATE_FAIL = "migrate_fail"    # fail a migrate()/realize() call
     STALL = "stall"                  # stall a dispatch past its deadline
     SPILL_CORRUPT = "spill_corrupt"  # corrupt a spill round trip
+    TICKET_LOSS = "ticket_loss"      # drop a disagg handoff ticket in flight
 
 
 class InjectedFault(RuntimeError):
@@ -104,6 +111,24 @@ class MigrationFault(TransientFault):
     """A transient migrate/realize failure (link hiccup surrogate)."""
 
 
+class TicketLossError(InjectedFault):
+    """A disaggregated handoff ticket vanished in flight.
+
+    Carries the request id; the decode-side admission path catches it,
+    adopts nothing, and re-queues the request as a ``"fresh"`` waiter
+    routed back to the prefill pool — the same replay-as-fresh ladder a
+    corrupted handoff transfer takes (prefill ≡ decode replay, so the
+    continuation is bit-identical).
+    """
+
+    def __init__(self, rid: int, message: str = ""):
+        self.rid = rid
+        super().__init__(
+            message or f"handoff ticket for rid {rid} lost in flight; "
+            "replaying the request through the prefill pool"
+        )
+
+
 class SpillCorruptionError(InjectedFault):
     """A promoted spill's bytes differ from what was parked."""
 
@@ -124,7 +149,7 @@ class FaultEvent:
 
     ``site`` names the injection point (``decode`` / ``prefill`` /
     ``migrate`` / ``realize`` / ``extract`` / ``spill`` /
-    ``checkpoint``); ``at`` is the 0-indexed pass through that site on
+    ``handoff`` / ``checkpoint``); ``at`` is the 0-indexed pass through that site on
     which the event fires, and ``times`` how many *consecutive* passes it
     keeps firing for (>1 models a fault that outlives one retry).
     """
@@ -182,13 +207,14 @@ class FaultPlan:
         """Passes through ``site`` so far."""
         return self._counts.get(site, 0)
 
-    def check(self, site: str) -> FaultEvent | None:
+    def check(self, site: str, *, rid: int = -1) -> FaultEvent | None:
         """Count one pass through ``site`` and fire any matching event.
 
-        TIER_LOSS and MIGRATE_FAIL raise; STALL sleeps and returns the
-        event; SPILL_CORRUPT returns the event for the caller to apply
-        (the harness cannot reach the bytes being parked).  Returns
-        ``None`` when nothing fires.
+        TIER_LOSS, MIGRATE_FAIL and TICKET_LOSS raise; STALL sleeps and
+        returns the event; SPILL_CORRUPT returns the event for the
+        caller to apply (the harness cannot reach the bytes being
+        parked).  ``rid`` tags the request a ``handoff``-site fault hits
+        (TICKET_LOSS carries it).  Returns ``None`` when nothing fires.
         """
         idx = self._counts.get(site, 0)
         self._counts[site] = idx + 1
@@ -202,6 +228,8 @@ class FaultPlan:
                 hit = ev
             elif ev.kind is FaultKind.TIER_LOSS:
                 raise TierLossError(ev.tier or "peer_hbm")
+            elif ev.kind is FaultKind.TICKET_LOSS:
+                raise TicketLossError(rid)
             elif ev.kind is FaultKind.MIGRATE_FAIL:
                 if ev.error == "donor":
                     raise DonorAxisError(

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
+import re
 from typing import Mapping
 
 import jax
@@ -516,9 +517,108 @@ def parse_policy(text: "str | Mapping | PlacementPolicy") -> PlacementPolicy:
                 f"bad policy fragment {part!r} in {text!r} "
                 "(expected role=tier[:strategy])"
             )
+        if role_s.strip().lower() == "pools":
+            raise ValueError(
+                f"policy spec {text!r} carries a 'pools=' directive; "
+                "strip it with extract_pool_split() before parse_policy "
+                "(only the disaggregated-serve entry points accept it)"
+            )
         placements[parse_role(role_s)] = Placement.parse(pl_s)
     return PlacementPolicy(_spec_name(placements), placements,
                            "parsed from policy spec string")
+
+
+# ---------------------------------------------------------------------------
+# Pool-split grammar (disaggregated prefill/decode serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolSplit:
+    """An explicit prefill/decode device split for a disaggregated
+    cluster (``repro.serve.disagg``): ``prefill`` devices fill KV and
+    publish handoff tickets, ``decode`` devices generate.  Parsed from
+    the ``pools=prefill:N,decode:M`` grammar extension; ``None`` (no
+    directive) means the planner's :func:`repro.core.planner.
+    plan_pool_split` chooses the split."""
+
+    prefill: int
+    decode: int
+
+    def __post_init__(self):
+        if self.prefill < 1 or self.decode < 1:
+            raise ValueError(
+                f"pool split needs >= 1 device per pool, got "
+                f"prefill:{self.prefill},decode:{self.decode}"
+            )
+
+    @property
+    def total(self) -> int:
+        return self.prefill + self.decode
+
+    def to_str(self) -> str:
+        return f"pools=prefill:{self.prefill},decode:{self.decode}"
+
+    @classmethod
+    def parse(cls, text: "str | PoolSplit") -> "PoolSplit":
+        """PoolSplit from ``prefill:N,decode:M`` (either order; the
+        ``pools=`` prefix is accepted and stripped)."""
+        if isinstance(text, PoolSplit):
+            return text
+        body = text.strip()
+        if body.lower().startswith("pools="):
+            body = body[len("pools="):]
+        counts: dict[str, int] = {}
+        for frag in body.split(","):
+            m = _POOL_FRAGMENT.match(frag)
+            if not m:
+                raise ValueError(
+                    f"bad pool fragment {frag!r} in {text!r} "
+                    "(expected pools=prefill:N,decode:M)"
+                )
+            pool, n = m.group(1), int(m.group(2))
+            if pool in counts:
+                raise ValueError(f"duplicate pool {pool!r} in {text!r}")
+            counts[pool] = n
+        if set(counts) != {"prefill", "decode"}:
+            raise ValueError(
+                f"pool split {text!r} must name both pools "
+                "(pools=prefill:N,decode:M)"
+            )
+        return cls(counts["prefill"], counts["decode"])
+
+
+_POOL_FRAGMENT = re.compile(r"^\s*(prefill|decode)\s*:\s*(\d+)\s*$")
+
+
+def extract_pool_split(
+    text: "str | Mapping | PlacementPolicy | None",
+) -> "tuple[PoolSplit | None, str | Mapping | PlacementPolicy | None]":
+    """Split a ``pools=prefill:N,decode:M`` directive out of a policy spec.
+
+    The pools directive rides inside the same ``--policy`` string as the
+    role grammar (``"kv=remote_hbm,pools=prefill:1,decode:3"``) but its
+    *value* contains commas, so it must be carved out before
+    :func:`parse_policy` splits on them.  Returns ``(split, remainder)``
+    where ``remainder`` is the spec with the directive removed (``None``
+    if nothing else remains) — non-string specs pass through untouched
+    with ``split=None``.
+    """
+    if not isinstance(text, str) or "pools" not in text:
+        return None, text
+    parts = [p for p in text.split(",") if p.strip()]
+    for i, part in enumerate(parts):
+        role_s, eq, val = part.partition("=")
+        if not (eq and role_s.strip().lower() == "pools"):
+            continue
+        frags = [val]
+        j = i + 1
+        while j < len(parts) and _POOL_FRAGMENT.match(parts[j]):
+            frags.append(parts[j])
+            j += 1
+        split = PoolSplit.parse(",".join(frags))
+        rest = ",".join(parts[:i] + parts[j:])
+        return split, (rest if rest else None)
+    return None, text
 
 
 # ---------------------------------------------------------------------------

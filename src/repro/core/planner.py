@@ -497,3 +497,117 @@ def prefill_profile(
         collective_s=collective_s,
         stream_chunks=max(int(n_layers), 1),
     )
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated-serve pool split (prefill pool vs decode pool)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolSplitPrediction:
+    """One candidate prefill/decode device split, priced per pool.
+
+    ``prefill_tps`` is prompt-token ingest rate of the prefill pool (one
+    chunked dispatch ingests ``batch_slots * prefill_chunk`` tokens);
+    ``decode_tps`` is the decode pool's generation rate (one step yields
+    ``batch_slots`` tokens).  In steady state the cluster moves at the
+    slower pool — the bottleneck rate — so the planner maximizes
+    ``min(prefill_tps, decode_tps)``, i.e. minimizes the tok/s imbalance
+    between the pools subject to both phases fitting their pool's
+    capacity.
+    """
+
+    prefill_devices: int
+    decode_devices: int
+    prefill_tps: float
+    decode_tps: float
+    prefill: PolicyPrediction
+    decode: PolicyPrediction
+
+    @property
+    def fits(self) -> bool:
+        return self.prefill.fits and self.decode.fits
+
+    @property
+    def bottleneck_tps(self) -> float:
+        return min(self.prefill_tps, self.decode_tps)
+
+    @property
+    def imbalance(self) -> float:
+        """max/min tok/s ratio across the pools (1.0 = balanced)."""
+        lo = max(self.bottleneck_tps, 1e-30)
+        return max(self.prefill_tps, self.decode_tps) / lo
+
+
+def plan_pool_split(
+    bundle,
+    num_devices: int,
+    *,
+    batch_slots: int,
+    max_len: int,
+    prefill_chunk: int,
+    policies: Iterable[PlacementPolicy] | None = None,
+    system: SystemSpec | None = None,
+    allow_host: bool = True,
+    allow_peer: bool = False,
+    allow_remote: bool = False,
+) -> tuple[PoolSplitPrediction, list[PoolSplitPrediction]]:
+    """Choose the prefill/decode device split for a disaggregated cluster.
+
+    For every split ``(p, d)`` with ``p + d == num_devices`` and at least
+    one device per pool, price the prefill pool on the bundle's
+    :func:`prefill_profile` over ``p`` chips and the decode pool on its
+    :func:`decode_profile` over ``d`` chips (each pool picks its own best
+    eligible policy via :func:`plan`), then take the split with the
+    highest **bottleneck** token rate — equivalently the smallest
+    prefill-vs-decode tok/s imbalance that still fits both pools'
+    capacities.  Splits where either phase overflows are only used when
+    *no* split fits (degraded, like :func:`plan`'s fallback).
+
+    The per-pool ``allow_*`` flags default to local-tiers-only: each pool
+    is a plain compute mesh (the donor_pod axis exists only on the bridge
+    mesh the handoff uses), so peer/remote placements are not realizable
+    *inside* a pool unless the caller built pool-local donor axes.
+
+    Returns ``(best, all_candidates)``; an explicit
+    :class:`repro.core.placement.PoolSplit` override skips this planner
+    entirely (see ``repro.serve.disagg.Cluster``).
+    """
+    from repro.configs import ShapeSpec
+
+    if num_devices < 2:
+        raise ValueError(
+            f"a disaggregated cluster needs >= 2 devices, got {num_devices}"
+        )
+    shape = ShapeSpec("serve", max_len, batch_slots, "decode")
+    allow = dict(
+        allow_host=allow_host, allow_peer=allow_peer,
+        allow_remote=allow_remote,
+    )
+    cands: list[PoolSplitPrediction] = []
+    for p in range(1, num_devices):
+        d = num_devices - p
+        pre_prof = bundle.prefill_workload(
+            shape, chunk_tokens=prefill_chunk, num_chips=p
+        )
+        dec_prof = bundle.decode_workload(shape, num_chips=d)
+        pre_best, _ = plan(pre_prof, policies, system, **allow)
+        dec_best, _ = plan(dec_prof, policies, system, **allow)
+        cands.append(PoolSplitPrediction(
+            prefill_devices=p,
+            decode_devices=d,
+            prefill_tps=(
+                batch_slots * max(prefill_chunk, 1) / pre_best.step_s
+                if pre_best.step_s > 0 else float("inf")
+            ),
+            decode_tps=(
+                batch_slots / dec_best.step_s
+                if dec_best.step_s > 0 else float("inf")
+            ),
+            prefill=pre_best,
+            decode=dec_best,
+        ))
+    feasible = [c for c in cands if c.fits]
+    pool = feasible or cands
+    best = max(pool, key=lambda c: c.bottleneck_tps)
+    return best, cands

@@ -15,10 +15,21 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core.placement import registered_policies
+from repro.core.placement import (
+    PoolSplit,
+    extract_pool_split,
+    registered_policies,
+)
 from repro.launch.mesh import make_mesh_for
 from repro.models.model_zoo import ModelBundle
-from repro.serve import Request, SamplingParams, ServeConfig, Server
+from repro.serve import (
+    Cluster,
+    DisaggConfig,
+    Request,
+    SamplingParams,
+    ServeConfig,
+    Server,
+)
 
 log = logging.getLogger("repro.serve")
 
@@ -46,6 +57,15 @@ def main() -> None:
              f"({', '.join(registered_policies())}), the compact "
              "role=tier[:strategy][,...] grammar (e.g. "
              "'kv=host:stream,params=peer_hbm'), or policy JSON",
+    )
+    ap.add_argument(
+        "--pools", default=None, metavar="prefill:N,decode:M",
+        help="serve disaggregated (repro.serve.disagg): split the "
+             "device set into a prefill pool and a decode pool joined "
+             "by the DCN handoff.  'auto' lets plan_pool_split pick the "
+             "split; the directive may equivalently ride inside "
+             "--policy as pools=prefill:N,decode:M.  Ignores --mesh/"
+             "--donor (the cluster owns its device partition).",
     )
     ap.add_argument(
         "--auto-replan", action="store_true",
@@ -84,32 +104,63 @@ def main() -> None:
 
         cal = load_or_calibrate(args.calibration, activate=True)
         log.info("calibrated hardware model active:\n%s", cal.summary())
-    dims = tuple(int(x) for x in args.mesh.split("x"))
-    axes = ("data", "model")[-len(dims):]
-    if args.remote_donor > 1:
-        dims, axes = (args.remote_donor, *dims), ("donor_pod", *axes)
-    if args.donor > 1:
-        dims, axes = (args.donor, *dims), ("donor", *axes)
-    mesh = make_mesh_for(dims, axes) if np.prod(dims) > 1 else None
+    policy = None if args.policy == "auto" else args.policy
+    # the pools= directive rides inside --policy (its value has commas,
+    # so it is carved out before the role grammar parses) or arrives as
+    # the explicit --pools flag; either selects the disaggregated path
+    pool_split, policy = extract_pool_split(policy)
+    if args.pools and args.pools != "auto":
+        pool_split = PoolSplit.parse(args.pools)
+    disaggregated = bool(args.pools) or pool_split is not None
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     bundle = ModelBundle(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
 
-    server = Server(
-        bundle,
-        ServeConfig(
-            batch_slots=args.slots,
-            max_len=args.max_len,
-            policy=None if args.policy == "auto" else args.policy,
-            auto_replan=args.auto_replan,
-            max_queue=args.max_queue,
-            preempt=args.preempt,
-        ),
-        params,
-        mesh=mesh,
-    )
-    log.info("serving with placement policy %s", server.policy.name)
+    if disaggregated:
+        if args.mesh != "1x1" or args.donor > 1 or args.remote_donor > 1:
+            log.warning(
+                "--pools ignores --mesh/--donor/--remote-donor: the "
+                "cluster partitions the device set itself"
+            )
+        server = Cluster(
+            bundle,
+            DisaggConfig(
+                batch_slots=args.slots,
+                max_len=args.max_len,
+                split=pool_split,
+                policy=policy,
+                max_queue=args.max_queue,
+                preempt=args.preempt,
+            ),
+            params,
+        )
+        log.info(
+            "serving disaggregated (%s) with placement policy %s",
+            server.split.to_str(), server.decode.policy.name,
+        )
+    else:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[-len(dims):]
+        if args.remote_donor > 1:
+            dims, axes = (args.remote_donor, *dims), ("donor_pod", *axes)
+        if args.donor > 1:
+            dims, axes = (args.donor, *dims), ("donor", *axes)
+        mesh = make_mesh_for(dims, axes) if np.prod(dims) > 1 else None
+        server = Server(
+            bundle,
+            ServeConfig(
+                batch_slots=args.slots,
+                max_len=args.max_len,
+                policy=policy,
+                auto_replan=args.auto_replan,
+                max_queue=args.max_queue,
+                preempt=args.preempt,
+            ),
+            params,
+            mesh=mesh,
+        )
+        log.info("serving with placement policy %s", server.policy.name)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         server.add_request(
@@ -133,15 +184,29 @@ def main() -> None:
     total_tokens = args.requests * args.max_new
     tp = server.throughput()
     stats = server.stats()
-    log.info(
-        "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
-        "(policy %s, %d replans / %d migrations, %d preemptions / "
-        "%d promotions) | prefill %.1f tok/s | decode %.1f tok/s",
-        args.requests, total_tokens, dt, total_tokens / dt,
-        server.policy.name, stats["replans"], stats["migrations"],
-        stats["preemptions"], stats["promotions"],
-        tp["prefill_tps"], tp["decode_tps"],
-    )
+    if disaggregated:
+        led = stats["handoff"]
+        log.info(
+            "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
+            "(%s, policy %s) | prefill %.1f tok/s | decode %.1f tok/s "
+            "| handoff: %d published / %d adopted / %d lost "
+            "(%d bytes crossed donor_pod, %d replays)",
+            args.requests, total_tokens, dt, total_tokens / dt,
+            server.split.to_str(), server.decode.policy.name,
+            tp["prefill_tps"], tp["decode_tps"],
+            led["published"], led["adopted"], led["lost"],
+            led["bytes_published"], stats["handoff_replays"],
+        )
+    else:
+        log.info(
+            "served %d requests, %d tokens in %.2fs -> %.1f tok/s "
+            "(policy %s, %d replans / %d migrations, %d preemptions / "
+            "%d promotions) | prefill %.1f tok/s | decode %.1f tok/s",
+            args.requests, total_tokens, dt, total_tokens / dt,
+            server.policy.name, stats["replans"], stats["migrations"],
+            stats["preemptions"], stats["promotions"],
+            tp["prefill_tps"], tp["decode_tps"],
+        )
 
 
 if __name__ == "__main__":

@@ -169,6 +169,54 @@ def encdec_prefill(params, frames, tokens, caches, cfg: ArchConfig):
     return logits[:, 0], {"decoder": new_cache}
 
 
+def encdec_prefill_at(params, tokens, caches, offsets, new_lens, cfg):
+    """Offset-aware chunked decoder prefill against self+cross caches.
+
+    Serving counterpart of :func:`repro.models.transformer.lm_prefill_at`
+    for encoder-decoder bundles: row ``b`` appends ``new_lens[b] <= S``
+    prompt tokens at self-cache positions ``offsets[b]..`` in a single
+    dispatch instead of replaying them one-by-one through
+    :func:`encdec_decode_step`.  Self-attention goes through
+    :func:`~repro.models.attention.gqa_prefill_at` (decode-replay
+    semantics by construction); cross-attention is *bidirectional
+    per-query over a fixed memory*, so attending a whole chunk at once is
+    bit-identical to attending its tokens one at a time — the cross KV is
+    read, never written, and rides through unchanged (in serving it holds
+    whatever the admission path projected, zeros for token-only prompts,
+    exactly as the decode-step replay would see).  Rows with
+    ``new_lens == 0`` keep their caches untouched.
+    """
+    x = apply_embed(params["embed"], tokens)
+    offsets = offsets.astype(jnp.int32)
+    new_lens = new_lens.astype(jnp.int32)
+
+    def body(x, slices):
+        lp, cache = slices
+        h = apply_norm(lp["self_norm"], x, cfg.norm)
+        out, self_c = attn.gqa_prefill_at(
+            lp["self_attn"], h, cache["self"], offsets, new_lens,
+            cfg.attention, "F",
+        )
+        x = x + out
+        h = apply_norm(lp["cross_norm"], x, cfg.norm)
+        x = x + _cross_attend(
+            lp["cross_attn"], h, cache["cross"]["k"], cache["cross"]["v"]
+        )
+        h = apply_norm(lp["mlp_norm"], x, cfg.norm)
+        x = x + apply_mlp(lp["mlp"], h, cfg.act)
+        x = shard(x, "batch", "seq", "embed")
+        return x, {"self": self_c, "cross": cache["cross"]}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["decoder"], caches["decoder"])
+    )
+    last = jnp.clip(new_lens - 1, 0, tokens.shape[1] - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    logits = apply_head(params["head"], params["embed"], x)
+    return logits[:, 0], {"decoder": new_cache}
+
+
 def encdec_decode_step(params, tokens, caches, lengths, cfg: ArchConfig):
     """One decoder step against self+cross caches; tokens (B,1)."""
     x = apply_embed(params["embed"], tokens)

@@ -105,15 +105,18 @@ class ModelBundle:
         ``new_lens`` (B,) — how many of the chunk's positions are real for
         each row (0 = leave the row untouched).  ``offsets`` (B,) is each
         row's current cache fill.  Returns (last-valid-position logits,
-        updated caches).  Not implemented for encoder-decoder (audio)
-        bundles: their prefill also projects the cross-attention memory,
-        which a chunk-at-offset call cannot re-derive — the serve engine
-        falls back to decode-step replay there.
+        updated caches).  Encoder-decoder (audio) bundles route through
+        :func:`~repro.models.encdec.encdec_prefill_at`: the decoder's
+        self cache fills chunk-at-offset like the LM path, and the
+        cross-attention KV — read-only during generation — rides through
+        unchanged, so token-only serving no longer needs the O(B·L)
+        decode-step replay.
         """
         cfg = self.cfg
         if cfg.family == "audio" and cfg.n_encoder_layers:
-            raise NotImplementedError(
-                "prefill_at: encoder-decoder bundles prefill whole prompts"
+            return encdec_mod.encdec_prefill_at(
+                params, batch["tokens"], caches, offsets,
+                batch["new_lens"], cfg,
             )
         return tf_mod.lm_prefill_at(
             params, batch["tokens"], caches, offsets, batch["new_lens"], cfg

@@ -460,10 +460,18 @@ def assert_donation_compatible(policy, role) -> None:
 
 
 def stack_defs(defs, count: int, axis_name: str | None = "layers"):
-    """Stack a layer's param defs ``count`` times (scan-over-layers)."""
+    """Stack a layer's param defs ``count`` times (scan-over-layers).
+
+    Preserves every per-def field — notably an explicit ``dtype`` (e.g.
+    the SSM recurrent state pinned to float32): losing it here would
+    materialize the stacked cache in the model dtype while the step
+    function still emits the pinned one, a silent mismatch that breaks
+    the decode step's donation alias.
+    """
     return jax.tree.map(
         lambda p: Param(
-            (count, *p.shape), (axis_name, *p.axes), p.init, p.scale
+            (count, *p.shape), (axis_name, *p.axes), p.init, p.scale,
+            p.dtype,
         ),
         defs,
         is_leaf=is_param,

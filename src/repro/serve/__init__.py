@@ -12,9 +12,22 @@
 - :mod:`repro.serve.engine` — the :class:`Executor`: every jitted
   dispatch (donated decode step, chunked prefill, slot
   extract/insert) and live re-placement.
+- :mod:`repro.serve.handoff` — the DCN crossing of a disaggregated
+  cluster: publish/adopt of KV tickets over the bridge mesh's
+  ``donor_pod`` tier, with per-request crossing accounting.
+- :mod:`repro.serve.disagg` — the disaggregated :class:`Cluster`:
+  planner-split prefill/decode pools joined by the handoff, with
+  replay-as-fresh fault recovery.
 """
 
+from repro.serve.disagg import Cluster, DisaggConfig, PrefillPool  # noqa: F401
 from repro.serve.engine import Executor  # noqa: F401
+from repro.serve.handoff import (  # noqa: F401
+    Handoff,
+    HandoffLedger,
+    HandoffTicket,
+    make_bridge_mesh,
+)
 from repro.serve.sampling import GREEDY, SamplingParams  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     QueueFullError,

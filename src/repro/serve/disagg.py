@@ -1,0 +1,565 @@
+"""Disaggregated prefill/decode serving: two pools, one DCN handoff.
+
+Colocated serving time-multiplexes prefill and decode on one mesh, so a
+long prompt admission stalls every decoding request behind its chunked
+dispatches.  A disaggregated cluster splits the device set instead — a
+*prefill pool* ingests prompts and a *decode pool* generates — and pays
+for the isolation with one inter-pool KV transfer per request, the
+tightly-coupled-systems trade the paper's datapath model prices: the
+handoff rides the slowest link in the hierarchy (the pod-to-pod DCN
+path, ``copy_bound(REMOTE_HBM, HBM)``), so disaggregation wins exactly
+when the per-request crossing costs less than the prefill interference
+it removes.
+
+Topology (:class:`Cluster`):
+
+* **Pool split** — either explicit (``DisaggConfig.split``, or a
+  ``pools=prefill:N,decode:M`` directive carried inside the policy
+  string — see :func:`repro.core.placement.extract_pool_split`) or
+  chosen by :func:`repro.core.planner.plan_pool_split`, which prices
+  every split's prefill ingest rate against its decode generation rate
+  and takes the one with the highest *bottleneck* tok/s (smallest
+  inter-pool imbalance that fits both capacities).
+* **Pool meshes** — each pool is a plain ``("data",)`` compute mesh over
+  its own device slice (:func:`make_pool_mesh`); the ``donor_pod`` axis
+  exists only on the *bridge* mesh the :class:`~repro.serve.handoff.
+  Handoff` owns, so no pool can accidentally realize a remote placement.
+* **Prefill side** (:class:`PrefillPool`) — a pool-tagged
+  :class:`~repro.serve.engine.Executor` plus a private
+  :class:`~repro.serve.state.SlotTable`.  Each admitted request is
+  claimed, chunk-prefilled, its slot row extracted
+  (:meth:`~repro.serve.engine.Executor.extract_slot`) and immediately
+  published as a :class:`~repro.serve.handoff.HandoffTicket`; the slot
+  frees for the next waiter, so prefill-pool slots recycle every tick.
+* **Decode side** — an unmodified :class:`~repro.serve.scheduler.
+  Server` on the decode mesh.  Finalized tickets enter through
+  :meth:`~repro.serve.scheduler.Server.adopt_spilled` and ride the
+  existing promotion machinery; nothing on the per-token path knows
+  disaggregation exists.
+
+Bit-identity: the ticket carries exactly the resume state a colocated
+fresh admission would have left behind (``length = len(prompt) - 1``
+cache positions filled, ``last_token = prompt[-1]`` feeding the first
+decode step), the extract→publish→adopt→insert round trip is
+bit-preserving, and the decode pool's mesh shape matches a colocated
+reference's — so greedy tokens are bit-identical to the colocated path,
+which the tests and ``tools/serve_disagg.py`` assert token-for-token.
+
+Overlap: :meth:`Cluster.step` *issues* ticket adopts (asynchronous
+device transfers), runs a decode step while the bytes are in flight,
+then blocks in :meth:`~repro.serve.handoff.Handoff.finalize` — the
+:class:`~repro.core.placement.DonorStream` double-buffering discipline
+applied across requests, bounded by ``DisaggConfig.max_staged``.
+
+Fault recovery (the ``handoff`` site): a lost ticket
+(:class:`~repro.core.faults.TicketLossError`) or a transfer whose bytes
+fail their publish-time checksum at finalize adopts **nothing** — the
+request replays as fresh through the prefill pool from prompt plus
+everything generated so far (bit-identical continuation, chunked
+prefill ≡ decode replay).  Decode-side failures after adoption
+(corrupted preemption spill, lost spill tier) route back the same way
+through :attr:`~repro.serve.scheduler.Server.requeue_hook`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.faults import (
+    FaultPlan,
+    SpillCorruptionError,
+    TicketLossError,
+)
+from repro.core.hardware import MemoryTier
+from repro.core.placement import (
+    Placement,
+    PlacementPolicy,
+    PoolSplit,
+    extract_pool_split,
+)
+from repro.core.planner import plan_pool_split
+from repro.runtime.supervisor import WatchdogConfig
+from repro.serve.engine import Executor
+from repro.serve.handoff import Handoff, HandoffTicket, make_bridge_mesh
+from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.scheduler import (
+    QueueFullError,
+    Request,
+    ServeConfig,
+    ServeHangError,
+    Server,
+)
+from repro.serve.state import SlotTable
+
+log = logging.getLogger("repro.serve.disagg")
+
+__all__ = [
+    "DisaggConfig",
+    "Cluster",
+    "PrefillPool",
+    "make_pool_mesh",
+]
+
+
+def make_pool_mesh(devices) -> Mesh:
+    """A pool's private compute mesh: 1-D ``("data",)`` over its device
+    slice.  Deliberately donor-less — peer/remote tiers are not
+    realizable inside a pool, so the only way KV can leave it is the
+    bridge mesh the :class:`~repro.serve.handoff.Handoff` owns."""
+    devs = np.asarray(list(devices), dtype=object)
+    if devs.size == 0:
+        raise ValueError("a pool needs at least one device")
+    return Mesh(devs.reshape(-1), ("data",))
+
+
+@dataclasses.dataclass
+class DisaggConfig:
+    """Cluster-level knobs; per-pool ``ServeConfig``\\ s are derived."""
+
+    batch_slots: int = 8
+    max_len: int = 512
+    prefill_chunk: int = 32
+    #: explicit device split (``PoolSplit`` or ``"prefill:N,decode:M"``);
+    #: None defers to ``policy``'s embedded ``pools=`` directive, else to
+    #: :func:`repro.core.planner.plan_pool_split`
+    split: PoolSplit | str | None = None
+    #: placement policy for *both* pools (any ``parse_policy`` spelling);
+    #: a string may carry the ``pools=prefill:N,decode:M`` directive.
+    #: None -> each pool consults the planner on its own mesh.
+    policy: PlacementPolicy | str | dict | None = None
+    rules: dict | None = None
+    #: bound on cluster-level *waiting* requests (replay re-queues are
+    #: recovery, not new load, and are exempt); None = unbounded
+    max_queue: int | None = None
+    #: decode-pool preemption (same semantics as ServeConfig)
+    preempt: bool = False
+    preempt_wait: int = 8
+    verify_donation: bool = True
+    #: one shared fault schedule: the ``handoff`` site fires in the
+    #: Handoff, ``decode``/``spill``/... in the decode pool, and
+    #: ``prefill``/``extract`` in the prefill pool
+    faults: FaultPlan | None = None
+    #: decode-pool step watchdog; None disables it
+    watchdog: WatchdogConfig | None = dataclasses.field(
+        default_factory=WatchdogConfig
+    )
+    #: handoff double-buffer depth: tickets adopted-but-not-finalized at
+    #: once (DonorStream discipline across requests)
+    max_staged: int = 2
+    #: prefill-pool slot count (defaults to ``batch_slots``); slots
+    #: recycle per tick, so this bounds prompts prefilled per step
+    prefill_slots: int | None = None
+
+
+class PrefillPool:
+    """The prefill side: claim → chunked prefill → extract → free.
+
+    A pool-tagged :class:`~repro.serve.engine.Executor` and a private
+    :class:`~repro.serve.state.SlotTable`, with no scheduler: requests
+    never *decode* here, so a slot's whole life is one :meth:`run` call
+    and the table is empty between ticks.
+    """
+
+    def __init__(self, bundle, cfg: DisaggConfig, params, mesh, policy):
+        slots = int(cfg.prefill_slots or cfg.batch_slots)
+        self.cfg = ServeConfig(
+            batch_slots=slots,
+            max_len=cfg.max_len,
+            prefill_chunk=cfg.prefill_chunk,
+            policy=policy,
+            rules=cfg.rules,
+            verify_donation=cfg.verify_donation,
+            faults=cfg.faults,
+            watchdog=None,
+            pool="prefill",
+        )
+        self.engine = Executor(bundle, self.cfg, params, mesh)
+        self.table = SlotTable(slots)
+
+    @property
+    def capacity(self) -> int:
+        """Prompts one :meth:`run` call can take."""
+        return len(self.table.free_slots())
+
+    def run(self, batch):
+        """Prefill ``[(rid, prompt, sampling), ...]`` in one batched
+        chunked-dispatch set and hand back publishable slot rows as
+        ``[(rid, rows, length, last_token, sampling), ...]``.
+
+        The rows are extracted onto pool-local HBM (the handoff's
+        publish moves them to the bridge's remote tier); ``length`` is
+        the cache fill a colocated admission would have left
+        (``len(prompt) - 1`` — the last prompt token is withheld for
+        the first decode step) and every slot frees before returning.
+        """
+        claimed = []
+        free = self.table.free_slots()
+        for rid, prompt, sampling in batch:
+            i = free.pop(0)
+            self.table.claim(i, rid, sampling)
+            claimed.append((i, rid, prompt, sampling))
+        self.engine.prefill(
+            [(i, prompt) for i, _, prompt, _ in claimed], self.table
+        )
+        out = []
+        for i, rid, prompt, sampling in claimed:
+            rows = self.engine.extract_slot(
+                i, Placement(MemoryTier.HBM)
+            )
+            out.append((
+                rid, rows, int(self.table.lengths[i]),
+                int(prompt[-1]), sampling,
+            ))
+            self.table.free(i)
+        return out
+
+
+class Cluster:
+    """A disaggregated serve cluster: prefill pool → handoff → decode pool.
+
+    The public surface mirrors :class:`~repro.serve.scheduler.Server`
+    (``submit`` / ``add_request`` / ``step`` / ``run_until_done`` /
+    ``has_work`` / ``stats``); internally every request flows::
+
+        pending ──▶ PrefillPool.run ──▶ Handoff.publish (DCN, blocking)
+                                              │ ticket
+                  Handoff.adopt (async) ◀─────┘
+                        │ overlapped with decode.step()
+                  Handoff.finalize ──▶ decode.adopt_spilled ──▶ tokens
+
+    and a handoff fault (lost ticket, corrupted transfer) re-enters the
+    flow at ``pending`` with a replay prompt — nothing was adopted, so
+    recovery is a plain re-submission the ledger records as ``lost``.
+    """
+
+    def __init__(self, bundle, cfg: DisaggConfig, params, devices=None):
+        self.bundle = bundle
+        self.cfg = cfg
+        devs = list(devices) if devices is not None else list(jax.devices())
+        split, policy = self._resolve_split(bundle, cfg, len(devs))
+        if split.total > len(devs):
+            raise ValueError(
+                f"pool split {split.to_str()} needs {split.total} "
+                f"device(s), only {len(devs)} available"
+            )
+        self.split = split
+        pre = devs[: split.prefill]
+        dec = devs[split.prefill : split.total]
+        self.prefill_mesh = make_pool_mesh(pre)
+        self.decode_mesh = make_pool_mesh(dec)
+        #: the one cross-pool surface: a bridge mesh over both pools
+        #: with the donor_pod axis on the pool boundary
+        self.handoff = Handoff(
+            bundle, make_bridge_mesh(pre, dec),
+            faults=cfg.faults, max_staged=cfg.max_staged,
+        )
+        self.prefill = PrefillPool(
+            bundle, cfg, params, self.prefill_mesh, policy
+        )
+        self.decode = Server(
+            bundle,
+            ServeConfig(
+                batch_slots=cfg.batch_slots,
+                max_len=cfg.max_len,
+                prefill_chunk=cfg.prefill_chunk,
+                policy=policy,
+                rules=cfg.rules,
+                preempt=cfg.preempt,
+                preempt_wait=cfg.preempt_wait,
+                verify_donation=cfg.verify_donation,
+                faults=cfg.faults,
+                verify_spills=bool(cfg.faults),
+                watchdog=cfg.watchdog,
+                pool="decode",
+            ),
+            params,
+            mesh=self.decode_mesh,
+        )
+        # decode-side recovery (corrupted preemption spill, lost spill
+        # tier) routes back here: the request replays through the
+        # prefill pool instead of re-prefilling on the decode mesh
+        self.decode.requeue_hook = self._take_back
+        self._requests: dict[int, Request] = {}
+        #: cluster wait queue, FIFO; replays re-enter at the head
+        self._pending: list[int] = []
+        self._replay: dict[int, np.ndarray] = {}
+        #: published tickets awaiting an adopt slot
+        self._tickets: list[HandoffTicket] = []
+        #: rids with adopts issued but not finalized (<= max_staged)
+        self._inflight: list[int] = []
+        self._next_rid = 0
+        self._counters = {"handoff_replays": 0, "peak_pending": 0}
+
+    @staticmethod
+    def _resolve_split(bundle, cfg: DisaggConfig, num_devices: int):
+        """Explicit split > policy-embedded ``pools=`` directive >
+        planner.  Returns ``(PoolSplit, pool policy with the directive
+        removed)``."""
+        split = cfg.split
+        policy = cfg.policy
+        if isinstance(split, str):
+            split = PoolSplit.parse(split)
+        if isinstance(policy, str):
+            embedded, policy = extract_pool_split(policy)
+            if embedded is not None:
+                if split is not None and embedded != split:
+                    raise ValueError(
+                        f"conflicting pool splits: cfg.split="
+                        f"{split.to_str()} vs policy directive "
+                        f"{embedded.to_str()}"
+                    )
+                split = split or embedded
+        if split is None:
+            best, _ = plan_pool_split(
+                bundle, num_devices,
+                batch_slots=cfg.batch_slots, max_len=cfg.max_len,
+                prefill_chunk=cfg.prefill_chunk,
+            )
+            split = PoolSplit(best.prefill_devices, best.decode_devices)
+            log.info(
+                "planner chose %s for %s (bottleneck %.3g tok/s, "
+                "imbalance %.3gx)", split.to_str(), bundle.cfg.name,
+                best.bottleneck_tps, best.imbalance,
+            )
+        return split, policy
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def ledger(self):
+        """The handoff's crossing ledger (ground truth for "every
+        admitted request's KV crossed donor_pod exactly once")."""
+        return self.handoff.ledger
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def has_work(self) -> bool:
+        return bool(
+            self._pending or self._tickets or self._inflight
+            or self.decode.has_work()
+        )
+
+    def stats(self) -> dict:
+        """Cluster counters: the pool split, handoff ledger totals, and
+        each pool's own counters nested under its name."""
+        return {
+            "split": self.split.to_str(),
+            "pending": len(self._pending),
+            "tickets_waiting": len(self._tickets),
+            "tickets_inflight": len(self._inflight),
+            **self._counters,
+            "handoff": self.handoff.ledger.to_json(),
+            "prefill_pool": dict(self.prefill.engine.counters),
+            "decode_pool": self.decode.stats(),
+        }
+
+    def throughput(self) -> dict:
+        """Per-pool token rates — what the pool-split planner predicted,
+        measured."""
+        pc = self.prefill.engine.counters
+        out = self.decode.throughput()
+        out["prefill_tokens"] = pc["prefill_tokens"]
+        out["prefill_tps"] = (
+            pc["prefill_tokens"] / pc["prefill_s"] if pc["prefill_s"]
+            else 0.0
+        )
+        return out
+
+    # -- request intake ----------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        """Queue a request on the cluster (validation mirrors
+        :meth:`repro.serve.scheduler.Server.add_request`; the bounded
+        queue raises :class:`~repro.serve.scheduler.QueueFullError`)."""
+        if req.rid < 0:
+            raise ValueError(f"request rid must be >= 0, got {req.rid}")
+        if req.rid in self._requests:
+            raise ValueError(
+                f"request {req.rid}: rid already live on the cluster"
+            )
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}"
+            )
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) >= self.cfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"does not fit max_len={self.cfg.max_len} "
+                "(need len(prompt) < max_len)"
+            )
+        req.sampling.validate()
+        if (
+            self.cfg.max_queue is not None
+            and len(self._pending) >= self.cfg.max_queue
+        ):
+            raise QueueFullError(
+                f"request {req.rid}: cluster queue is full "
+                f"({self.cfg.max_queue} waiting); retry after the "
+                "prefill pool drains or raise DisaggConfig.max_queue"
+            )
+        req.submitted_s = time.perf_counter()
+        self._requests[req.rid] = req
+        self._pending.append(req.rid)
+        self._counters["peak_pending"] = max(
+            self._counters["peak_pending"], len(self._pending)
+        )
+
+    def add_requests(self, reqs) -> None:
+        for req in reqs:
+            self.add_request(req)
+
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int,
+        sampling: SamplingParams = GREEDY,
+        rid: int | None = None,
+        on_token: Callable[[Request, int], None] | None = None,
+    ) -> Request:
+        """Build + queue a request with an auto-assigned free rid."""
+        if rid is None:
+            while self._next_rid in self._requests:
+                self._next_rid += 1
+            rid = self._next_rid
+            self._next_rid += 1
+        req = Request(
+            rid=rid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            sampling=sampling,
+            on_token=on_token,
+        )
+        self.add_request(req)
+        return req
+
+    # -- recovery ----------------------------------------------------------
+    def _take_back(self, rid: int, replay: np.ndarray) -> bool:
+        """The decode server's ``requeue_hook``: reclaim a request whose
+        decode-side state was lost (corrupted spill, lost spill tier) so
+        its replay prefills through the *prefill* pool and re-adopts."""
+        if rid not in self._requests:
+            return False
+        self._replay[rid] = np.asarray(replay, np.int32)
+        self._pending.insert(0, rid)
+        self._counters["handoff_replays"] += 1
+        return True
+
+    def _recover(self, rid: int, why: str) -> None:
+        """Replay-as-fresh after a handoff fault: nothing was adopted,
+        so re-enter the flow at the pending head with prompt + every
+        token generated so far (bit-identical continuation)."""
+        req = self._requests[rid]
+        replay = np.asarray(req.prompt, np.int32)
+        if req.out_tokens:
+            replay = np.concatenate(
+                [replay, np.asarray(req.out_tokens, np.int32)]
+            )
+        self._replay[rid] = replay
+        self._pending.insert(0, rid)
+        self._counters["handoff_replays"] += 1
+        log.warning(
+            "handoff for rid %d %s; replaying through the prefill pool",
+            rid, why,
+        )
+
+    def _reap_pending_cancelled(self) -> None:
+        """Finalize cancelled requests still waiting for prefill (after
+        adoption the decode server's reaper owns them)."""
+        for rid in list(self._pending):
+            req = self._requests[rid]
+            if not req.cancelled or req.done:
+                continue
+            self._pending.remove(rid)
+            self._requests.pop(rid)
+            self._replay.pop(rid, None)
+            req.done = True
+            req.finished_s = time.perf_counter()
+            if req.on_token is not None:
+                req.on_token(req, -1)
+
+    # -- one cluster tick --------------------------------------------------
+    def step(self) -> int:
+        """Advance every stage of the pipeline once; returns the number
+        of decode slots that generated a token.
+
+        Stage order is the overlap schedule: adopts are *issued*
+        (asynchronous transfers) before the decode step and *finalized*
+        (blocked on, verified, admitted) after it — the DCN crossing
+        hides behind generation, double-buffered up to ``max_staged``
+        tickets, exactly the :class:`~repro.core.placement.DonorStream`
+        window discipline.
+        """
+        self._reap_pending_cancelled()
+        # 1. prefill + publish: fill up to the pool's slot capacity
+        take = []
+        while self._pending and len(take) < self.prefill.capacity:
+            rid = self._pending.pop(0)
+            req = self._requests[rid]
+            take.append((
+                rid, self._replay.pop(rid, req.prompt), req.sampling,
+            ))
+        if take:
+            for rid, rows, length, last, sampling in self.prefill.run(take):
+                self._tickets.append(self.handoff.publish(
+                    rid, rows, length, last, sampling
+                ))
+        # 2. issue adopts (async DCN transfers, bounded staging)
+        while self._tickets and self.handoff.staged < self.handoff.max_staged:
+            ticket = self._tickets.pop(0)
+            try:
+                self.handoff.adopt(ticket, self.decode_mesh)
+            except TicketLossError:
+                self._recover(ticket.rid, "ticket lost in flight")
+            else:
+                self._inflight.append(ticket.rid)
+        # 3. decode while the adopt bytes are in flight
+        active = self.decode.step() if self.decode.has_work() else 0
+        # 4. finalize: block, verify the crossing, admit (or replay)
+        for rid in list(self._inflight):
+            self._inflight.remove(rid)
+            try:
+                spilled = self.handoff.finalize(rid)
+            except SpillCorruptionError as e:
+                log.warning("%s", e)
+                self._recover(rid, "transfer failed its checksum")
+            else:
+                self.decode.adopt_spilled(self._requests[rid], spilled)
+        # drop finished requests from the cluster map (the decode server
+        # already evicted its own bookkeeping when it freed the slot)
+        for rid, req in list(self._requests.items()):
+            if req.done:
+                self._requests.pop(rid)
+                self._replay.pop(rid, None)
+        return active
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        """Drive :meth:`step` until nothing is live anywhere in the
+        pipeline; raises :class:`~repro.serve.scheduler.ServeHangError`
+        with full diagnostics if the budget is exhausted first."""
+        for _ in range(max_steps):
+            if not self.has_work():
+                return
+            self.step()
+        if not self.has_work():
+            return
+        raise ServeHangError(
+            f"disaggregated cluster did not drain within "
+            f"max_steps={max_steps}",
+            queue_depth=len(self._pending),
+            live_rids=tuple(self._requests),
+            stats={
+                k: v for k, v in self.stats().items()
+                if not isinstance(v, dict)
+            },
+        )

@@ -26,9 +26,11 @@ compute datapath exactly once:
 * **Chunked batched prefill** — admission writes whole prompt chunks for
   all newly claimed slots per :meth:`ModelBundle.prefill_at` dispatch, so
   a batch of length-L prompts costs O(L / prefill_chunk) dispatches.
-  Encoder-decoder bundles fall back to the O(B·L) decode-step replay —
-  now warned once and counted (``decode_replay_prefills``) instead of
-  silent.
+  Encoder-decoder bundles now take this path too
+  (:func:`~repro.models.encdec.encdec_prefill_at`); only a bundle whose
+  ``prefill_at`` raises ``NotImplementedError`` falls back to the O(B·L)
+  decode-step replay — warned once and counted
+  (``decode_replay_prefills``) instead of silent.
 * **On-device serve state** — lengths/last-token/active *and the
   per-slot sampling parameters* live in a device state dict carried
   through the jitted step; sampling + stop detection happen in-jit, and
@@ -249,31 +251,33 @@ class Executor:
             self.params, self._proto_state, self.caches
         ).compile()
 
-        # encoder-decoder bundles have no offset-chunk prefill (their
-        # prefill also projects the cross-attention memory) — they fall
-        # back to the decode-step replay admission.
-        if bundle.cfg.family == "audio" and bundle.cfg.n_encoder_layers:
-            self._prefill = None
-        else:
-            prefill_jit = jax.jit(
-                lambda p, batch, caches, offsets: bundle.prefill_at(
-                    p, batch, caches, offsets
-                ),
-                donate_argnums=(2,) if self._donate_cache else (),
-                out_shardings=(
-                    None if cache_specs is None else (None, cache_specs)
-                ),
-            )
-            chunk = max(int(cfg.prefill_chunk), 1)
-            B = cfg.batch_slots
-            proto_batch = self.place_state({
-                "tokens": jnp.zeros((B, chunk), jnp.int32),
-                "new_lens": jnp.zeros((B,), jnp.int32),
-            })
-            proto_offsets = self.place_state(jnp.zeros((B,), jnp.int32))
+        # offset-chunk prefill, probed by capability rather than family:
+        # encoder-decoder bundles chunk-prefill too now (their cross KV
+        # is read-only during generation); only a bundle whose
+        # prefill_at raises NotImplementedError falls back to the
+        # decode-step replay admission.
+        prefill_jit = jax.jit(
+            lambda p, batch, caches, offsets: bundle.prefill_at(
+                p, batch, caches, offsets
+            ),
+            donate_argnums=(2,) if self._donate_cache else (),
+            out_shardings=(
+                None if cache_specs is None else (None, cache_specs)
+            ),
+        )
+        chunk = max(int(cfg.prefill_chunk), 1)
+        B = cfg.batch_slots
+        proto_batch = self.place_state({
+            "tokens": jnp.zeros((B, chunk), jnp.int32),
+            "new_lens": jnp.zeros((B,), jnp.int32),
+        })
+        proto_offsets = self.place_state(jnp.zeros((B,), jnp.int32))
+        try:
             self._prefill = prefill_jit.lower(
                 self.params, proto_batch, self.caches, proto_offsets
             ).compile()
+        except NotImplementedError:
+            self._prefill = None
 
         # preemption's device half: one slot row out / back in.  Extract
         # must NOT donate (the cache lives on); insert donates like the
@@ -313,6 +317,10 @@ class Executor:
         cfg = self.cfg
         arg_roles = {"p": Role.PARAMS, "caches": Role.KV_CACHE}
         donated = {"caches"} if self._donate_cache else set()
+        # disaggregated clusters run one Executor per pool; the pool tag
+        # keeps each pool's donation audit separately attributable
+        pool = getattr(cfg, "pool", "")
+        tag = f"{pool}:" if pool else ""
         # Fig. 17 allowance: one (B,1) token upload + one packed (2,B)
         # readback per step — nothing else may cross host<->device
         host_allow = 3 * cfg.batch_slots * 4
@@ -320,14 +328,14 @@ class Executor:
             "decode": self.rt.audit(
                 self._decode, arg_roles, donated=donated,
                 host_bytes_allowed=host_allow,
-                label=f"decode:{self.bundle.cfg.name}:{self.policy.name}",
+                label=f"{tag}decode:{self.bundle.cfg.name}:{self.policy.name}",
             ),
         }
         if self._prefill is not None:
             self.audit_reports["prefill"] = self.rt.audit(
                 self._prefill, arg_roles, donated=donated,
                 host_bytes_allowed=host_allow,
-                label=f"prefill:{self.bundle.cfg.name}:{self.policy.name}",
+                label=f"{tag}prefill:{self.bundle.cfg.name}:{self.policy.name}",
             )
         verify = getattr(cfg, "verify_donation", True)
         if verify and self._donate_cache:
@@ -346,7 +354,7 @@ class Executor:
             self.audit_reports["insert"] = self.rt.audit(
                 insert_compiled, {"caches": Role.KV_CACHE},
                 donated=donated, host_bytes_allowed=0.0,
-                label=f"insert:{self.bundle.cfg.name}:{self.policy.name}",
+                label=f"{tag}insert:{self.bundle.cfg.name}:{self.policy.name}",
             )
         if verify:
             for report in self.audit_reports.values():
@@ -466,18 +474,19 @@ class Executor:
                 table.lengths[i] += int(new_lens[i])
 
     def _replay_prefill(self, new, table) -> None:
-        """Fallback admission for bundles without ``prefill_at``
-        (encoder-decoder): replay each prompt token-by-token through the
-        full-batch decode step — O(B·L) dispatches, correctness-only.
-        Warned once and counted so the slow path is visible."""
+        """Fallback admission for bundles whose ``prefill_at`` raises
+        ``NotImplementedError``: replay each prompt token-by-token
+        through the full-batch decode step — O(B·L) dispatches,
+        correctness-only.  Warned once and counted so the slow path is
+        visible."""
         from repro.analysis.warnings_registry import mark
 
         if mark(f"decode_replay:{self.bundle.cfg.name}"):
             log.warning(
-                "%s has no chunked prefill (encoder-decoder bundles "
-                "re-project the cross-attention memory): admission falls "
-                "back to O(B*L) decode-step replay — correctness-only; "
-                "counted in stats()['decode_replay_prefills']",
+                "%s has no chunked prefill (prefill_at raised "
+                "NotImplementedError): admission falls back to O(B*L) "
+                "decode-step replay — correctness-only; counted in "
+                "stats()['decode_replay_prefills']",
                 self.bundle.cfg.name,
             )
         self.counters["decode_replay_prefills"] += len(new)

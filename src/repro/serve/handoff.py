@@ -1,0 +1,350 @@
+"""Handoff: the DCN crossing of a disaggregated prefill/decode cluster.
+
+A disaggregated cluster (:mod:`repro.serve.disagg`) splits the device set
+into a prefill pool and a decode pool.  The KV a prefill Executor fills
+for one request must physically move to the decode pool before generation
+can start — the inter-pool transfer the paper's successors price on the
+slowest link in the system, the pod-to-pod DCN path.  This module is the
+**only** place that transfer may happen (the ``cross-pool-device-put``
+lint rule pins every other serve module to its pool-local mesh):
+
+* :func:`make_bridge_mesh` — a mesh over *all* devices, prefill pool
+  first, whose leading axis is :data:`~repro.core.placement.
+  REMOTE_DONOR_AXIS` (``donor_pod``).  With equal pools the axis has size
+  2 — slice 0 is the prefill pool, slice 1 the decode pool — so a tensor
+  realized on :attr:`~repro.core.hardware.MemoryTier.REMOTE_HBM` is
+  sharded *across the pool boundary*: publishing and adopting each move
+  half its bytes over the inter-pool link, and together every byte
+  crosses ``donor_pod`` exactly once in each direction.
+* :class:`HandoffTicket` — the unit of handoff: one request's filled KV
+  rows parked on the bridge's remote tier, plus the resume state a
+  decode-side admission needs (deliberately shaped like
+  :class:`~repro.serve.state.SpilledSequence`, so the decode Server's
+  promotion machinery — insert + resume + checksum verification — is
+  reused unchanged).
+* :class:`Handoff` — publish/adopt over a bridge-mesh
+  :class:`repro.api.Runtime` pinned to ``kv_remote_hbm``.  ``publish``
+  realizes the rows onto the remote tier (``Runtime.realize``);
+  ``adopt`` pulls them back to local HBM via donation-aware
+  :meth:`repro.api.Runtime.migrate_roles` — the ticket's remote buffer
+  is freed as the copy lands, and a faulted adopt adopts nothing — then
+  re-commits them onto the decode pool's mesh.  Both ends are priced
+  against the calibrated ``copy_bound(REMOTE_HBM, HBM)`` DCN bound and
+  recorded in the :class:`HandoffLedger`.
+* Overlap — ``adopt`` only *issues* the (asynchronous) transfers; the
+  cluster runs a decode step before blocking on the bytes
+  (:meth:`Handoff.finalize`), the :class:`~repro.core.placement.
+  DonorStream` double-buffering discipline applied across tickets
+  instead of layer windows.  ``max_staged`` bounds the in-flight tickets
+  exactly like ``DonorStream.depth`` bounds staged windows.
+
+Fault sites: ``handoff`` fires once per adopt.  ``TICKET_LOSS`` raises
+:class:`~repro.core.faults.TicketLossError` (the ticket vanished on the
+DCN path — nothing was adopted); ``SPILL_CORRUPT`` perturbs the bytes in
+flight so the park-time checksum fails at :meth:`finalize`.  Both recover
+by replaying the request as fresh through the prefill pool (see
+``disagg.Cluster``) — bit-identical continuation, because chunked prefill
+≡ decode replay.
+
+Crossing accounting lives in the :class:`HandoffLedger`, not
+``Runtime.audit``: the HLO audit sees compiled modules, and these
+transfers are ``device_put`` reshards outside any jit — so the ledger is
+the ground truth for "every admitted request's KV crossed ``donor_pod``
+exactly once", and what ``tools/serve_disagg.py`` turns into
+``BENCH_disagg.json``'s measured-bandwidth-vs-calibrated-bound rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.api import Runtime
+from repro.core.faults import (
+    FaultKind,
+    checksum_tree,
+    corrupt_tree,
+    verify_spill,
+)
+from repro.core.hardware import MemoryTier
+from repro.core.placement import REMOTE_DONOR_AXIS, Placement, Role
+from repro.serve.sampling import SamplingParams
+from repro.serve.state import SpilledSequence
+
+__all__ = [
+    "HandoffTicket",
+    "HandoffLedger",
+    "Handoff",
+    "make_bridge_mesh",
+    "tree_nbytes",
+]
+
+
+def make_bridge_mesh(prefill_devices, decode_devices) -> Mesh:
+    """Mesh over both pools with a leading ``donor_pod`` axis.
+
+    Device order is prefill pool first, then decode pool.  With equal
+    pools the ``donor_pod`` axis has size 2 and its slice boundary *is*
+    the pool boundary — a ``REMOTE_HBM`` tensor shards half its bytes
+    into each pool, so one publish + one adopt moves every byte across
+    the inter-pool link exactly once each way.  Unequal pools fall back
+    to sharding across all devices (axis size = device count); the
+    crossing accounting is unchanged, only the per-device shard sizes
+    differ.
+    """
+    pre = list(prefill_devices)
+    dec = list(decode_devices)
+    if not pre or not dec:
+        raise ValueError(
+            f"bridge mesh needs both pools non-empty, got "
+            f"{len(pre)} prefill / {len(dec)} decode device(s)"
+        )
+    devs = np.asarray(pre + dec, dtype=object)
+    if len(pre) == len(dec):
+        devs = devs.reshape(2, len(pre))
+    else:
+        devs = devs.reshape(len(devs), 1)
+    return Mesh(devs, (REMOTE_DONOR_AXIS, "data"))
+
+
+def tree_nbytes(tree) -> int:
+    """Total buffer bytes of a pytree's leaves."""
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(tree)))
+
+
+@dataclasses.dataclass
+class HandoffTicket:
+    """One request's prefilled KV, published for a decode pool to adopt.
+
+    ``rows`` live on the bridge mesh's ``kv_remote_hbm`` placement
+    (donor_pod-sharded across the pool boundary) from publish until
+    adopt, when the transfer donates them away.  The resume fields mirror
+    :class:`~repro.serve.state.SpilledSequence` so
+    :meth:`to_spilled` hands the decode Server a record its existing
+    promotion path (checksum verify → insert → resume) consumes as-is.
+    """
+
+    rid: int
+    rows: object                 # slot-row pytree on the bridge remote tier
+    length: int                  # cache fill at publish (len(prompt) - 1)
+    last_token: int              # prompt[-1]: the first decode step's input
+    sampling: SamplingParams
+    #: checksum_tree() of the rows *before* the publish crossing; adopt
+    #: verifies the far side of the round trip against it
+    checksum: float | None
+    nbytes: int = 0
+    publish_s: float = 0.0       # measured publish transfer (blocking)
+    adopt_s: float = 0.0         # measured un-overlapped adopt tail
+    bound_s: float = 0.0         # calibrated one-way copy_bound price
+
+    def to_spilled(self, rows) -> SpilledSequence:
+        """The decode-side admission record, carrying ``rows`` already
+        committed to the decode pool's mesh."""
+        return SpilledSequence(
+            rid=self.rid,
+            rows=rows,
+            length=self.length,
+            last_token=self.last_token,
+            sampling=self.sampling,
+            since_tick=0,
+            tier=MemoryTier.REMOTE_HBM,
+            checksum=self.checksum,
+        )
+
+
+class HandoffLedger:
+    """Per-request crossing accounting for the donor_pod tier.
+
+    ``Runtime.audit`` reads compiled HLO; handoff transfers are
+    ``device_put`` reshards outside any jit, so the ledger — not the
+    audit — answers "did this rid's KV cross exactly once?".  Every
+    publish/adopt appends a record with measured seconds next to the
+    calibrated DCN bound, which is what the soak's
+    ``BENCH_disagg.json`` summarizes.
+    """
+
+    def __init__(self):
+        self.publishes: dict[int, int] = {}
+        self.adopts: dict[int, int] = {}
+        self.lost: dict[int, int] = {}
+        self.records: list[dict] = []
+
+    def record(self, event: str, rid: int, nbytes: int,
+               seconds: float, bound_s: float) -> None:
+        counter = {"publish": self.publishes, "adopt": self.adopts,
+                   "lost": self.lost}[event]
+        counter[rid] = counter.get(rid, 0) + 1
+        self.records.append({
+            "event": event,
+            "rid": int(rid),
+            "nbytes": int(nbytes),
+            "seconds": float(seconds),
+            "bound_s": float(bound_s),
+        })
+
+    def crossings(self, rid: int) -> int:
+        """Completed publish→adopt round trips for ``rid``."""
+        return self.adopts.get(rid, 0)
+
+    def total_bytes(self, event: str = "publish") -> int:
+        return sum(
+            r["nbytes"] for r in self.records if r["event"] == event
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "published": sum(self.publishes.values()),
+            "adopted": sum(self.adopts.values()),
+            "lost": sum(self.lost.values()),
+            "bytes_published": self.total_bytes("publish"),
+            "bytes_adopted": self.total_bytes("adopt"),
+            "records": list(self.records),
+        }
+
+
+class Handoff:
+    """Publish/adopt KV slot rows across the pool boundary.
+
+    Owns a :class:`repro.api.Runtime` over the bridge mesh, pinned to
+    the registered ``kv_remote_hbm`` policy — construction therefore
+    validates up front that the bridge really has a ``donor_pod`` axis
+    (a bridge that cannot realize the remote tier must never silently
+    publish into local memory).  ``faults`` is the cluster's shared
+    :class:`~repro.core.faults.FaultPlan`; the ``handoff`` site fires
+    once per adopt.
+    """
+
+    def __init__(self, bundle, bridge_mesh: Mesh, *, faults=None,
+                 system=None, max_staged: int = 2):
+        self.mesh = bridge_mesh
+        self.rt = Runtime(bundle, bridge_mesh, "kv_remote_hbm",
+                          system=system)
+        self._remote = self.rt.policy
+        self._local = self.rt.policy.with_placement(
+            Role.KV_CACHE, Placement(MemoryTier.HBM)
+        ).renamed("handoff_adopt_hbm")
+        self.faults = faults
+        self.ledger = HandoffLedger()
+        #: DonorStream-style staging bound: at most this many adopted
+        #: tickets may be in flight (issued, not yet finalized) at once
+        self.max_staged = max(int(max_staged), 2)
+        #: rid -> (ticket, rows, issue wall-clock stamp)
+        self._staged: dict[int, tuple[HandoffTicket, object, float]] = {}
+
+    # -- pricing -----------------------------------------------------------
+    def bound_s(self, nbytes: int) -> float:
+        """Calibrated one-way DCN price for ``nbytes`` (the
+        ``copy_bound(REMOTE_HBM, HBM)`` 'dcn' term the soak compares
+        measured transfers against)."""
+        return self.rt.price_copy(
+            nbytes, MemoryTier.HBM, src=MemoryTier.REMOTE_HBM
+        )
+
+    # -- prefill side ------------------------------------------------------
+    def publish(self, rid: int, rows, length: int, last_token: int,
+                sampling: SamplingParams) -> HandoffTicket:
+        """Park one request's filled KV rows on the bridge's remote tier.
+
+        ``rows`` arrive on the prefill pool's mesh (one extracted slot
+        row per cache leaf); they are checksummed *first* — the stamp
+        travels with the ticket and the adopt side verifies the full
+        round trip against it — then realized donor_pod-sharded.
+        Blocking: the measured ``publish_s`` is an honest transfer time,
+        the publish half of the BENCH bandwidth row.
+        """
+        checksum = checksum_tree(rows)
+        nbytes = tree_nbytes(rows)
+        t0 = time.perf_counter()
+        self.rt.policy = self._remote
+        remote_rows = self.rt.realize(rows, Role.KV_CACHE)
+        jax.block_until_ready(remote_rows)
+        dt = time.perf_counter() - t0
+        bound = self.bound_s(nbytes)
+        self.ledger.record("publish", rid, nbytes, dt, bound)
+        return HandoffTicket(
+            rid=rid, rows=remote_rows, length=length,
+            last_token=last_token, sampling=sampling,
+            checksum=checksum, nbytes=nbytes,
+            publish_s=dt, bound_s=bound,
+        )
+
+    # -- decode side -------------------------------------------------------
+    @property
+    def staged(self) -> int:
+        """Tickets issued but not yet finalized."""
+        return len(self._staged)
+
+    def adopt(self, ticket: HandoffTicket, target_mesh: Mesh) -> None:
+        """Issue the adopt transfers for ``ticket`` (non-blocking).
+
+        Fires the ``handoff`` fault site (a ``TICKET_LOSS`` event raises
+        :class:`~repro.core.faults.TicketLossError` before any transfer
+        — nothing is adopted and the remote rows are dropped; a
+        ``SPILL_CORRUPT`` event perturbs the bytes so :meth:`finalize`'s
+        checksum verification catches the transfer).  The DCN crossing
+        itself is donation-aware :meth:`repro.api.Runtime.migrate_roles`
+        over the bridge runtime — remote → local HBM, the ticket's
+        donor-sharded buffer freed as the copy lands — followed by a
+        re-commit onto the decode pool's own mesh.  Both device_puts are
+        asynchronous: the caller overlaps a decode step before blocking
+        in :meth:`finalize` (double buffering across tickets, bounded by
+        ``max_staged``).
+        """
+        if len(self._staged) >= self.max_staged:
+            raise RuntimeError(
+                f"handoff staging full ({self.max_staged} tickets in "
+                "flight); finalize() before adopting more"
+            )
+        if self.faults:
+            try:
+                ev = self.faults.check("handoff", rid=ticket.rid)
+            except Exception:
+                nb = ticket.nbytes
+                self.ledger.record("lost", ticket.rid, nb, 0.0,
+                                   self.bound_s(nb))
+                raise
+        else:
+            ev = None
+        t0 = time.perf_counter()
+        trees = {Role.KV_CACHE: ticket.rows}
+        self.rt.policy = self._remote
+        self.rt.migrate_roles(trees, self._local)
+        rows = trees[Role.KV_CACHE]
+        if ev is not None and ev.kind is FaultKind.SPILL_CORRUPT:
+            rows = corrupt_tree(rows)
+        # the bridge-local result is replicated over every device, so
+        # this re-commit onto the decode pool's mesh moves no new bytes
+        # — it only narrows the device set the insert jit may address
+        rows = jax.device_put(rows, NamedSharding(target_mesh, P()))
+        self._staged[ticket.rid] = (ticket, rows, t0)
+
+    def finalize(self, rid: int) -> SpilledSequence:
+        """Block on an issued adopt and hand back the admission record.
+
+        Verifies the round trip against the publish-time checksum
+        (:class:`~repro.core.faults.SpillCorruptionError` on mismatch —
+        the staged rows are dropped and nothing was admitted).  The
+        recorded ``adopt_s`` is the *un-overlapped* tail: wall time from
+        issue to ready minus whatever the caller overlapped it with.
+        """
+        ticket, rows, t0 = self._staged.pop(rid)
+        jax.block_until_ready(rows)
+        dt = time.perf_counter() - t0
+        try:
+            verify_spill(rows, ticket.checksum, rid)
+        except Exception:
+            self.ledger.record("lost", rid, ticket.nbytes, dt,
+                               ticket.bound_s)
+            raise
+        ticket.adopt_s = dt
+        self.ledger.record("adopt", rid, ticket.nbytes, dt,
+                           ticket.bound_s)
+        return ticket.to_spilled(rows)
+
+    def drop(self, rid: int) -> None:
+        """Discard a staged adopt (cluster-side recovery bookkeeping)."""
+        self._staged.pop(rid, None)

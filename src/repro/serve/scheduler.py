@@ -195,6 +195,10 @@ class ServeConfig:
     watchdog: WatchdogConfig | None = dataclasses.field(
         default_factory=WatchdogConfig
     )
+    #: pool label for disaggregated clusters ("prefill"/"decode"); tags
+    #: the Executor's donation-audit reports so each pool's builds stay
+    #: separately attributable.  Empty for colocated serving.
+    pool: str = ""
 
 
 class Server:
@@ -226,6 +230,12 @@ class Server:
         #: prefills prompt + everything generated so far instead of its
         #: original prompt — bit-identical continuation
         self._replay_prompts: dict[int, np.ndarray] = {}
+        #: disaggregation hook (repro.serve.disagg): when set,
+        #: _requeue_fresh offers the request back to the cluster —
+        #: ``hook(rid, replay_prompt) -> True`` means the cluster took it
+        #: (it replays through the prefill pool and re-adopts), so this
+        #: server drops its bookkeeping instead of re-queuing locally
+        self.requeue_hook: Callable[[int, np.ndarray], bool] | None = None
         self._counters = {
             "preemptions": 0, "promotions": 0, "peak_queue": 0,
             "cancelled": 0, "expired": 0,
@@ -379,6 +389,38 @@ class Server:
         for req in reqs:
             self.add_request(req)
 
+    def adopt_spilled(self, req: Request, spilled: SpilledSequence) -> None:
+        """Admit a request whose KV was prepared *elsewhere* — the
+        decode-side entry point of a disaggregated handoff
+        (``repro.serve.disagg``).
+
+        ``spilled`` carries the rows a prefill pool filled and the
+        handoff moved onto this server's mesh, shaped exactly like a
+        preemption spill — so admission rides the existing promotion
+        path (:meth:`_promote`: checksum verify, jitted row insert,
+        mirror resume) with zero new machinery on the per-token path.
+        Queued FIFO like any other waiter; a promotion-time integrity
+        failure takes the same replay-as-fresh ladder (routed back to
+        the cluster by the ``requeue_hook`` when installed).
+        """
+        if spilled.rid != req.rid:
+            raise ValueError(
+                f"ticket rid {spilled.rid} != request rid {req.rid}"
+            )
+        if req.rid in self._requests:
+            raise ValueError(
+                f"request {req.rid}: rid already live on this server"
+            )
+        if req.submitted_s is None:
+            req.submitted_s = time.perf_counter()
+        self._requests[req.rid] = req
+        self._spilled[req.rid] = spilled
+        self._waitq.append(("spilled", req.rid))
+        self._wait_since[req.rid] = self._tick
+        self._counters["peak_queue"] = max(
+            self._counters["peak_queue"], self.queue_depth
+        )
+
     def submit(
         self,
         prompt,
@@ -433,17 +475,30 @@ class Server:
         tiers: chunked prefill ≡ decode replay and sampling draws are
         (seed, position)-deterministic, so the replayed continuation is
         bit-identical to never having been interrupted.  Inserted at
-        the queue head — the request already waited its turn once."""
+        the queue head — the request already waited its turn once.
+
+        With a disaggregation ``requeue_hook`` installed, the cluster
+        gets first refusal: a hook returning True takes the request back
+        (replay routes through the *prefill* pool and re-enters via
+        :meth:`adopt_spilled`), and this server forgets it entirely."""
         req = self._requests[rid]
+        replay = np.asarray(req.prompt, np.int32)
         if req.out_tokens:
-            self._replay_prompts[rid] = np.concatenate(
-                [np.asarray(req.prompt, np.int32),
-                 np.asarray(req.out_tokens, np.int32)]
+            replay = np.concatenate(
+                [replay, np.asarray(req.out_tokens, np.int32)]
             )
         self._waitq = [(k, r) for k, r in self._waitq if r != rid]
+        self._counters["requeued_fresh"] += 1
+        if self.requeue_hook is not None and self.requeue_hook(rid, replay):
+            self._requests.pop(rid, None)
+            self._wait_since.pop(rid, None)
+            self._replay_prompts.pop(rid, None)
+            self._spilled.pop(rid, None)
+            return
+        if req.out_tokens:
+            self._replay_prompts[rid] = replay
         self._waitq.insert(0, ("fresh", rid))
         self._wait_since[rid] = self._tick
-        self._counters["requeued_fresh"] += 1
 
     def _reap_cancelled_expired(self) -> None:
         """Finalize cancelled and deadline-expired requests (start of

@@ -1,0 +1,462 @@
+"""Disaggregated prefill/decode serving: pools, handoff, bit-identity.
+
+The load-bearing invariants: the ``pools=prefill:N,decode:M`` grammar
+round-trips and composes with the policy string, a published ticket's
+KV survives the donor_pod round trip bit-for-bit, a faulted handoff
+adopts **nothing** (decode-side state untouched, the loss on the
+ledger), and a disaggregated cluster's greedy tokens are bit-identical
+to a colocated Server on a decode-pool-shaped mesh — across GQA, MLA,
+and SSM cache layouts.  Multi-device paths run in subprocesses with a
+forced device count, same pattern as ``test_distributed.py``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.placement import (
+    PoolSplit,
+    extract_pool_split,
+    parse_policy,
+)
+from repro.serve.handoff import HandoffLedger
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(body: str, n: int = 4, timeout: int = 600):
+    script = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={n}"\n'
+        + textwrap.dedent(body)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, (
+        f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    )
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Pool-split grammar
+# ---------------------------------------------------------------------------
+
+class TestPoolSplitGrammar:
+    def test_parse_round_trips(self):
+        s = PoolSplit.parse("prefill:2,decode:2")
+        assert (s.prefill, s.decode, s.total) == (2, 2, 4)
+        assert s.to_str() == "pools=prefill:2,decode:2"
+        assert PoolSplit.parse(s.to_str()) == s
+        # either pool order, idempotent on an already-parsed split
+        assert PoolSplit.parse("decode:2,prefill:2") == s
+        assert PoolSplit.parse(s) is s
+
+    def test_parse_rejects_malformed(self):
+        with pytest.raises(ValueError, match="bad pool fragment"):
+            PoolSplit.parse("prefill:2,decoed:2")
+        with pytest.raises(ValueError, match="both pools"):
+            PoolSplit.parse("prefill:2")
+        with pytest.raises(ValueError, match="duplicate pool"):
+            PoolSplit.parse("prefill:1,prefill:3")
+        with pytest.raises(ValueError, match=">= 1 device"):
+            PoolSplit(prefill=0, decode=4)
+
+    def test_extract_from_policy_string(self):
+        # the directive's value contains a comma, so it must be carved
+        # out of the surrounding role grammar before parse_policy splits
+        split, rest = extract_pool_split(
+            "kv=remote_hbm,pools=prefill:1,decode:3"
+        )
+        assert split == PoolSplit(1, 3)
+        assert rest == "kv=remote_hbm"
+        # directive-only spec leaves no remainder
+        split, rest = extract_pool_split("pools=prefill:2,decode:2")
+        assert split == PoolSplit(2, 2)
+        assert rest is None
+        # directive in the middle: both neighbours survive
+        split, rest = extract_pool_split(
+            "kv=hbm,pools=prefill:2,decode:2,params=host"
+        )
+        assert split == PoolSplit(2, 2)
+        assert rest == "kv=hbm,params=host"
+
+    def test_extract_passes_through_non_directives(self):
+        for spec in (None, "kv=hbm", {"kv_cache": "hbm"}):
+            split, rest = extract_pool_split(spec)
+            assert split is None
+            assert rest is spec or rest == spec
+
+    def test_parse_policy_rejects_unstripped_directive(self):
+        with pytest.raises(ValueError, match="extract_pool_split"):
+            parse_policy("kv=hbm,pools=prefill:1,decode:1")
+
+
+class TestResolveSplit:
+    def test_conflicting_splits_raise(self):
+        from repro.serve.disagg import Cluster, DisaggConfig
+
+        cfg = DisaggConfig(
+            split="prefill:1,decode:3",
+            policy="kv=hbm,pools=prefill:2,decode:2",
+        )
+        with pytest.raises(ValueError, match="conflicting pool splits"):
+            Cluster._resolve_split(None, cfg, 4)
+
+    def test_agreeing_directive_is_deduplicated(self):
+        from repro.serve.disagg import Cluster, DisaggConfig
+
+        cfg = DisaggConfig(
+            split=PoolSplit(2, 2),
+            policy="kv=hbm,pools=prefill:2,decode:2",
+        )
+        split, policy = Cluster._resolve_split(None, cfg, 4)
+        assert split == PoolSplit(2, 2)
+        assert policy == "kv=hbm"
+
+
+# ---------------------------------------------------------------------------
+# Crossing ledger
+# ---------------------------------------------------------------------------
+
+class TestHandoffLedger:
+    def test_crossings_count_completed_round_trips(self):
+        led = HandoffLedger()
+        led.record("publish", 7, 1024, 0.5, 0.1)
+        assert led.crossings(7) == 0          # published, not yet adopted
+        led.record("adopt", 7, 1024, 0.25, 0.1)
+        assert led.crossings(7) == 1
+        assert led.crossings(8) == 0
+        assert led.total_bytes("publish") == 1024
+        assert led.total_bytes("adopt") == 1024
+
+    def test_fault_replay_accounting(self):
+        # the soak's invariant: a fault-recovered rid republishes but
+        # still crosses exactly once
+        led = HandoffLedger()
+        led.record("publish", 3, 512, 0.1, 0.05)
+        led.record("lost", 3, 512, 0.0, 0.05)
+        led.record("publish", 3, 512, 0.1, 0.05)
+        led.record("adopt", 3, 512, 0.1, 0.05)
+        assert led.crossings(3) == 1
+        j = led.to_json()
+        assert (j["published"], j["adopted"], j["lost"]) == (2, 1, 1)
+        assert j["bytes_published"] == 1024
+        assert j["bytes_adopted"] == 512
+
+
+# ---------------------------------------------------------------------------
+# donor_pod realization: ticket round trip under a forced 4-device mesh
+# ---------------------------------------------------------------------------
+
+class TestHandoffRoundTrip:
+    def test_ticket_round_trip_is_bit_identical(self):
+        """publish → adopt → finalize returns the exact bytes that went
+        in, having crossed the donor_pod tier (the published rows are
+        committed to the bridge mesh spanning both pools)."""
+        run_with_devices("""
+        import jax
+        import numpy as np
+
+        from repro.models import get_smoke_bundle
+        from repro.serve.disagg import make_pool_mesh
+        from repro.serve.handoff import Handoff, make_bridge_mesh
+        from repro.serve.sampling import GREEDY
+
+        devs = jax.devices()
+        pre, dec = devs[:2], devs[2:4]
+        bundle = get_smoke_bundle("olmo-1b")
+        handoff = Handoff(bundle, make_bridge_mesh(pre, dec))
+
+        # one slot row per cache leaf, filled with non-trivial bytes
+        cache = bundle.init_cache(batch=4, max_len=32, dtype="float32")
+        leaves, treedef = jax.tree.flatten(cache)
+        key = jax.random.PRNGKey(7)
+        rows = []
+        for i, leaf in enumerate(leaves):
+            row_shape = (leaf.shape[0], 1) + leaf.shape[2:]
+            rows.append(jax.random.normal(
+                jax.random.fold_in(key, i), row_shape
+            ).astype(leaf.dtype))
+        rows = jax.tree.unflatten(treedef, rows)
+        want = [np.asarray(l) for l in jax.tree.leaves(rows)]
+
+        ticket = handoff.publish(11, rows, length=5, last_token=42,
+                                 sampling=GREEDY)
+        # the published rows live on the bridge mesh: their device set
+        # spans BOTH pools, so the bytes physically left the prefill
+        # pool (the donor_pod crossing)
+        for leaf in jax.tree.leaves(ticket.rows):
+            held = set(leaf.sharding.device_set)
+            assert held & set(pre) and held & set(dec), held
+        assert ticket.nbytes == sum(w.nbytes for w in want)
+        assert ticket.publish_s > 0 and ticket.bound_s > 0
+
+        handoff.adopt(ticket, make_pool_mesh(dec))
+        assert handoff.staged == 1
+        spilled = handoff.finalize(11)
+        assert handoff.staged == 0
+        assert (spilled.rid, spilled.length, spilled.last_token) \\
+            == (11, 5, 42)
+
+        got = [np.asarray(l) for l in jax.tree.leaves(spilled.rows)]
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        # adopted rows are pinned to the decode pool alone
+        for leaf in jax.tree.leaves(spilled.rows):
+            assert set(leaf.sharding.device_set) <= set(dec)
+
+        led = handoff.ledger
+        assert led.crossings(11) == 1
+        assert led.total_bytes("publish") == ticket.nbytes
+        print("round trip OK:", ticket.nbytes, "bytes")
+        """)
+
+    def test_partial_handoff_adopts_nothing(self):
+        """Both handoff fault kinds leave the decode side untouched: a
+        lost ticket fails before any transfer, a corrupted transfer
+        fails checksum verification at finalize.  Neither counts as a
+        crossing; a clean retry afterwards does."""
+        run_with_devices("""
+        import jax
+        import numpy as np
+        import pytest
+
+        from repro.core.faults import (
+            FaultEvent, FaultKind, FaultPlan,
+            SpillCorruptionError, TicketLossError,
+        )
+        from repro.models import get_smoke_bundle
+        from repro.serve.disagg import make_pool_mesh
+        from repro.serve.handoff import Handoff, make_bridge_mesh
+        from repro.serve.sampling import GREEDY
+
+        devs = jax.devices()
+        pre, dec = devs[:2], devs[2:4]
+        bundle = get_smoke_bundle("olmo-1b")
+        plan = FaultPlan([
+            FaultEvent(site="handoff", at=0, kind=FaultKind.TICKET_LOSS),
+            FaultEvent(site="handoff", at=1,
+                       kind=FaultKind.SPILL_CORRUPT),
+        ])
+        handoff = Handoff(bundle, make_bridge_mesh(pre, dec),
+                          faults=plan)
+        decode_mesh = make_pool_mesh(dec)
+
+        cache = bundle.init_cache(batch=2, max_len=16, dtype="float32")
+        rows = jax.tree.map(
+            lambda l: jax.numpy.ones(
+                (l.shape[0], 1) + l.shape[2:], l.dtype
+            ),
+            cache,
+        )
+
+        # fault 1: the ticket vanishes on the DCN path before any
+        # transfer — nothing staged, nothing adopted, loss on the ledger
+        t0 = handoff.publish(0, rows, length=3, last_token=9,
+                             sampling=GREEDY)
+        with pytest.raises(TicketLossError):
+            handoff.adopt(t0, decode_mesh)
+        assert handoff.staged == 0
+        assert handoff.ledger.crossings(0) == 0
+        assert handoff.ledger.lost.get(0) == 1
+
+        # fault 2: bytes perturbed in flight — the adopt stages, but
+        # finalize's publish-time checksum catches it and drops the rows
+        t1 = handoff.publish(1, rows, length=3, last_token=9,
+                             sampling=GREEDY)
+        handoff.adopt(t1, decode_mesh)
+        assert handoff.staged == 1
+        with pytest.raises(SpillCorruptionError):
+            handoff.finalize(1)
+        assert handoff.staged == 0
+        assert handoff.ledger.crossings(1) == 0
+        assert handoff.ledger.lost.get(1) == 1
+
+        # the plan is exhausted: a replayed publish of the same rid now
+        # completes, and the rid still crosses exactly once
+        t2 = handoff.publish(1, rows, length=3, last_token=9,
+                             sampling=GREEDY)
+        handoff.adopt(t2, decode_mesh)
+        spilled = handoff.finalize(1)
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(spilled.rows)[0]),
+            np.asarray(jax.tree.leaves(rows)[0]),
+        )
+        assert handoff.ledger.crossings(1) == 1
+        assert len(plan.fired) == 2
+        print("faulted handoffs adopted nothing")
+        """)
+
+    def test_staging_bound_is_enforced(self):
+        """max_staged bounds in-flight adopts (the DonorStream depth
+        discipline applied across tickets)."""
+        run_with_devices("""
+        import jax
+
+        from repro.models import get_smoke_bundle
+        from repro.serve.disagg import make_pool_mesh
+        from repro.serve.handoff import Handoff, make_bridge_mesh
+        from repro.serve.sampling import GREEDY
+
+        devs = jax.devices()
+        bundle = get_smoke_bundle("olmo-1b")
+        handoff = Handoff(bundle, make_bridge_mesh(devs[:2], devs[2:4]),
+                          max_staged=2)
+        decode_mesh = make_pool_mesh(devs[2:4])
+        cache = bundle.init_cache(batch=2, max_len=16, dtype="float32")
+        rows = jax.tree.map(
+            lambda l: jax.numpy.zeros(
+                (l.shape[0], 1) + l.shape[2:], l.dtype
+            ),
+            cache,
+        )
+        for rid in range(2):
+            handoff.adopt(
+                handoff.publish(rid, rows, length=1, last_token=1,
+                                sampling=GREEDY),
+                decode_mesh,
+            )
+        t = handoff.publish(2, rows, length=1, last_token=1,
+                            sampling=GREEDY)
+        try:
+            handoff.adopt(t, decode_mesh)
+        except RuntimeError as e:
+            assert "staging full" in str(e)
+        else:
+            raise AssertionError("third adopt should have been refused")
+        handoff.finalize(0)
+        handoff.adopt(t, decode_mesh)       # slot freed -> admitted
+        handoff.finalize(1)
+        handoff.finalize(2)
+        print("staging bound enforced")
+        """)
+
+
+# ---------------------------------------------------------------------------
+# disagg vs colocated: greedy token equality across cache layouts
+# ---------------------------------------------------------------------------
+
+#: one representative per KV layout the handoff must round-trip: grouped
+#:-query attention, multi-head latent attention, and a state-space model
+#: whose "KV" is a recurrent state + conv window, not a token axis
+SWEEP_ARCHS = ["yi-6b", "deepseek-v2-236b", "mamba2-780m"]
+
+_EQUALITY_BODY = """
+import jax
+import numpy as np
+
+from repro.models import get_smoke_bundle
+from repro.serve import Cluster, DisaggConfig, Server, ServeConfig
+from repro.serve.disagg import make_pool_mesh
+
+bundle = get_smoke_bundle({arch!r})
+params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+rng = np.random.default_rng(0)
+prompts = [
+    rng.integers(1, bundle.cfg.vocab, 4 + (i % 5)).astype(np.int32)
+    for i in range(6)
+]
+
+cluster = Cluster(
+    bundle,
+    DisaggConfig(batch_slots=4, max_len=32, prefill_chunk=8,
+                 split="prefill:2,decode:2"),
+    params,
+)
+reqs = [cluster.submit(p, max_new_tokens=5) for p in prompts]
+cluster.run_until_done(400)
+disagg = {{r.rid: list(r.out_tokens) for r in reqs}}
+
+# colocated baseline on a mesh shaped like the decode pool: same device
+# count -> same compiled steps -> greedy tokens must match exactly
+ref = Server(
+    bundle,
+    ServeConfig(batch_slots=4, max_len=32, prefill_chunk=8),
+    params, mesh=make_pool_mesh(jax.devices()[2:4]),
+)
+ref_reqs = [ref.submit(p, max_new_tokens=5) for p in prompts]
+ref.run_until_done(200)
+colocated = {{r.rid: list(r.out_tokens) for r in ref_reqs}}
+
+assert disagg == colocated, (disagg, colocated)
+assert all(len(t) == 5 for t in disagg.values())
+for r in reqs:
+    assert cluster.ledger.crossings(r.rid) == 1, r.rid
+led = cluster.stats()["handoff"]
+assert led["published"] == 6 and led["adopted"] == 6 and led["lost"] == 0
+print({arch!r}, "disagg == colocated:", disagg)
+"""
+
+
+class TestDisaggEquality:
+    @pytest.mark.parametrize("arch", SWEEP_ARCHS)
+    def test_greedy_tokens_match_colocated(self, arch):
+        run_with_devices(_EQUALITY_BODY.format(arch=arch))
+
+    def test_fault_recovery_preserves_tokens(self):
+        """A lost ticket and a corrupted transfer both replay as fresh
+        through the prefill pool — and the final greedy tokens are still
+        bit-identical to the colocated baseline."""
+        run_with_devices("""
+        import jax
+        import numpy as np
+
+        from repro.core.faults import FaultEvent, FaultKind, FaultPlan
+        from repro.models import get_smoke_bundle
+        from repro.serve import Cluster, DisaggConfig, Server, ServeConfig
+        from repro.serve.disagg import make_pool_mesh
+
+        bundle = get_smoke_bundle("olmo-1b")
+        params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+        rng = np.random.default_rng(0)
+        prompts = [
+            rng.integers(1, bundle.cfg.vocab, 4 + (i % 5)).astype(np.int32)
+            for i in range(6)
+        ]
+
+        plan = FaultPlan([
+            FaultEvent(site="handoff", at=1,
+                       kind=FaultKind.TICKET_LOSS),
+            FaultEvent(site="handoff", at=3,
+                       kind=FaultKind.SPILL_CORRUPT),
+        ])
+        cluster = Cluster(
+            bundle,
+            DisaggConfig(batch_slots=4, max_len=32, prefill_chunk=8,
+                         split="prefill:2,decode:2", faults=plan),
+            params,
+        )
+        reqs = [cluster.submit(p, max_new_tokens=5) for p in prompts]
+        cluster.run_until_done(400)
+
+        ref = Server(
+            bundle,
+            ServeConfig(batch_slots=4, max_len=32, prefill_chunk=8),
+            params, mesh=make_pool_mesh(jax.devices()[2:4]),
+        )
+        ref_reqs = [ref.submit(p, max_new_tokens=5) for p in prompts]
+        ref.run_until_done(200)
+
+        assert {r.rid: list(r.out_tokens) for r in reqs} \\
+            == {r.rid: list(r.out_tokens) for r in ref_reqs}
+        st = cluster.stats()
+        led = st["handoff"]
+        assert len(plan.fired) == 2
+        assert st["handoff_replays"] == 2
+        assert led["lost"] == 2
+        assert led["published"] == 8      # 6 + 2 fault republishes
+        assert led["adopted"] == 6        # every rid still adopts once
+        for r in reqs:
+            assert cluster.ledger.crossings(r.rid) == 1
+        print("fault recovery token-identical")
+        """)

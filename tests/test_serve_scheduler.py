@@ -200,14 +200,46 @@ class TestStreaming:
             assert r.submitted_s <= r.first_token_s <= r.finished_s
 
 
+class _NoChunkBundle:
+    """Proxy bundle whose ``prefill_at`` is genuinely unimplemented —
+    the only kind of bundle left on the decode-replay fallback now that
+    encoder-decoder bundles chunk-prefill."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def prefill_at(self, *args, **kwargs):
+        raise NotImplementedError
+
+
 class TestReplayFallback:
-    def test_encdec_admission_warns_once_and_counts(self, bundle, params,
-                                                    caplog):
-        """The O(B*L) decode-replay prefill fallback (encoder-decoder
-        bundles) is visible: one warning ever, a counter per admission."""
+    def test_encdec_bundle_chunk_prefills(self, caplog):
+        """Encoder-decoder bundles chunk-prefill like everything else
+        (their cross KV is read-only during generation) — no replay
+        fallback, no warning."""
         enc = get_smoke_bundle("seamless-m4t-medium")
         eparams = enc.init_params(jax.random.PRNGKey(0), "float32")
         srv = Server(enc, ServeConfig(batch_slots=2, max_len=32), eparams)
+        assert srv.engine.supports_chunked_prefill
+        with caplog.at_level("WARNING", logger="repro.serve.engine"):
+            reqs = [_req(i, n=3, extra=i) for i in range(3)]
+            srv.add_requests(reqs)
+            srv.run_until_done(300)
+        assert all(r.done for r in reqs)
+        assert srv.stats()["decode_replay_prefills"] == 0
+        assert not [r for r in caplog.records
+                    if "decode-step replay" in r.getMessage()]
+
+    def test_unchunkable_admission_warns_once_and_counts(self, bundle,
+                                                         params, caplog):
+        """The O(B*L) decode-replay prefill fallback (bundles without
+        ``prefill_at``) is visible: one warning ever, a counter per
+        admission."""
+        srv = Server(_NoChunkBundle(bundle),
+                     ServeConfig(batch_slots=2, max_len=32), params)
         assert not srv.engine.supports_chunked_prefill
         with caplog.at_level("WARNING", logger="repro.serve.engine"):
             reqs = [_req(i, n=3, extra=i) for i in range(3)]

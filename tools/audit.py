@@ -199,6 +199,27 @@ def run_selftest() -> dict:
         lint.get_rule("injected-fault-raise").allow
         == frozenset({"src/repro/core/faults.py"})
     )
+    # 5. the cross-pool-device-put gate: fires in serve modules, stays
+    #    quiet at the sanctioned crossing site (handoff.py owns the
+    #    bridge mesh), and does not reach outside src/repro/serve/
+    put_src = "rows = jax.device_put(rows, sharding)\n"
+    results["lint:cross-pool-device-put"] = "cross-pool-device-put" in {
+        v.rule
+        for v in lint.lint_source(put_src, "src/repro/serve/disagg.py")
+    }
+    results["lint:cross-pool-allow-in-handoff"] = (
+        "cross-pool-device-put"
+        not in {
+            v.rule
+            for v in lint.lint_source(put_src, "src/repro/serve/handoff.py")
+        }
+    )
+    results["lint:cross-pool-scoped-to-serve"] = (
+        "cross-pool-device-put"
+        not in {
+            v.rule for v in lint.lint_source(put_src, "src/repro/api.py")
+        }
+    )
 
     kv_must_donate = ExpectedMovement(
         roles=(RoleExpectation("kv_cache", "caches", donate=True),),

@@ -1,0 +1,238 @@
+#!/usr/bin/env python
+"""CI soak: the disaggregated prefill/decode cluster end to end.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python tools/serve_disagg.py [--requests 64]
+
+What it asserts (the disaggregation acceptance criteria, as a tool the
+4-device CI leg runs on every push):
+
+1. ``--requests`` (>= 64) queued-arrival requests with mixed sampling
+   params drain through a 2-prefill + 2-decode pool split joined by the
+   DCN handoff (``repro.serve.disagg``).
+2. **Every admitted request's KV crossed the donor_pod tier exactly
+   once** — the handoff ledger records one completed publish→adopt round
+   trip per rid (fault-recovered rids republish, but still adopt once).
+3. **>= 1 injected handoff fault recovered**: a lost ticket and a
+   corrupted transfer both replay as fresh through the prefill pool and
+   the requests still finish.
+4. **No token divergence for the greedy subset** vs a colocated baseline
+   on a mesh shaped like the decode pool — disaggregation is invisible
+   in the output.
+5. Handoff bytes and publish/adopt latency percentiles, plus measured
+   handoff bandwidth next to the calibrated ``dcn`` ``copy_bound``
+   price, are merged into ``BENCH_disagg.json`` so CI records the
+   crossing cost per commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+
+import jax
+import numpy as np
+
+from repro.core.faults import FaultEvent, FaultKind, FaultPlan
+from repro.models import get_smoke_bundle
+from repro.serve import Cluster, DisaggConfig, Request, ServeConfig, Server
+from repro.serve.disagg import make_pool_mesh
+
+from serve_soak import make_request
+
+log = logging.getLogger("repro.tools.serve_disagg")
+
+
+def percentiles(xs) -> dict:
+    arr = np.asarray(xs, float)
+    if arr.size == 0:
+        return {"p50_s": 0.0, "p99_s": 0.0}
+    return {
+        "p50_s": float(np.percentile(arr, 50)),
+        "p99_s": float(np.percentile(arr, 99)),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--prefill-pool", type=int, default=2)
+    ap.add_argument("--decode-pool", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_disagg.json")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    ndev = jax.device_count()
+    need = args.prefill_pool + args.decode_pool
+    if ndev < need:
+        log.error(
+            "disagg soak needs %d devices (%d prefill + %d decode), "
+            "have %d — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=%d",
+            need, args.prefill_pool, args.decode_pool, ndev, need,
+        )
+        return 1
+
+    bundle = get_smoke_bundle(args.arch)
+    params = bundle.init_params(jax.random.PRNGKey(0), "float32")
+    rng = np.random.default_rng(0)
+    reqs = [make_request(i, bundle.cfg.vocab, rng)
+            for i in range(args.requests)]
+
+    # two handoff-site faults mid-stream: a ticket lost on the DCN path
+    # and a transfer corrupted in flight — both must recover by
+    # replaying through the prefill pool
+    plan = FaultPlan([
+        FaultEvent(site="handoff", at=5, kind=FaultKind.TICKET_LOSS),
+        FaultEvent(site="handoff", at=11, kind=FaultKind.SPILL_CORRUPT),
+    ])
+    cluster = Cluster(
+        bundle,
+        DisaggConfig(
+            batch_slots=args.slots,
+            max_len=args.max_len,
+            prefill_chunk=8,
+            split=f"prefill:{args.prefill_pool},decode:{args.decode_pool}",
+            max_queue=args.requests,
+            faults=plan,
+        ),
+        params,
+    )
+    log.info(
+        "disagg soak: %d requests -> %s on %d devices (decode policy %s)",
+        args.requests, cluster.split.to_str(), ndev,
+        cluster.decode.policy.name,
+    )
+
+    # queued arrivals: one new request per cluster tick
+    pending = list(reqs)
+    tick = 0
+    while pending or cluster.has_work():
+        if pending:
+            cluster.add_request(pending.pop(0))
+        cluster.step()
+        tick += 1
+        if tick > 100_000:
+            log.error("disagg soak did not drain after %d ticks", tick)
+            return 1
+    if not all(r.done for r in reqs):
+        log.error("undrained requests: %s",
+                  [r.rid for r in reqs if not r.done])
+        return 1
+
+    stats = cluster.stats()
+    led = cluster.ledger
+
+    # every admitted rid crossed donor_pod exactly once
+    bad = [r.rid for r in reqs if led.crossings(r.rid) != 1]
+    if bad:
+        log.error("rids without exactly one donor_pod crossing: %s "
+                  "(adopts=%s)", bad, led.adopts)
+        return 1
+    # both injected handoff faults fired and recovered
+    if len(plan.fired) < 2 or stats["handoff_replays"] < 2:
+        log.error(
+            "handoff faults not exercised: fired=%d replays=%d",
+            len(plan.fired), stats["handoff_replays"],
+        )
+        return 1
+    if stats["handoff"]["lost"] < 2:
+        log.error("ledger did not record the lost crossings: %s",
+                  stats["handoff"])
+        return 1
+
+    # greedy subset: token equality vs a colocated baseline on a mesh
+    # shaped like the decode pool (same device count -> same compiled
+    # steps -> bit-identical greedy tokens)
+    ref_mesh = make_pool_mesh(
+        jax.devices()[args.prefill_pool:args.prefill_pool
+                      + args.decode_pool]
+    )
+    ref_server = Server(
+        bundle,
+        ServeConfig(batch_slots=args.slots, max_len=args.max_len,
+                    prefill_chunk=8),
+        params, mesh=ref_mesh,
+    )
+    greedy = [r for r in reqs if r.sampling.temperature == 0.0]
+    refs = {
+        r.rid: Request(rid=r.rid, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+        for r in greedy
+    }
+    ref_server.add_requests(refs.values())
+    ref_server.run_until_done(100_000)
+    diverged = [
+        r.rid for r in greedy if r.out_tokens != refs[r.rid].out_tokens
+    ]
+    if diverged:
+        log.error("greedy divergence vs colocated baseline for rids %s",
+                  diverged)
+        return 1
+
+    # measured crossing cost vs the calibrated dcn copy_bound price
+    publishes = [r for r in led.records if r["event"] == "publish"]
+    adopts = [r for r in led.records if r["event"] == "adopt"]
+    pub_s = sum(r["seconds"] for r in publishes)
+    pub_bytes = led.total_bytes("publish")
+    bound_s = sum(r["bound_s"] for r in publishes)
+    lat = np.asarray([r.finished_s - r.submitted_s for r in reqs])
+    ttft = np.asarray([r.first_token_s - r.submitted_s for r in reqs])
+    row = {
+        "arch": bundle.cfg.name,
+        "devices": ndev,
+        "requests": args.requests,
+        "batch_slots": args.slots,
+        "split": cluster.split.to_str(),
+        "published": stats["handoff"]["published"],
+        "adopted": stats["handoff"]["adopted"],
+        "lost": stats["handoff"]["lost"],
+        "handoff_replays": stats["handoff_replays"],
+        "bytes_published": pub_bytes,
+        "bytes_adopted": led.total_bytes("adopt"),
+        "publish": percentiles([r["seconds"] for r in publishes]),
+        "adopt": percentiles([r["seconds"] for r in adopts]),
+        "measured_publish_gbps": (
+            pub_bytes / pub_s / 1e9 if pub_s > 0 else 0.0
+        ),
+        "dcn_bound_gbps": (
+            pub_bytes / bound_s / 1e9 if bound_s > 0 else 0.0
+        ),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        **cluster.throughput(),
+    }
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {}
+    results["disagg"] = row
+    results["faults"] = plan.to_json()
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+    log.info(
+        "OK: %d requests drained through %s; every rid crossed "
+        "donor_pod exactly once (%d published / %d adopted / %d lost, "
+        "%d fault replays); greedy subset (%d requests) token-identical "
+        "to the colocated baseline; publish p50 %.1fms (measured "
+        "%.3g GB/s vs dcn bound %.3g GB/s) -> %s",
+        args.requests, cluster.split.to_str(),
+        row["published"], row["adopted"], row["lost"],
+        row["handoff_replays"], len(greedy),
+        row["publish"]["p50_s"] * 1e3, row["measured_publish_gbps"],
+        row["dcn_bound_gbps"], args.out,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
